@@ -1,0 +1,51 @@
+"""Shared benchmark utilities: corpora, metrics, timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import flat_search
+from repro.data import synthetic
+
+
+def make_task(n: int, dim: int = 64, n_queries: int = 200, seed: int = 0):
+    """Corpus + queries + (exact top-100, relevant seed ids)."""
+    corpus = synthetic.retrieval_corpus(seed, n, dim)
+    queries, seed_ids = synthetic.retrieval_queries(seed + 1, corpus, n_queries)
+    gt = flat_search(corpus, queries, k=100)
+    return corpus, queries, seed_ids, gt
+
+
+def mrr_at_10(pred_ids: jnp.ndarray, relevant: jnp.ndarray) -> float:
+    """Mean reciprocal rank of the known-relevant id within the top 10."""
+    pred = np.asarray(pred_ids)[:, :10]
+    rel = np.asarray(relevant)
+    rr = []
+    for row, r in zip(pred, rel):
+        pos = np.nonzero(row == r)[0]
+        rr.append(1.0 / (pos[0] + 1) if len(pos) else 0.0)
+    return float(np.mean(rr))
+
+
+def recall_vs_flat(pred_ids, gt_ids, k: int = 10) -> float:
+    from repro.core.utils import recall_at_k
+
+    return float(recall_at_k(jnp.asarray(pred_ids)[:, :k], jnp.asarray(gt_ids)[:, :k]))
+
+
+def time_search(fn, queries, *, batch: int = 64, repeats: int = 3) -> float:
+    """Average per-query time (AQT, seconds) of a jitted search callable."""
+    q = queries[:batch]
+    jax.block_until_ready(fn(q))  # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(q)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / (repeats * batch)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,54 @@
+"""Paper Fig. 4: AQT growth with corpus size, LIDER vs baselines.
+
+The paper's claim: LIDER's AQT grows slowest with N (Sec. 6 complexity —
+near-log until N ~ 1e7). We sweep CPU-feasible sizes and report AQT per
+method; the derived field carries the growth ratio AQT(n_max)/AQT(n_min).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import lider
+from repro.core.baselines import build_ivfpq, build_sklsh, flat_search, ivfpq_search, sklsh_search
+from .common import csv_line, make_task, time_search
+
+
+def run(sizes=(10_000, 30_000, 60_000), k: int = 100, verbose: bool = True):
+    lines = []
+    aqts: dict[str, list[float]] = {}
+    for n in sizes:
+        corpus, queries, _, _ = make_task(n)
+        rng = jax.random.PRNGKey(0)
+        c = max(16, n // 1000)
+        idx = lider.build_lider(
+            rng, corpus,
+            lider.LiderConfig(n_clusters=c, n_probe=20, n_arrays=10, n_leaves=5,
+                              kmeans_iters=10),
+        )
+        ivf = build_ivfpq(rng, corpus, n_subspaces=8, bits=8, kmeans_iters=8)
+        sk = build_sklsh(rng, corpus, n_arrays=24)
+        methods = {
+            "flat": lambda q: flat_search(corpus, q, k=k),
+            "lider": lambda q: lider.search_lider(idx, q, k=k, n_probe=20, r0=4),
+            "ivfpq": lambda q: ivfpq_search(ivf, q, k=k, n_probe=20),
+            "sklsh": lambda q: sklsh_search(sk, corpus, q, k=k, n_candidates=400),
+        }
+        for name, fn in methods.items():
+            aqt = time_search(fn, queries)
+            aqts.setdefault(name, []).append(aqt)
+            lines.append(csv_line(f"fig4/{name}/n{n}", aqt * 1e6, f"n={n}"))
+            if verbose:
+                print(lines[-1])
+    for name, series in aqts.items():
+        growth = series[-1] / series[0]
+        lines.append(
+            csv_line(f"fig4/{name}/growth", series[-1] * 1e6,
+                     f"aqt_ratio_{sizes[-1]}v{sizes[0]}={growth:.2f}")
+        )
+        if verbose:
+            print(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig. 5/6: speed-quality trade-off curves (AQT vs MRR@10) obtained by
+sweeping each method's knob — LIDER (n_probe), IVFPQ (n_probe), MP-LSH
+(n_probes), SK-LSH (n_candidates)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import lider
+from repro.core.baselines import (
+    build_ivfpq, build_mplsh, build_sklsh, ivfpq_search, mplsh_search, sklsh_search,
+)
+from .common import csv_line, make_task, mrr_at_10, time_search
+
+
+def run(n: int = 30_000, k: int = 100, verbose: bool = True):
+    corpus, queries, rel, _ = make_task(n)
+    rng = jax.random.PRNGKey(0)
+    lines = []
+
+    idx = lider.build_lider(
+        rng, corpus,
+        lider.LiderConfig(n_clusters=max(16, n // 1000), n_probe=40, n_arrays=10,
+                          n_leaves=5, kmeans_iters=10),
+    )
+    for p in (2, 5, 10, 20, 40):
+        fn = lambda q, p=p: lider.search_lider(idx, q, k=k, n_probe=p, r0=4)
+        lines.append(csv_line(
+            f"fig5/lider/probe{p}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+
+    ivf = build_ivfpq(rng, corpus, n_subspaces=8, bits=8, kmeans_iters=8)
+    for p in (2, 8, 32):
+        fn = lambda q, p=p: ivfpq_search(ivf, q, k=k, n_probe=p)
+        lines.append(csv_line(
+            f"fig5/ivfpq/probe{p}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+
+    mp = build_mplsh(rng, corpus, n_tables=16)
+    for p in (1, 4, 16):
+        fn = lambda q, p=p: mplsh_search(mp, corpus, q, k=k, n_probes=p)
+        lines.append(csv_line(
+            f"fig5/mplsh/probe{p}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+
+    sk = build_sklsh(rng, corpus, n_arrays=16)
+    for t in (100, 400, 1600):
+        fn = lambda q, t=t: sklsh_search(sk, corpus, q, k=k, n_candidates=t)
+        lines.append(csv_line(
+            f"fig5/sklsh/cand{t}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Figs. 7/8: effect of the clustering knobs — retrieved centroids c0
+(quality and time rise with c0, with diminishing returns) and total clusters
+c (AQT falls with c; quality peaks at a moderate c)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import lider
+from .common import csv_line, make_task, mrr_at_10, time_search
+
+
+def run(n: int = 30_000, k: int = 100, verbose: bool = True):
+    corpus, queries, rel, _ = make_task(n)
+    rng = jax.random.PRNGKey(0)
+    lines = []
+
+    # Fig 7: fix c, sweep c0 (n_probe).
+    c = max(16, n // 1000)
+    idx = lider.build_lider(
+        rng, corpus,
+        lider.LiderConfig(n_clusters=c, n_probe=40, n_arrays=10, n_leaves=5,
+                          kmeans_iters=10),
+    )
+    for c0 in (1, 2, 5, 10, 20):
+        fn = lambda q, c0=c0: lider.search_lider(idx, q, k=k, n_probe=c0, r0=4)
+        lines.append(csv_line(
+            f"fig7/c0_{c0}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+
+    # Fig 8: fix c0, sweep c.
+    for c in (8, 16, 32, 64, 128):
+        idx = lider.build_lider(
+            rng, corpus,
+            lider.LiderConfig(n_clusters=c, n_probe=10, n_arrays=6, n_leaves=4,
+                              kmeans_iters=8),
+        )
+        fn = lambda q: lider.search_lider(idx, q, k=k, n_probe=10, r0=4)
+        lines.append(csv_line(
+            f"fig8/c_{c}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--fast`` (default when run under
+the repo check) trims corpus sizes so the whole suite stays CPU-friendly;
+``--full`` uses the larger sweeps. The multi-pod roofline numbers come from
+``benchmarks.roofline`` (reads the dry-run artifact, no execution).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated subset: table2,fig4,fig5,table3,table4,fig78,table5",
+    )
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (
+        fig4_aqt,
+        fig5_tradeoff,
+        fig7_fig8_clustering,
+        table2_quality,
+        table3_h_sweep,
+        table4_rescaling,
+        table5_memory_build,
+    )
+
+    print("name,us_per_call,derived")
+    lines: list[str] = []
+
+    def want(key):
+        return only is None or key in only
+
+    if want("table2"):
+        lines += table2_quality.run(
+            sizes=(20_000, 50_000) if args.full else (8_000, 20_000), verbose=True
+        )
+    if want("fig4"):
+        lines += fig4_aqt.run(
+            sizes=(10_000, 30_000, 60_000) if args.full else (5_000, 10_000, 20_000),
+            verbose=True,
+        )
+    if want("fig5"):
+        lines += fig5_tradeoff.run(n=30_000 if args.full else 10_000, verbose=True)
+    if want("table3"):
+        lines += table3_h_sweep.run(
+            n=30_000 if args.full else 10_000,
+            hs=(4, 8, 16, 32) if args.full else (4, 8, 16),
+            verbose=True,
+        )
+    if want("table4"):
+        # Table 4 needs the n/key-magnitude regime where naive fp32 fits
+        # actually lose precision — not shrunk in fast mode.
+        lines += table4_rescaling.run(n=30_000, verbose=True)
+    if want("fig78"):
+        lines += fig7_fig8_clustering.run(n=30_000 if args.full else 10_000, verbose=True)
+    if want("table5"):
+        lines += table5_memory_build.run(n=50_000 if args.full else 15_000, verbose=True)
+
+    print(f"# {len(lines)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Table 2: end-to-end retrieval quality (MRR@10 + recall@10 vs Flat)
+for LIDER and every baseline, across corpus scales.
+
+Real MS MARCO / Wiki-21M embeddings are unavailable offline; corpora are
+clustered synthetic embeddings at CPU-feasible scales (the paper's relative
+ordering claims are what we validate — LIDER above IVFPQ/SK-LSH quality,
+near OPQ, below Flat).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import lider
+from repro.core.baselines import (
+    build_ivfpq, build_mplsh, build_pq, build_sklsh, flat_search,
+    ivfpq_search, mplsh_search, pq_search, sklsh_search,
+)
+from .common import csv_line, make_task, mrr_at_10, recall_vs_flat, time_search
+
+
+def run(sizes=(20_000, 50_000), k: int = 100, verbose: bool = True) -> list[str]:
+    lines = []
+    for n in sizes:
+        corpus, queries, rel, gt = make_task(n)
+        rng = jax.random.PRNGKey(0)
+        c = max(16, n // 1000)
+
+        idx = lider.build_lider(
+            rng, corpus, lider.LiderConfig(n_clusters=c, n_probe=20, n_arrays=10,
+                                           n_leaves=5, kmeans_iters=10)
+        )
+        methods = {
+            "flat": lambda q: flat_search(corpus, q, k=k),
+            "lider": lambda q: lider.search_lider(idx, q, k=k, n_probe=20, r0=4),
+        }
+        pq = build_pq(rng, corpus, n_subspaces=8, bits=8, kmeans_iters=8)
+        opq = build_pq(rng, corpus, n_subspaces=8, bits=8, kmeans_iters=8, opq_iters=1)
+        ppq = build_pq(rng, corpus, n_subspaces=8, bits=8, kmeans_iters=8, pca_dim=32)
+        ivf = build_ivfpq(rng, corpus, n_subspaces=8, bits=8, kmeans_iters=8)
+        sk = build_sklsh(rng, corpus, n_arrays=24)
+        mp = build_mplsh(rng, corpus, n_tables=24)
+        methods.update(
+            pq=lambda q: pq_search(pq, q, k=k),
+            opq=lambda q: pq_search(opq, q, k=k),
+            pca_pq=lambda q: pq_search(ppq, q, k=k),
+            ivfpq=lambda q: ivfpq_search(ivf, q, k=k, n_probe=20),
+            sklsh=lambda q: sklsh_search(sk, corpus, q, k=k, n_candidates=400),
+            mplsh=lambda q: mplsh_search(mp, corpus, q, k=k, n_probes=8),
+        )
+        for name, fn in methods.items():
+            out = fn(queries)
+            mrr = mrr_at_10(out.ids, rel)
+            rec = recall_vs_flat(out.ids, gt.ids, k=10)
+            aqt = time_search(fn, queries)
+            lines.append(
+                csv_line(
+                    f"table2/{name}/n{n}", aqt * 1e6,
+                    f"mrr10={mrr:.4f};recall10={rec:.4f}",
+                )
+            )
+            if verbose:
+                print(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Paper Table 3: effect of H (number of ESK-LSH arrays) on a standalone
+core model — quality should rise with H at small time cost (the parallel
+per-array expansion of Sec. 4.3)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import core_model
+from .common import csv_line, make_task, mrr_at_10, time_search
+
+
+def run(n: int = 30_000, k: int = 100, hs=(4, 8, 16, 32), verbose: bool = True):
+    corpus, queries, rel, _ = make_task(n)
+    lines = []
+    for h in hs:
+        cm = core_model.build_core_model(
+            jax.random.PRNGKey(1), corpus, n_arrays=h, n_leaves=10
+        )
+        fn = lambda q: core_model.search_core_model(cm, corpus, q, k=k, r0=4)
+        aqt = time_search(fn, queries)
+        mrr = mrr_at_10(fn(queries).ids, rel)
+        lines.append(csv_line(f"table3/H{h}", aqt * 1e6, f"mrr10={mrr:.4f}"))
+        if verbose:
+            print(lines[-1])
+    return lines
+
+
+if __name__ == "__main__":
+    run()

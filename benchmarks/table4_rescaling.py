@@ -1,0 +1,90 @@
+"""Paper Table 4: the key re-scaling module removes out-of-range (OOR)
+predictions and with them most large-error (LE) predictions.
+
+OOR: unclipped prediction <= 0 or >= L-1 (the paper's truncation criterion).
+LE: |pred - true position| > k (k=100). Reported: N_OOR, N_LE, N_overlap.
+
+Three arms:
+  * ``naive_raw``   — regression on raw decimal keys with textbook
+    (uncentered) fp32 normal equations: the paper's failure mode (sum(x^2)
+    ~ n*2^48 destroys fp32 precision -> wild slopes -> OOR).
+  * ``centered_raw``— our closed-form *centered* fit on raw keys: a repo
+    finding — centering alone removes most of the blow-up the paper
+    attributes to raw keys (but keeps worse conditioning than rescaling).
+  * ``rescaled``    — the paper's module (min-max to [0, L-1]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, rescale, rmi
+from .common import csv_line, make_task
+
+
+def _counts(pred, qpos, length, k=100):
+    oor = (pred <= 0) | (pred >= length - 1)
+    le = jnp.abs(pred - qpos) > k
+    return int(oor.sum()), int(le.sum()), int((oor & le).sum())
+
+
+def _naive_fit_predict(x_train, x_query, length):
+    """Textbook single linear regression, uncentered fp32 sums (the paper's
+    no-rescaling arm)."""
+    n = x_train.shape[0]
+    y = jnp.arange(n, dtype=jnp.float32)
+    sx = jnp.sum(x_train)
+    sy = jnp.sum(y)
+    sxx = jnp.sum(x_train * x_train)
+    sxy = jnp.sum(x_train * y)
+    denom = n * sxx - sx * sx
+    slope = jnp.where(jnp.abs(denom) > 0, (n * sxy - sx * sy) / denom, 0.0)
+    inter = (sy - slope * sx) / n
+    return slope * x_query + inter
+
+
+def run(n: int = 30_000, n_queries: int = 2000, verbose: bool = True):
+    from repro.data import synthetic
+
+    # Coarse-mode corpus (few clusters) + M=30: decimal keys ~1e9 with a
+    # clumped distribution — the regime where uncentered fp32 normal
+    # equations lose precision (the paper's Table-4 key magnitudes).
+    corpus = synthetic.retrieval_corpus(0, n, 64, n_modes=max(8, n // 1000))
+    queries, _ = synthetic.retrieval_queries(1, corpus, n_queries)
+    params = lsh.make_lsh(jax.random.PRNGKey(0), corpus.shape[1], 1, 30)
+    keys = lsh.hash_vectors(params, corpus)[:, 0]
+    skeys, _ = lsh.sort_hashkeys(keys)
+    qkeys = lsh.hash_vectors(params, queries)[:, 0]
+    qpos = lsh.query_position(skeys, qkeys).astype(jnp.float32)
+
+    lines = []
+    raw = skeys.astype(jnp.float32)
+    qraw = qkeys.astype(jnp.float32)
+
+    pred_naive = _naive_fit_predict(raw, qraw, n)
+    o0, l0, ov0 = _counts(pred_naive, qpos, n)
+    lines.append(csv_line("table4/naive_raw", 0.0, f"oor={o0};le={l0};overlap={ov0}"))
+
+    p_raw = rmi.fit_rmi(raw, jnp.ones_like(raw), n_leaves=5)
+    pred_raw = rmi.predict_raw(p_raw, qraw)
+    o1, l1, ov1 = _counts(pred_raw, qpos, n)
+    lines.append(csv_line("table4/centered_raw", 0.0, f"oor={o1};le={l1};overlap={ov1}"))
+
+    resc = rescale.fit_rescale(skeys)
+    scaled = rescale.rescale(resc, skeys)
+    p = rmi.fit_rmi(scaled, jnp.ones_like(scaled), n_leaves=5)
+    pred = rmi.predict_raw(p, rescale.rescale(resc, qkeys))
+    o2, l2, ov2 = _counts(pred, qpos, n)
+    lines.append(csv_line("table4/rescaled", 0.0, f"oor={o2};le={l2};overlap={ov2}"))
+
+    # Paper's claim, scale-adjusted: re-scaling (nearly) eliminates OOR and
+    # the OOR/LE overlap; remaining LE are RMI capacity (W), not range error.
+    assert o2 <= o0 and ov2 <= ov0, "re-scaling must beat the naive raw fit on OOR"
+    if verbose:
+        for ln in lines:
+            print(ln)
+    return lines
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Batched retrieval serving across index backends (deliverable b, serving
+driver — the paper's kind): queued requests, fixed-batch execution, AQT and
+quality per backend.
+
+    PYTHONPATH=src python examples/serve_retrieval.py [--n 30000]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import lider
+from repro.core.baselines import build_ivfpq, build_mplsh, build_sklsh, flat_search
+from repro.core.utils import recall_at_k
+from repro.data import synthetic
+from repro.serving import RetrievalEngine, make_backend
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--k", type=int, default=100)
+    args = ap.parse_args()
+
+    corpus = synthetic.retrieval_corpus(0, args.n, args.dim)
+    queries, _ = synthetic.retrieval_queries(1, corpus, args.queries)
+    gt = flat_search(corpus, queries, k=args.k)
+    rng = jax.random.PRNGKey(0)
+
+    backends = {}
+    idx = lider.build_lider(
+        rng, corpus,
+        lider.LiderConfig(n_clusters=max(16, args.n // 1000), n_probe=20,
+                          n_arrays=10, n_leaves=5, kmeans_iters=10),
+    )
+    backends["lider"] = make_backend("lider", idx, n_probe=20, r0=4)
+    backends["flat"] = make_backend("flat", None, corpus)
+    backends["ivfpq"] = make_backend(
+        "ivfpq", build_ivfpq(rng, corpus, kmeans_iters=8), n_probe=20
+    )
+    backends["sklsh"] = make_backend("sklsh", build_sklsh(rng, corpus), corpus)
+    backends["mplsh"] = make_backend(
+        "mplsh", build_mplsh(rng, corpus), corpus, n_probes=8
+    )
+
+    print(f"{'backend':8s} {'AQT(ms)':>9s} {'recall@10':>10s} {'batches':>8s}")
+    for name, fn in backends.items():
+        engine = RetrievalEngine(fn, batch_size=args.batch_size, k=args.k,
+                                 dim=args.dim)
+        engine.warmup()
+        rids = [engine.submit(v) for v in np.asarray(queries)]
+        engine.drain()
+        got = np.stack([engine.result(r)[0] for r in rids])
+        rec = float(recall_at_k(got[:, :10], gt.ids[:, :10]))
+        print(f"{name:8s} {engine.stats.aqt*1e3:9.3f} {rec:10.4f} "
+              f"{engine.stats.n_batches:8d}")
+
+
+if __name__ == "__main__":
+    main()

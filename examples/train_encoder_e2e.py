@@ -1,0 +1,121 @@
+"""End-to-end driver (deliverable b): train a two-tower *text* encoder with
+in-batch contrastive loss, encode a passage corpus, index it with LIDER, and
+serve queries — the paper's full dense-retrieval deployment.
+
+    PYTHONPATH=src python examples/train_encoder_e2e.py              # CPU demo
+    PYTHONPATH=src python examples/train_encoder_e2e.py --size 100m --steps 300
+
+The 100m preset is the "train a ~100M model for a few hundred steps" driver
+(sized for real hardware; the default preset runs in minutes on CPU).
+Synthetic paired data: (query tokens, passage tokens) share a latent topic,
+so retrieval quality is measurable (MRR of the true passage).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lider
+from repro.core.baselines import flat_search
+from repro.core.utils import l2_normalize, recall_at_k
+from repro.models import transformer as tfm
+from repro.training import optimizer as opt_lib
+
+PRESETS = {
+    # ~1.6M params — CPU demo
+    "tiny": tfm.LMConfig(name="enc-tiny", n_layers=2, d_model=128, n_heads=4,
+                         n_kv_heads=4, d_ff=256, vocab=2048, dtype=jnp.float32),
+    # ~110M params — the "100M for a few hundred steps" driver
+    "100m": tfm.LMConfig(name="enc-100m", n_layers=12, d_model=768, n_heads=12,
+                         n_kv_heads=12, d_ff=3072, vocab=30_522,
+                         dtype=jnp.bfloat16),
+}
+
+
+def encode(params, cfg, tokens):
+    """Mean-pool the decoder hidden states -> unit-norm embeddings."""
+    hidden, _ = tfm.forward(params, cfg, tokens)
+    return l2_normalize(jnp.mean(hidden.astype(jnp.float32), axis=1))
+
+
+def paired_batch(key, *, batch, seq, vocab, n_topics=256):
+    """Query/passage token pairs sharing a latent topic vocabulary slice."""
+    kt, kq, kp = jax.random.split(key, 3)
+    topic = jax.random.randint(kt, (batch, 1), 0, n_topics)
+    span = max(vocab // n_topics, 4)
+    q = topic * span + jax.random.randint(kq, (batch, seq), 0, span)
+    p = topic * span + jax.random.randint(kp, (batch, seq), 0, span)
+    return q % vocab, p % vocab
+
+
+def contrastive_loss(params, cfg, batch):
+    q = encode(params, cfg, batch["q"])
+    p = encode(params, cfg, batch["p"])
+    logits = (q @ p.T) / 0.05
+    labels = jnp.arange(q.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", choices=list(PRESETS), default="tiny")
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--corpus", type=int, default=4096)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+    cfg = PRESETS[args.size]
+
+    params = tfm.init(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"encoder: {cfg.name}, {n_params/1e6:.1f}M params")
+
+    ocfg = opt_lib.OptimizerConfig(peak_lr=1e-3, warmup_steps=args.steps // 10,
+                                   decay_steps=args.steps)
+    state = opt_lib.init_state(params)
+
+    @jax.jit
+    def step(p, s, b):
+        loss, g = jax.value_and_grad(contrastive_loss)(p, cfg, b)
+        p, s, m = opt_lib.apply_updates(p, g, s, ocfg)
+        return p, s, loss
+
+    t0 = time.time()
+    for i in range(args.steps):
+        kq, kp = paired_batch(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                              batch=args.batch, seq=args.seq, vocab=cfg.vocab)
+        params, state, loss = step(params, state, {"q": kq, "p": kp})
+        if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  contrastive loss {float(loss):.4f}")
+    print(f"training: {time.time()-t0:.1f}s")
+
+    # Encode the corpus (passages) and a held-out query set.
+    n_pairs = args.corpus
+    kq, kp = paired_batch(jax.random.PRNGKey(99), batch=n_pairs, seq=args.seq,
+                          vocab=cfg.vocab)
+    enc = jax.jit(lambda t: encode(params, cfg, t))
+    corpus = enc(kp)
+    queries = enc(kq)  # query i's relevant passage is i
+
+    cfg_idx = lider.LiderConfig(n_clusters=max(16, n_pairs // 256), n_probe=10,
+                                n_arrays=8, n_leaves=4, kmeans_iters=10)
+    t0 = time.time()
+    index = lider.build_lider(jax.random.PRNGKey(2), corpus, cfg_idx)
+    print(f"LIDER build over {n_pairs} passages: {time.time()-t0:.1f}s")
+
+    out = lider.search_lider(index, queries, k=args.k, n_probe=10, r0=4)
+    gt = flat_search(corpus, queries, k=args.k)
+    rec = float(recall_at_k(out.ids, gt.ids))
+    import numpy as np
+    ids = np.asarray(out.ids)
+    rr = [1.0 / (list(row).index(i) + 1) if i in row else 0.0
+          for i, row in enumerate(ids)]
+    print(f"serving: recall@{args.k} vs Flat = {rec:.4f}, "
+          f"MRR@{args.k} (true passage) = {float(np.mean(rr)):.4f}")
+
+
+if __name__ == "__main__":
+    main()

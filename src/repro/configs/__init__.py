@@ -1,0 +1,4 @@
+from .base import ArchSpec, ShapeSpec
+from .registry import ARCHS, ASSIGNED, get_arch
+
+__all__ = ["ArchSpec", "ShapeSpec", "ARCHS", "ASSIGNED", "get_arch"]

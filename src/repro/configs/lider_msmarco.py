@@ -1,0 +1,47 @@
+"""lider-msmarco [retrieval] — the paper's own architecture: LIDER over an
+MS-MARCO-scale corpus (8.8M x 768-d embeddings, paper Sec. 7.2.1 settings:
+c=1024 (paper: 1000, rounded to shard evenly), c0=20, H=10, W_c=10, W_i=5)."""
+import dataclasses
+
+from ..core.lider import LiderConfig
+from .base import ArchSpec, ShapeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalArchConfig:
+    lider: LiderConfig
+    corpus_size: int
+    dim: int
+    capacity: int  # padded cluster capacity Lp
+    k: int = 100
+
+
+ARCH = ArchSpec(
+    arch_id="lider-msmarco",
+    family="retrieval",
+    config=RetrievalArchConfig(
+        lider=LiderConfig(
+            n_clusters=1024,
+            n_probe=20,
+            n_arrays=10,
+            n_arrays_centroid=10,
+            key_len=16,
+            key_len_centroid=10,
+            n_leaves=5,
+            n_leaves_centroid=10,
+            r0=4,
+        ),
+        corpus_size=8_847_360,  # 8.8M padded to cluster grid
+        dim=768,
+        capacity=12_288,  # ~1.4x mean cluster size
+        k=100,
+    ),
+    shapes=(
+        ShapeSpec("serve_online", "retrieval_serve", {"batch": 256}),
+        ShapeSpec("serve_bulk", "retrieval_serve", {"batch": 8192}),
+        ShapeSpec("build_kmeans_step", "build", {}),
+    ),
+    notes="The paper's system itself, as dry-runnable cells: distributed "
+    "search (cluster-parallel shard_map) and the sharded Stage-1 build step.",
+    source="LIDER paper Sec. 7",
+)

@@ -1,0 +1,30 @@
+"""ANN baselines the paper evaluates against (Sec. 7.1.2), in JAX.
+
+Flat (exact), PQ, IVF-PQ, original SK-LSH, and a FALCONN-style multi-probe
+LSH. All share the TopK return convention of the core library. OPQ / PCA-PQ
+are PQ with a learned rotation / PCA projection — exposed as options on PQ.
+HNSW graph search is pointer-chasing with data-dependent frontier shapes
+(no TPU-idiomatic equivalent at batch granularity; see DESIGN.md) — its
+quantization half (IVFPQ) is implemented, the graph half is not.
+"""
+from .flat import flat_search
+from .pq import PQParams, build_pq, pq_search
+from .ivfpq import IVFPQParams, build_ivfpq, ivfpq_search
+from .sklsh import SKLSHParams, build_sklsh, sklsh_search
+from .mplsh import MPLSHParams, build_mplsh, mplsh_search
+
+__all__ = [
+    "flat_search",
+    "PQParams",
+    "build_pq",
+    "pq_search",
+    "IVFPQParams",
+    "build_ivfpq",
+    "ivfpq_search",
+    "SKLSHParams",
+    "build_sklsh",
+    "sklsh_search",
+    "MPLSHParams",
+    "build_mplsh",
+    "mplsh_search",
+]

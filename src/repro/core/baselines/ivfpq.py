@@ -1,0 +1,97 @@
+"""IVF-PQ (IVFADC, Jégou et al. 2011) — paper baseline 5, the fastest one.
+
+Coarse k-means into C inverted lists + PQ on the residuals. Lists are stored
+capacity-padded like LIDER's clusters so a probed search is pure gather.
+Score(x) = <q, centroid(x)> + ADC(<q, residual codes>).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import clustering
+from ..core_model import TopK
+from ..types import pytree_dataclass
+from ..utils import NEG_INF, dedup_topk
+from .pq import PQParams, _encode, _train_codebooks, adc_lut
+
+
+@pytree_dataclass(meta_fields=("n_lists", "n_subspaces", "n_codes"))
+class IVFPQParams:
+    centroids: jnp.ndarray  # (C, d)
+    list_gids: jnp.ndarray  # (C, Lp) int32, -1 pad
+    list_codes: jnp.ndarray  # (C, Lp, m) int32
+    codebooks: jnp.ndarray  # (m, n_codes, ds)
+    n_lists: int
+    n_subspaces: int
+    n_codes: int
+
+
+def build_ivfpq(
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    *,
+    n_lists: int | None = None,
+    n_subspaces: int = 8,
+    bits: int = 8,
+    kmeans_iters: int = 15,
+    pad_multiple: int = 8,
+) -> IVFPQParams:
+    n, d = embs.shape
+    c = n_lists or max(4, int(math.sqrt(n)))  # paper: C = sqrt(N)
+    rng_c, rng_pq = jax.random.split(rng)
+    km = clustering.kmeans(rng_c, embs, c, iters=kmeans_iters)
+    residuals = embs - km.centroids[km.assignment]
+    codebooks = _train_codebooks(rng_pq, residuals, n_subspaces, 2**bits, kmeans_iters)
+    codes = _encode(codebooks, residuals)  # (N, m)
+
+    sizes = jnp.bincount(km.assignment, length=c)
+    cap = int(jax.device_get(jnp.max(sizes)))
+    cap = max(pad_multiple, math.ceil(cap / pad_multiple) * pad_multiple)
+    gids, _ = clustering.group_by_cluster(km.assignment, c, cap)
+    safe = jnp.maximum(gids, 0)
+    list_codes = codes[safe] * (gids >= 0)[..., None]
+    return IVFPQParams(
+        centroids=km.centroids,
+        list_gids=gids,
+        list_codes=list_codes,
+        codebooks=codebooks,
+        n_lists=c,
+        n_subspaces=n_subspaces,
+        n_codes=2**bits,
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "n_probe"))
+def ivfpq_search(
+    params: IVFPQParams, queries: jnp.ndarray, *, k: int, n_probe: int = 8
+) -> TopK:
+    b = queries.shape[0]
+    c, lp, m = params.list_codes.shape
+    coarse = queries @ params.centroids.T  # (B, C) IP scores
+    c_scores, cids = jax.lax.top_k(coarse, n_probe)  # (B, p)
+
+    pq_for_lut = PQParams(
+        codebooks=params.codebooks,
+        codes=params.list_codes.reshape(-1, m)[:1],
+        rotation=None,
+        n_subspaces=params.n_subspaces,
+        n_codes=params.n_codes,
+    )
+    lut = adc_lut(pq_for_lut, queries)  # (B, m, n_codes)
+
+    codes = params.list_codes[cids]  # (B, p, Lp, m)
+    gids = params.list_gids[cids]  # (B, p, Lp)
+    # Per-query LUT gather: scores[b,p,l] = sum_j lut[b, j, codes[b,p,l,j]].
+    gathered = jnp.take_along_axis(
+        lut[:, None, None, :, :],  # (B,1,1,m,K)
+        codes[..., None],  # (B,p,Lp,m,1)
+        axis=-1,
+    )[..., 0]
+    scores = jnp.sum(gathered, axis=-1) + c_scores[..., None]  # residual + coarse
+    scores = jnp.where(gids < 0, NEG_INF, scores)
+    ids, sc = dedup_topk(gids.reshape(b, -1), scores.reshape(b, -1), k)
+    return TopK(ids=ids, scores=sc)

@@ -1,0 +1,109 @@
+"""Multi-probe LSH baseline (Lv et al. 2007; FALCONN-style) — paper baseline 7.
+
+L hash tables of M-bit hyperplane keys. Buckets are equality ranges in a
+sorted (key, id) array. Probing flips low-|margin| bits of the query key:
+the probe sequence enumerates subsets of the ``n_flip_bits`` smallest-margin
+bits, ordered by summed margin penalty (the standard query-directed probing
+approximation), and scans each probed bucket up to ``bucket_cap`` entries.
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import lsh as lsh_lib
+from ..core_model import TopK
+from ..types import pytree_dataclass
+from ..utils import NEG_INF, dedup_topk
+
+
+@pytree_dataclass
+class MPLSHParams:
+    lsh: lsh_lib.LSHParams
+    sorted_keys: jnp.ndarray  # (L, N) uint32
+    sorted_ids: jnp.ndarray  # (L, N) int32
+
+
+def build_mplsh(
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    *,
+    n_tables: int = 24,
+    key_len: int | None = None,
+) -> MPLSHParams:
+    n, dim = embs.shape
+    key_len = key_len or lsh_lib.suggest_key_len(n)
+    lsh = lsh_lib.make_lsh(rng, dim, n_tables, key_len)
+    keys = lsh_lib.hash_vectors(lsh, embs).T
+    sorted_keys, order = jax.vmap(lsh_lib.sort_hashkeys)(keys)
+    return MPLSHParams(
+        lsh=lsh, sorted_keys=sorted_keys, sorted_ids=order.astype(jnp.int32)
+    )
+
+
+@partial(jax.jit, static_argnames=("k", "n_probes", "n_flip_bits", "bucket_cap"))
+def mplsh_search(
+    params: MPLSHParams,
+    embs: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    n_probes: int = 8,
+    n_flip_bits: int = 4,
+    bucket_cap: int = 64,
+) -> TopK:
+    l, n = params.sorted_keys.shape
+    m = params.lsh.key_len
+    b = queries.shape[0]
+    f = min(n_flip_bits, m)
+
+    proj = queries @ params.lsh.projections  # (B, L*M)
+    proj = proj.reshape(b, l, m)
+    bits = (proj >= 0.0).astype(jnp.uint32)
+    qkeys = lsh_lib.pack_bits(bits)  # (B, L)
+    margins = jnp.abs(proj)  # (B, L, M)
+
+    # Smallest-margin bit positions per (query, table).
+    _, flip_pos = jax.lax.top_k(-margins, f)  # (B, L, f) bit indices (0 = MSB)
+    flip_masks = (jnp.uint32(1) << (m - 1 - flip_pos).astype(jnp.uint32)).astype(
+        jnp.uint32
+    )
+    flip_margin = jnp.take_along_axis(margins, flip_pos, axis=-1)  # (B, L, f)
+
+    # Static probe pattern: all subsets of the f candidate bits; rank by
+    # summed margin penalty per (query, table), take the best n_probes.
+    subsets = jnp.asarray(
+        [list(s) for s in itertools.product((0, 1), repeat=f)], dtype=jnp.float32
+    )  # (2^f, f); row 0 = no flips
+    penalties = jnp.einsum("blf,sf->bls", flip_margin, subsets)  # (B, L, 2^f)
+    _, probe_sel = jax.lax.top_k(-penalties, min(n_probes, 2**f))  # (B, L, P)
+    subset_bits = subsets.astype(jnp.uint32)  # (2^f, f)
+    probe_subsets = subset_bits[probe_sel]  # (B, L, P, f)
+    xor = jnp.sum(
+        probe_subsets * flip_masks[:, :, None, :], axis=-1, dtype=jnp.uint32
+    )  # (B, L, P)
+    probe_keys = qkeys[:, :, None] ^ xor  # (B, L, P)
+
+    # Bucket = equality range in the sorted array; scan up to bucket_cap.
+    def table_lookup(skeys, sids, pkeys):  # (N,), (N,), (B, P)
+        flatp = pkeys.reshape(-1)
+        lo = jnp.searchsorted(skeys, flatp, side="left")
+        hi = jnp.searchsorted(skeys, flatp, side="right")
+        idx = lo[:, None] + jnp.arange(bucket_cap)  # (BP, cap)
+        valid = idx < hi[:, None]
+        ids = jnp.take(sids, jnp.clip(idx, 0, n - 1))
+        return jnp.where(valid, ids, -1)  # (BP, cap)
+
+    cand = jax.vmap(table_lookup, in_axes=(0, 0, 1))(
+        params.sorted_keys, params.sorted_ids, probe_keys
+    )  # (L, B*P, cap)
+    cand = jnp.moveaxis(cand.reshape(l, b, -1), 0, 1).reshape(b, -1)
+
+    emb = embs[jnp.maximum(cand, 0)]
+    scores = jnp.einsum("bcd,bd->bc", emb, queries)
+    scores = jnp.where(cand < 0, NEG_INF, scores)
+    ids, sc = dedup_topk(cand, scores, k)
+    return TopK(ids=ids, scores=sc)

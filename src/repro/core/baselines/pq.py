@@ -1,0 +1,168 @@
+"""Product quantization baselines: PQ, OPQ (learned rotation), PCA-PQ.
+
+PQ [Jégou et al. 2010]: split d into m subspaces, k-means 2**bits codewords
+per subspace, score by asymmetric distance computation (ADC) — for the
+inner-product/cosine metric the ADC table is ``LUT[j, code] = <q_j, c_{j,code}>``
+and a corpus score is a sum of m table lookups.
+
+OPQ [Ge et al. 2013]: alternate (encode, procrustes-rotate) to learn R.
+PCA-PQ: project to a lower dim with PCA before PQ (paper baseline 4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import clustering
+from ..core_model import TopK
+from ..types import pytree_dataclass
+from ..utils import dedup_topk
+
+
+@pytree_dataclass(meta_fields=("n_subspaces", "n_codes"))
+class PQParams:
+    codebooks: jnp.ndarray  # (m, n_codes, ds)
+    codes: jnp.ndarray  # (N, m) int32
+    rotation: jnp.ndarray | None  # (d, d_proj) — OPQ rotation or PCA projection
+    n_subspaces: int
+    n_codes: int
+
+
+def _encode(codebooks: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(N, d_proj) -> (N, m) nearest-codeword ids per subspace."""
+    m, n_codes, ds = codebooks.shape
+    xs = x.reshape(x.shape[0], m, ds)
+
+    def per_sub(xsub, cb):  # (N, ds), (n_codes, ds)
+        d2 = (
+            jnp.sum(xsub * xsub, -1, keepdims=True)
+            - 2.0 * xsub @ cb.T
+            + jnp.sum(cb * cb, -1)
+        )
+        return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+    return jax.vmap(per_sub, in_axes=(1, 0), out_axes=1)(xs, codebooks)
+
+
+def _decode(codebooks: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    m, _, ds = codebooks.shape
+    rows = jax.vmap(lambda cb, c: cb[c], in_axes=(0, 1), out_axes=1)(codebooks, codes)
+    return rows.reshape(codes.shape[0], m * ds)
+
+
+def _train_codebooks(
+    rng: jax.Array, x: jnp.ndarray, m: int, n_codes: int, iters: int
+) -> jnp.ndarray:
+    n, d = x.shape
+    ds = d // m
+    xs = x.reshape(n, m, ds)
+    keys = jax.random.split(rng, m)
+
+    def per_sub(key, xsub):
+        return clustering.kmeans(key, xsub, n_codes, iters=iters).centroids
+
+    return jax.vmap(per_sub, in_axes=(0, 1))(keys, xs)
+
+
+def _pca(x: jnp.ndarray, out_dim: int) -> jnp.ndarray:
+    mu = x.mean(0)
+    cov = (x - mu).T @ (x - mu) / x.shape[0]
+    _, vecs = jnp.linalg.eigh(cov)
+    return vecs[:, ::-1][:, :out_dim]  # (d, out_dim), descending eigenvalues
+
+
+def build_pq(
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    *,
+    n_subspaces: int = 8,
+    bits: int = 8,
+    kmeans_iters: int = 15,
+    opq_iters: int = 0,
+    pca_dim: int | None = None,
+) -> PQParams:
+    n_codes = 2**bits
+    rotation = None
+    x = embs
+    if pca_dim is not None:
+        rotation = _pca(embs, pca_dim)
+        x = embs @ rotation
+    if opq_iters > 0:
+        d = x.shape[1]
+        r = jnp.eye(d) if rotation is None else rotation
+        xr = embs @ r if rotation is not None else x
+        cbs = _train_codebooks(rng, xr, n_subspaces, n_codes, kmeans_iters)
+        for _ in range(opq_iters):
+            codes = _encode(cbs, xr)
+            recon = _decode(cbs, codes)
+            # Procrustes: R = argmin ||X R - recon|| = U V^T of X^T recon.
+            u, _, vt = jnp.linalg.svd(embs.T @ recon, full_matrices=False)
+            r = u @ vt
+            xr = embs @ r
+            cbs = _train_codebooks(rng, xr, n_subspaces, n_codes, kmeans_iters)
+        rotation = r
+        x = xr
+        codebooks = cbs
+    else:
+        codebooks = _train_codebooks(rng, x, n_subspaces, n_codes, kmeans_iters)
+    codes = _encode(codebooks, x)
+    return PQParams(
+        codebooks=codebooks,
+        codes=codes,
+        rotation=rotation,
+        n_subspaces=n_subspaces,
+        n_codes=n_codes,
+    )
+
+
+def adc_lut(params: PQParams, queries: jnp.ndarray) -> jnp.ndarray:
+    """Inner-product ADC lookup tables (B, m, n_codes)."""
+    q = queries if params.rotation is None else queries @ params.rotation
+    m, n_codes, ds = params.codebooks.shape
+    qs = q.reshape(q.shape[0], m, ds)
+    return jnp.einsum("bms,mks->bmk", qs, params.codebooks)
+
+
+def adc_scores(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """Sum of per-subspace LUT entries -> (B, C) approximate IP scores."""
+    m = codes.shape[-1]
+    lut_t = lut.transpose(1, 2, 0)  # (m, n_codes, B)
+    gathered = lut_t[jnp.arange(m)[:, None], codes.T]  # (m, C, B)
+    return jnp.sum(gathered, axis=0).T
+
+
+@partial(jax.jit, static_argnames=("k", "chunk"))
+def pq_search(
+    params: PQParams, queries: jnp.ndarray, *, k: int, chunk: int = 65536
+) -> TopK:
+    n = params.codes.shape[0]
+    b = queries.shape[0]
+    lut = adc_lut(params, queries)
+    pad = (-n) % chunk
+    codes = jnp.pad(params.codes, ((0, pad), (0, 0)))
+    n_chunks = codes.shape[0] // chunk
+
+    def body(carry, args):
+        ids, scores = carry
+        ck, start = args
+        s = adc_scores(lut, ck)
+        cand = start + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.where(cand[None, :] < n, s, -jnp.inf)
+        cand = jnp.where(cand < n, cand, -1)
+        top_s, top_i = jax.lax.top_k(s, min(k, chunk))
+        all_ids = jnp.concatenate([ids, cand[top_i]], axis=-1)
+        all_s = jnp.concatenate([scores, top_s], axis=-1)
+        m_s, m_i = jax.lax.top_k(all_s, k)
+        return (jnp.take_along_axis(all_ids, m_i, -1), m_s), None
+
+    init = (
+        jnp.full((b, k), -1, dtype=jnp.int32),
+        jnp.full((b, k), -jnp.inf, dtype=jnp.float32),
+    )
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    (ids, scores), _ = jax.lax.scan(
+        body, init, (codes.reshape(n_chunks, chunk, -1), starts)
+    )
+    return TopK(ids=ids, scores=scores)

@@ -1,0 +1,123 @@
+"""K-means clustering (paper Sec. 3.2 — LIDER Stage 1).
+
+Lloyd's algorithm in pure JAX. The assignment step is chunked over points so
+the (N, c) distance matrix never materialises (N-chunk x c tiles stay in
+cache/VMEM); on TPU the fused ``repro.kernels.kmeans_assign`` Pallas kernel
+implements the same tile as matmul + running argmin.
+
+``kmeans_step`` is a single jit-able Lloyd iteration so the distributed
+builder (``core.distributed.sharded_kmeans_step``) can wrap it in shard_map
+with a psum on the sufficient statistics.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KMeansResult(NamedTuple):
+    centroids: jnp.ndarray  # (c, d)
+    assignment: jnp.ndarray  # (N,) int32
+
+
+def assign_chunked(
+    x: jnp.ndarray, centroids: jnp.ndarray, *, chunk: int = 4096
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Nearest-centroid assignment, scanning over N in fixed chunks.
+
+    Returns (assignment (N,), min_dist (N,)). Squared-L2 computed via the
+    ``|x|^2 - 2 x.c + |c|^2`` expansion so each tile is one matmul.
+    """
+    n, d = x.shape
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    xs = xp.reshape(-1, chunk, d)
+    c_sq = jnp.sum(centroids * centroids, axis=-1)  # (c,)
+
+    def body(_, xc):
+        x_sq = jnp.sum(xc * xc, axis=-1, keepdims=True)  # (chunk, 1)
+        d2 = x_sq - 2.0 * (xc @ centroids.T) + c_sq  # (chunk, c)
+        return None, (jnp.argmin(d2, axis=-1).astype(jnp.int32), jnp.min(d2, axis=-1))
+
+    _, (a, md) = jax.lax.scan(body, None, xs)
+    return a.reshape(-1)[:n], md.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "chunk"))
+def kmeans_step(
+    x: jnp.ndarray, centroids: jnp.ndarray, *, n_clusters: int, chunk: int = 4096
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One Lloyd iteration -> (sums (c,d), counts (c,), assignment (N,)).
+
+    Callers combine sums/counts (possibly across shards via psum) and call
+    :func:`update_centroids`.
+    """
+    assignment, _ = assign_chunked(x, centroids, chunk=chunk)
+    sums = jax.ops.segment_sum(x, assignment, num_segments=n_clusters)
+    counts = jax.ops.segment_sum(
+        jnp.ones((x.shape[0],), jnp.float32), assignment, num_segments=n_clusters
+    )
+    return sums, counts, assignment
+
+
+def update_centroids(
+    centroids: jnp.ndarray, sums: jnp.ndarray, counts: jnp.ndarray
+) -> jnp.ndarray:
+    """New centroids; empty clusters keep their previous centroid."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new = sums / safe
+    return jnp.where(counts[:, None] > 0.5, new, centroids)
+
+
+def init_centroids(rng: jax.Array, x: jnp.ndarray, n_clusters: int) -> jnp.ndarray:
+    """Seeded init from distinct corpus points (k-means++ costs c sequential
+    passes — deliberately skipped; Lloyd from a seeded sample is deterministic
+    and clusters dense-retrieval embeddings well in practice)."""
+    idx = jax.random.choice(rng, x.shape[0], (n_clusters,), replace=False)
+    return x[idx]
+
+
+def group_by_cluster(
+    assignment: jnp.ndarray, n_clusters: int, capacity: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack point ids into capacity-padded per-cluster slots.
+
+    Returns ``(gids (c, capacity) int32 with -1 padding, sizes (c,) int32)``.
+    Points past ``capacity`` in a cluster are dropped (MoE-style capacity
+    overflow — size the capacity so this never fires, or accept the recall
+    hit; ``sizes`` is clamped so callers can count drops).
+    """
+    n = assignment.shape[0]
+    c = n_clusters
+    sizes = jnp.bincount(assignment, length=c).astype(jnp.int32)
+    order = jnp.argsort(assignment, stable=True).astype(jnp.int32)
+    sorted_assign = assignment[order]
+    starts = jnp.cumsum(sizes) - sizes
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[sorted_assign]
+    keep = rank < capacity
+    flat = jnp.where(keep, sorted_assign * capacity + rank, c * capacity)
+    buf = jnp.full((c * capacity + 1,), -1, dtype=jnp.int32).at[flat].set(order)
+    return buf[:-1].reshape(c, capacity), jnp.minimum(sizes, capacity)
+
+
+def kmeans(
+    rng: jax.Array,
+    x: jnp.ndarray,
+    n_clusters: int,
+    *,
+    iters: int = 20,
+    chunk: int = 4096,
+) -> KMeansResult:
+    """Full Lloyd loop on one host/device (the offline Stage-1 builder)."""
+    centroids = init_centroids(rng, x, n_clusters)
+
+    def body(c, _):
+        sums, counts, _ = kmeans_step(x, c, n_clusters=n_clusters, chunk=chunk)
+        return update_centroids(c, sums, counts), None
+
+    centroids, _ = jax.lax.scan(body, centroids, None, length=iters)
+    _, _, assignment = kmeans_step(x, centroids, n_clusters=n_clusters, chunk=chunk)
+    return KMeansResult(centroids=centroids, assignment=assignment)

@@ -1,0 +1,133 @@
+"""LIDER core model (paper Sec. 3.1): ESK-LSH + key re-scaling + RMI.
+
+Indexes one embedding space (the whole corpus for a standalone model, the
+centroid set or one cluster inside LIDER). Holds ``H`` sorted hashkey arrays
+and one RMI per array; search is::
+
+    query -> H hashkeys -> re-scale -> RMI position -> bi-directional window
+          -> gather candidate embeddings -> exact scores -> dedup top-k
+
+The bi-directional expansion is a *contiguous* ``R = r0*k`` slice of each
+sorted array — the TPU-native replacement for the paper's pointer walk.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lsh as lsh_lib
+from . import rescale as rescale_lib
+from . import rmi as rmi_lib
+from .types import pytree_dataclass
+from .utils import NEG_INF, dedup_topk
+
+
+class TopK(NamedTuple):
+    ids: jnp.ndarray  # (..., k) int32, -1 for empty slots
+    scores: jnp.ndarray  # (..., k) float32
+
+
+@pytree_dataclass
+class CoreModelParams:
+    lsh: lsh_lib.LSHParams
+    rescale: rescale_lib.RescaleParams  # leaves shaped (H,)
+    rmi: rmi_lib.RMIParams  # leaves shaped (H,) / (H, W)
+    sorted_keys: jnp.ndarray  # (H, L) uint32
+    sorted_ids: jnp.ndarray  # (H, L) int32 — indices into the embedding table
+
+    @property
+    def n_arrays(self) -> int:
+        return self.lsh.n_arrays
+
+    @property
+    def array_len(self) -> int:
+        return self.sorted_keys.shape[-1]
+
+
+def build_core_model(
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    *,
+    n_arrays: int,
+    key_len: int | None = None,
+    n_leaves: int = 10,
+) -> CoreModelParams:
+    """Index ``embs`` (L, d). Embeddings should be L2-normalised for cosine."""
+    n, dim = embs.shape
+    key_len = key_len or lsh_lib.suggest_key_len(n)
+    lsh = lsh_lib.make_lsh(rng, dim, n_arrays, key_len)
+    keys = lsh_lib.hash_vectors(lsh, embs).T  # (H, L)
+    sorted_keys, order = jax.vmap(lsh_lib.sort_hashkeys)(keys)
+    resc = jax.vmap(rescale_lib.fit_rescale)(sorted_keys)
+    scaled = jax.vmap(rescale_lib.rescale)(resc, sorted_keys)
+    weights = jnp.ones_like(scaled)
+    rmi = jax.vmap(partial(rmi_lib.fit_rmi, n_leaves=n_leaves))(scaled, weights)
+    return CoreModelParams(
+        lsh=lsh,
+        rescale=resc,
+        rmi=rmi,
+        sorted_keys=sorted_keys,
+        sorted_ids=order.astype(jnp.int32),
+    )
+
+
+def predict_positions(
+    cm: CoreModelParams, queries: jnp.ndarray, *, refine: bool = False
+) -> jnp.ndarray:
+    """(B, d) queries -> (H, B) float32 predicted positions in each array.
+
+    ``refine=True`` replaces the RMI prediction with an exact binary search —
+    the beyond-paper "last-mile" variant (trades H log L searchsorted work for
+    zero prediction error; see EXPERIMENTS.md §Perf).
+    """
+    qkeys = lsh_lib.hash_vectors(cm.lsh, queries)  # (B, H)
+    if refine:
+        return jax.vmap(lsh_lib.query_position)(cm.sorted_keys, qkeys.T).astype(
+            jnp.float32
+        )
+    scaled = jax.vmap(rescale_lib.rescale)(cm.rescale, qkeys.T)  # (H, B)
+    return jax.vmap(rmi_lib.predict)(cm.rmi, scaled)
+
+
+def candidate_windows(
+    cm: CoreModelParams, positions: jnp.ndarray, width: int
+) -> jnp.ndarray:
+    """Bi-directional expansion: (H, B) positions -> (B, H*width) candidate ids."""
+    arr_len = cm.array_len
+    width = min(width, arr_len)
+    start = jnp.clip(
+        jnp.round(positions).astype(jnp.int32) - width // 2, 0, arr_len - width
+    )
+    idx = start[..., None] + jnp.arange(width, dtype=jnp.int32)  # (H, B, R)
+    cand = jax.vmap(jnp.take)(cm.sorted_ids, idx)  # (H, B, R)
+    return jnp.moveaxis(cand, 0, 1).reshape(positions.shape[1], -1)
+
+
+def score_candidates(
+    embs: jnp.ndarray, cand_ids: jnp.ndarray, queries: jnp.ndarray
+) -> jnp.ndarray:
+    """Exact verification: inner product of each candidate with its query."""
+    safe = jnp.maximum(cand_ids, 0)
+    cand = embs[safe]  # (B, C, d)
+    scores = jnp.einsum("bcd,bd->bc", cand, queries)
+    return jnp.where(cand_ids < 0, NEG_INF, scores)
+
+
+def search_core_model(
+    cm: CoreModelParams,
+    embs: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    r0: int = 4,
+    refine: bool = False,
+) -> TopK:
+    """Full paper search path on a single core model."""
+    positions = predict_positions(cm, queries, refine=refine)
+    cand_ids = candidate_windows(cm, positions, width=r0 * k)
+    scores = score_candidates(embs, cand_ids, queries)
+    ids, sc = dedup_topk(cand_ids, scores, k)
+    return TopK(ids=ids, scores=sc)

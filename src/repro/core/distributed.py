@@ -1,0 +1,219 @@
+"""Distributed LIDER: cluster-parallel sharded search + sharded k-means build.
+
+Sharding layout (DESIGN.md §2):
+
+- **cluster axis** ``c`` of every in-cluster tensor is sharded over
+  ``cluster_axes`` (default the ``data`` mesh axis, plus ``pod`` multi-pod) —
+  the paper's "parallelise across clusters" mapped onto devices.
+- **query batch** is sharded over ``query_axes`` (default ``model``) — each
+  (cluster-shard, query-shard) device pair owns a disjoint (clusters ×
+  queries) tile, so the full bipartite search is covered exactly once.
+- centroids retriever + LSH banks are replicated (they are KB-to-MB sized).
+
+Search dataflow per device:
+  1. route local queries on the replicated centroids retriever (redundant
+     across cluster shards — cheaper than broadcasting routed ids),
+  2. **capacity dispatch**: of the ``B_loc * n_probe`` (query, cluster) pairs,
+     keep those owned by this shard, packed to a static capacity — the exact
+     MoE expert-capacity trick; overflow drops are counted and psum'd,
+  3. per-pair in-cluster search (gather + MXU scoring, static shapes),
+  4. scatter pair results back per query, local top-k,
+  5. one all-gather of (B_loc, k) id/score pairs over the cluster axes +
+     final merge — the only collective in the hot path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .clustering import update_centroids
+from .core_model import TopK, search_core_model
+from .lider import LiderParams, incluster_search
+from .utils import dedup_topk
+
+REPLICATED_PREFIXES = ("centroid_cm", "centroids", "in_lsh")
+
+
+def lider_param_specs(params: LiderParams, cluster_axes: Sequence[str]):
+    """PartitionSpec pytree matching ``params``: cluster-sharded leaves get
+    ``P(cluster_axes, None, ...)``, the retriever/centroid/LSH leaves ``P()``."""
+    caxes = tuple(cluster_axes)
+
+    def spec_for(path, leaf):
+        name = path[0].name if hasattr(path[0], "name") else str(path[0])
+        if name in REPLICATED_PREFIXES:
+            return P()
+        return P(caxes, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def shard_lider_params(
+    mesh: jax.sharding.Mesh, params: LiderParams, cluster_axes: Sequence[str]
+) -> LiderParams:
+    """device_put every leaf onto the mesh with the LIDER layout."""
+    specs = lider_param_specs(params, cluster_axes)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs
+    )
+
+
+def _flat_axis_index(axes: Sequence[str]) -> jnp.ndarray:
+    return jax.lax.axis_index(tuple(axes))
+
+
+def make_sharded_search(
+    mesh: jax.sharding.Mesh,
+    params_like: LiderParams,
+    *,
+    k: int,
+    n_probe: int,
+    r0: int = 4,
+    r0_centroid: int = 4,
+    capacity_factor: float = 2.0,
+    cluster_axes: Sequence[str] = ("data",),
+    query_axes: Sequence[str] = ("model",),
+    refine: bool = False,
+):
+    """Build the jitted multi-device search fn: (params, queries) -> (TopK, drops).
+
+    ``params_like`` supplies the pytree structure/shapes (ShapeDtypeStructs are
+    fine — used by the dry-run). Returned fn expects the query batch to be a
+    multiple of the query-axis size.
+    """
+    caxes = tuple(cluster_axes)
+    qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
+    n_cluster_shards = math.prod(mesh.shape[a] for a in caxes)
+    n_query_shards = math.prod(mesh.shape[a] for a in qaxes) if qaxes else 1
+    c_total = params_like.cluster_gids.shape[0]
+    if c_total % n_cluster_shards:
+        raise ValueError(
+            f"n_clusters={c_total} must divide cluster shards={n_cluster_shards}"
+        )
+
+    param_specs = lider_param_specs(params_like, caxes)
+
+    def body(local_params: LiderParams, q_loc: jnp.ndarray):
+        c_local = local_params.cluster_gids.shape[0]
+        my = _flat_axis_index(caxes)
+        routed = search_core_model(
+            local_params.centroid_cm,
+            local_params.centroids,
+            q_loc,
+            k=n_probe,
+            r0=r0_centroid,
+        )
+        cids = routed.ids  # (B_loc, n_probe) global cluster ids
+        b_loc, p = cids.shape
+        n_pairs = b_loc * p
+        flat_cids = cids.reshape(-1)
+        valid = flat_cids >= 0
+        owner = jnp.where(valid, flat_cids // c_local, -1)
+        mine = owner == my
+
+        cap = min(
+            n_pairs, int(math.ceil(n_pairs / n_cluster_shards * capacity_factor))
+        )
+        order = jnp.argsort(~mine, stable=True)  # my pairs first
+        sel = order[:cap]
+        sel_valid = mine[sel]
+        sel_b = (sel // p).astype(jnp.int32)
+        sel_cid_local = jnp.where(
+            sel_valid, flat_cids[sel] - my * c_local, -1
+        ).astype(jnp.int32)
+        dropped = jnp.sum(mine) - jnp.sum(sel_valid)
+
+        pair_topk = incluster_search(
+            local_params,
+            q_loc[sel_b],
+            sel_cid_local[:, None],
+            k=k,
+            r0=r0,
+            refine=refine,
+        )  # (cap, k)
+
+        # Scatter per-pair results back to their (query, probe-slot) rows.
+        scatter_idx = jnp.where(sel_valid, sel, n_pairs)
+        ids_buf = (
+            jnp.full((n_pairs + 1, k), -1, dtype=jnp.int32)
+            .at[scatter_idx]
+            .set(pair_topk.ids)
+        )
+        sc_buf = (
+            jnp.full((n_pairs + 1, k), -jnp.inf, dtype=jnp.float32)
+            .at[scatter_idx]
+            .set(pair_topk.scores)
+        )
+        l_ids, l_sc = dedup_topk(
+            ids_buf[:-1].reshape(b_loc, -1), sc_buf[:-1].reshape(b_loc, -1), k
+        )
+
+        # The one hot-path collective: merge (B_loc, k) across cluster shards.
+        g_ids = jax.lax.all_gather(l_ids, caxes)  # (S, B_loc, k)
+        g_sc = jax.lax.all_gather(l_sc, caxes)
+        ids, sc = dedup_topk(
+            jnp.moveaxis(g_ids, 0, 1).reshape(b_loc, -1),
+            jnp.moveaxis(g_sc, 0, 1).reshape(b_loc, -1),
+            k,
+        )
+        dropped = jax.lax.psum(dropped, caxes + qaxes if qaxes else caxes)
+        return ids, sc, dropped
+
+    qspec = P(qaxes, None) if qaxes else P(None, None)
+    sharded = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(param_specs, qspec),
+        out_specs=(qspec, qspec, P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def search(params: LiderParams, queries: jnp.ndarray):
+        ids, sc, dropped = sharded(params, queries)
+        return TopK(ids=ids, scores=sc), dropped
+
+    return search
+
+
+# ---------------------------------------------------------------------------
+# Distributed build: sharded Lloyd iterations (Stage 1 at scale)
+# ---------------------------------------------------------------------------
+
+
+def make_sharded_kmeans_step(
+    mesh: jax.sharding.Mesh,
+    *,
+    n_clusters: int,
+    data_axes: Sequence[str] = ("data",),
+    chunk: int = 4096,
+):
+    """One Lloyd iteration with points sharded over ``data_axes``; the
+    sufficient statistics are psum'd so every shard gets identical centroids
+    (gradient-compression hook: stats are cast to fp32 regardless of input)."""
+    daxes = tuple(data_axes)
+
+    def body(x_loc, centroids):
+        from .clustering import kmeans_step
+
+        sums, counts, _ = kmeans_step(
+            x_loc, centroids, n_clusters=n_clusters, chunk=chunk
+        )
+        sums = jax.lax.psum(sums.astype(jnp.float32), daxes)
+        counts = jax.lax.psum(counts.astype(jnp.float32), daxes)
+        return update_centroids(centroids, sums, counts)
+
+    return jax.jit(
+        jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(daxes, None), P()),
+            out_specs=P(),
+            check_vma=False,
+        )
+    )

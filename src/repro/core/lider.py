@@ -1,0 +1,282 @@
+"""LIDER: the clustering-based two-layer learned index (paper Sec. 3).
+
+Layer 1: a *centroids retriever* (one core model over the k-means centroids)
+routes each query to ``n_probe`` (= paper c0) clusters. Layer 2: one
+*in-cluster retriever* per cluster. On TPU the per-cluster retrievers are
+**stacked into dense padded tensors** so a (query x probed-cluster) batch is
+pure gather + matmul dataflow:
+
+    sorted_keys   (c, H, Lp) uint32   per-cluster sorted hashkey arrays
+    sorted_pos    (c, H, Lp) int32    position -> cluster-local row (-1 = pad)
+    cluster_embs  (c, Lp, d) float32  embeddings grouped by cluster
+    cluster_gids  (c, Lp)    int32    cluster-local row -> global id (-1 = pad)
+
+The in-cluster LSH projection bank is shared across clusters (DESIGN.md §2);
+re-scale stats and RMIs are per-cluster (the learned parts), matching the
+paper's per-cluster core models.
+
+``search_lider`` is the single-device reference; ``core.distributed`` wraps
+the same ``incluster_search`` math in a shard_map with capacity-based
+query->cluster-shard dispatch for the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
+from .core_model import CoreModelParams, TopK, build_core_model, search_core_model
+from .types import pytree_dataclass
+from .utils import NEG_INF, dedup_topk
+
+
+@dataclasses.dataclass(frozen=True)
+class LiderConfig:
+    """Static build/search configuration (paper Sec. 7.2.1 defaults)."""
+
+    n_clusters: int = 1000  # c
+    n_probe: int = 20  # c0
+    n_arrays: int = 10  # H (in-cluster)
+    n_arrays_centroid: int = 10  # H (centroids retriever)
+    key_len: int | None = None  # M (in-cluster); None -> ceil(log2 Lp)
+    key_len_centroid: int | None = None  # M (centroids); None -> ceil(log2 c)
+    n_leaves: int = 5  # RMI width W_i
+    n_leaves_centroid: int = 10  # RMI width W_c
+    r0: int = 4  # expansion range factor, R = r0 * k
+    r0_centroid: int = 4
+    kmeans_iters: int = 20
+    capacity: int | None = None  # Lp cap; None -> max cluster size (no drops)
+    pad_multiple: int = 8
+    refine: bool = False  # beyond-paper last-mile searchsorted correction
+
+
+@pytree_dataclass
+class LiderParams:
+    centroid_cm: CoreModelParams
+    centroids: jnp.ndarray  # (c, d)
+    in_lsh: lsh_lib.LSHParams
+    in_rescale: rescale_lib.RescaleParams  # leaves (c, H)
+    in_rmi: rmi_lib.RMIParams  # leaves (c, H) / (c, H, W)
+    sorted_keys: jnp.ndarray  # (c, H, Lp) uint32
+    sorted_pos: jnp.ndarray  # (c, H, Lp) int32
+    cluster_embs: jnp.ndarray  # (c, Lp, d)
+    cluster_gids: jnp.ndarray  # (c, Lp) int32
+    cluster_sizes: jnp.ndarray  # (c,) int32
+
+    @property
+    def n_clusters(self) -> int:
+        return self.cluster_gids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.cluster_gids.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.cluster_embs.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Build (paper Sec. 3.3.2: Stage 1 clustering, Stage 2 CR, Stage 3 IRs)
+# ---------------------------------------------------------------------------
+
+
+def build_lider(
+    rng: jax.Array, embs: jnp.ndarray, config: LiderConfig
+) -> LiderParams:
+    n, dim = embs.shape
+    c = config.n_clusters
+    rng_km, rng_cen, rng_in = jax.random.split(rng, 3)
+
+    # Stage 1: clustering.
+    km = clustering.kmeans(rng_km, embs, c, iters=config.kmeans_iters)
+    sizes = jnp.bincount(km.assignment, length=c).astype(jnp.int32)
+    max_size = int(jax.device_get(jnp.max(sizes)))
+    cap = config.capacity or max_size
+    cap = max(config.pad_multiple, math.ceil(cap / config.pad_multiple) * config.pad_multiple)
+    cluster_gids, cluster_sizes = clustering.group_by_cluster(km.assignment, c, cap)
+
+    valid_local = cluster_gids >= 0  # (c, Lp)
+    safe_gid = jnp.maximum(cluster_gids, 0)
+    cluster_embs = embs[safe_gid] * valid_local[..., None]
+
+    # Stage 3 prep: shared in-cluster LSH bank, per-cluster sorted arrays.
+    key_len = config.key_len or lsh_lib.suggest_key_len(cap)
+    in_lsh = lsh_lib.make_lsh(rng_in, dim, config.n_arrays, key_len)
+    all_keys = lsh_lib.hash_vectors(in_lsh, embs)  # (N, H)
+    keys_cl = jnp.where(
+        valid_local[..., None], all_keys[safe_gid], jnp.uint32(lsh_lib.UINT32_PAD)
+    )  # (c, Lp, H)
+    keys_cl = jnp.moveaxis(keys_cl, -1, 1)  # (c, H, Lp)
+    sorted_keys, local_order = lsh_lib.sort_hashkeys(keys_cl)
+    sorted_pos = jnp.where(
+        sorted_keys == jnp.uint32(lsh_lib.UINT32_PAD), -1, local_order
+    ).astype(jnp.int32)
+
+    def _fit_one(skeys: jnp.ndarray, spos: jnp.ndarray):
+        valid = spos >= 0
+        resc = rescale_lib.fit_rescale(skeys, valid)
+        scaled = rescale_lib.rescale(resc, skeys)
+        r = rmi_lib.fit_rmi(scaled, valid.astype(jnp.float32), n_leaves=config.n_leaves)
+        return resc, r
+
+    in_rescale, in_rmi = jax.vmap(jax.vmap(_fit_one))(sorted_keys, sorted_pos)
+
+    # Stage 2: centroids retriever.
+    centroid_cm = build_core_model(
+        rng_cen,
+        km.centroids,
+        n_arrays=config.n_arrays_centroid,
+        key_len=config.key_len_centroid or lsh_lib.suggest_key_len(c),
+        n_leaves=config.n_leaves_centroid,
+    )
+
+    return LiderParams(
+        centroid_cm=centroid_cm,
+        centroids=km.centroids,
+        in_lsh=in_lsh,
+        in_rescale=in_rescale,
+        in_rmi=in_rmi,
+        sorted_keys=sorted_keys,
+        sorted_pos=sorted_pos,
+        cluster_embs=cluster_embs,
+        cluster_gids=cluster_gids,
+        cluster_sizes=cluster_sizes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Search
+# ---------------------------------------------------------------------------
+
+
+def route_queries(
+    params: LiderParams, queries: jnp.ndarray, *, n_probe: int, r0: int = 4
+) -> TopK:
+    """Layer-1: centroids retriever -> (B, n_probe) cluster ids + scores."""
+    return search_core_model(
+        params.centroid_cm, params.centroids, queries, k=n_probe, r0=r0
+    )
+
+
+def _batched_rmi_predict(root_w, root_b, leaf_w, leaf_b, length, n_leaves, x):
+    """RMI predict where every model parameter carries batch dims (gathered
+    per (query, probed cluster, array))."""
+    hi = jnp.maximum(length - 1.0, 0.0)
+    pred = jnp.clip(root_w * x + root_b, 0.0, hi)
+    leaf = jnp.floor(pred * n_leaves / jnp.maximum(length, 1.0)).astype(jnp.int32)
+    leaf = jnp.clip(leaf, 0, n_leaves - 1)
+    lw = jnp.take_along_axis(leaf_w, leaf[..., None], axis=-1)[..., 0]
+    lb = jnp.take_along_axis(leaf_b, leaf[..., None], axis=-1)[..., 0]
+    return jnp.clip(lw * x + lb, 0.0, hi)
+
+
+def incluster_search(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    cids: jnp.ndarray,
+    *,
+    k: int,
+    r0: int = 4,
+    refine: bool = False,
+    merge: bool = True,
+) -> TopK:
+    """Layer-2: search the probed clusters for each query.
+
+    ``queries``: (B, d); ``cids``: (B, P) cluster ids (-1 = unused probe slot).
+    With ``merge=False`` returns the per-pair top-k (B, P, k) — the shape the
+    distributed capacity-dispatch path scatters back before merging.
+    """
+    c, h, lp = params.sorted_keys.shape
+    w = params.in_rmi.n_leaves
+    b, p = cids.shape
+    r = min(r0 * k, lp)
+
+    qkeys = lsh_lib.hash_vectors(params.in_lsh, queries)  # (B, H)
+    safe_cid = jnp.clip(cids, 0, c - 1)
+    cvalid = cids >= 0  # (B, P)
+
+    # Gather per-pair rescale + RMI parameters, then predict positions.
+    resc = rescale_lib.RescaleParams(
+        key_min=params.in_rescale.key_min[safe_cid],
+        key_max=params.in_rescale.key_max[safe_cid],
+        length=params.in_rescale.length[safe_cid],
+    )  # leaves (B, P, H)
+    scaled = rescale_lib.rescale(resc, qkeys[:, None, :])  # (B, P, H)
+    pos = _batched_rmi_predict(
+        params.in_rmi.root_w[safe_cid],
+        params.in_rmi.root_b[safe_cid],
+        params.in_rmi.leaf_w[safe_cid],
+        params.in_rmi.leaf_b[safe_cid],
+        params.in_rmi.length[safe_cid],
+        w,
+        scaled,
+    )  # (B, P, H)
+
+    h_idx = jnp.arange(h, dtype=jnp.int32)[None, None, :, None]
+    if refine:
+        # Beyond-paper last-mile: gather a 2R key window around the RMI
+        # prediction (keys are 4 B vs d*4 B embeddings) and binary-search the
+        # exact position inside it, then expand only R around the truth.
+        w1 = min(2 * r, lp)
+        start1 = jnp.clip(jnp.round(pos).astype(jnp.int32) - w1 // 2, 0, lp - w1)
+        idx1 = start1[..., None] + jnp.arange(w1, dtype=jnp.int32)
+        flat1 = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx1
+        keys_win = jnp.take(params.sorted_keys.reshape(-1), flat1)  # (B,P,H,W1)
+        qk = jnp.broadcast_to(qkeys[:, None, :], (b, p, h)).reshape(-1)
+        rows = keys_win.reshape(-1, w1)
+        off = jax.vmap(lambda row, q: jnp.searchsorted(row, q))(rows, qk)
+        pos = (start1 + off.reshape(b, p, h).astype(jnp.int32)).astype(jnp.float32)
+
+    start = jnp.clip(jnp.round(pos).astype(jnp.int32) - r // 2, 0, lp - r)
+    idx = start[..., None] + jnp.arange(r, dtype=jnp.int32)  # (B, P, H, R)
+    flat = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx
+    local_pos = jnp.take(params.sorted_pos.reshape(-1), flat)  # (B, P, H, R)
+
+    valid = (local_pos >= 0) & cvalid[:, :, None, None]
+    flat_emb = safe_cid[:, :, None, None] * lp + jnp.maximum(local_pos, 0)
+    gids = jnp.take(params.cluster_gids.reshape(-1), flat_emb)
+    gids = jnp.where(valid, gids, -1)
+    cand = jnp.take(
+        params.cluster_embs.reshape(c * lp, -1), flat_emb.reshape(b, -1), axis=0
+    ).reshape(b, p, h, r, -1)
+    # Score in the embedding storage dtype (bf16 index keeps the MXU inputs
+    # bf16 — upcasting `cand` would double the gather read traffic), with
+    # fp32 accumulation for a stable top-k ordering.
+    scores = jnp.einsum(
+        "bphrd,bd->bphr",
+        cand,
+        queries.astype(cand.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    if merge:
+        ids, sc = dedup_topk(gids.reshape(b, -1), scores.reshape(b, -1), k)
+        return TopK(ids=ids, scores=sc)
+    ids, sc = dedup_topk(gids.reshape(b, p, -1), scores.reshape(b, p, -1), k)
+    return TopK(ids=ids, scores=sc)
+
+
+@partial(
+    jax.jit, static_argnames=("k", "n_probe", "r0", "r0_centroid", "refine")
+)
+def search_lider(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    n_probe: int = 20,
+    r0: int = 4,
+    r0_centroid: int = 4,
+    refine: bool = False,
+) -> TopK:
+    """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device."""
+    routed = route_queries(params, queries, n_probe=n_probe, r0=r0_centroid)
+    return incluster_search(
+        params, queries, routed.ids, k=k, r0=r0, refine=refine
+    )

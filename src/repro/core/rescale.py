@@ -1,0 +1,65 @@
+"""Key re-scaling (paper Sec. 5.1).
+
+Packed hashkeys are huge integers (up to 2**M); RMI labels are array
+positions in ``[0, L-1]``. Min-max normalising the keys onto the label range
+removes the out-of-range predictions that otherwise dominate RMI error
+(paper Table 4 — reproduced in ``benchmarks/table4_rescaling.py``).
+
+All math is done on ``uint32`` differences (exact) then cast to float32; the
+2**-24 relative rounding maps to a position error of ``L * 2**-24`` — well
+under one slot for any realistic array length.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .types import pytree_dataclass
+
+
+@pytree_dataclass
+class RescaleParams:
+    """Per-array min/max statistics + the target range length.
+
+    Shapes are whatever the caller vmaps over — a standalone core model keeps
+    ``(H,)`` stats, LIDER's stacked in-cluster retrievers keep ``(c, H)``.
+    ``length`` is the number of *valid* slots (float32 so it vmaps).
+    """
+
+    key_min: jnp.ndarray  # uint32
+    key_max: jnp.ndarray  # uint32
+    length: jnp.ndarray  # float32, rescale target is [0, length - 1]
+
+
+def fit_rescale(
+    sorted_keys: jnp.ndarray, valid: jnp.ndarray | None = None
+) -> RescaleParams:
+    """Fit min/max over one sorted key array ``(L,)`` (mask-aware).
+
+    ``valid`` is a bool mask for padded arrays (padding must sort to the end,
+    which the UINT32_PAD sentinel guarantees).
+    """
+    if valid is None:
+        kmin = sorted_keys[0]
+        kmax = sorted_keys[-1]
+        length = jnp.float32(sorted_keys.shape[-1])
+    else:
+        n = jnp.sum(valid.astype(jnp.int32), axis=-1)
+        kmin = sorted_keys[0]  # valid entries sort first
+        last = jnp.maximum(n - 1, 0)
+        kmax = sorted_keys[last]
+        length = n.astype(jnp.float32)
+    return RescaleParams(key_min=kmin, key_max=kmax, length=length)
+
+
+def rescale(params: RescaleParams, keys: jnp.ndarray) -> jnp.ndarray:
+    """uint32 keys -> float32 RMI keys in [0, length-1] (clipped)."""
+    keys = keys.astype(jnp.uint32)
+    kmin = params.key_min.astype(jnp.uint32)
+    kmax = params.key_max.astype(jnp.uint32)
+    # Exact unsigned differences; queries may fall outside [kmin, kmax].
+    clipped = jnp.clip(keys, kmin, kmax)
+    diff = (clipped - kmin).astype(jnp.float32)
+    span = (kmax - kmin).astype(jnp.float32)
+    span = jnp.maximum(span, 1.0)
+    hi = jnp.maximum(params.length - 1.0, 0.0)
+    return jnp.clip(diff / span * hi, 0.0, hi)

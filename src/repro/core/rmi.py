@@ -1,0 +1,119 @@
+"""Simplified recursive-model index (paper Sec. 5.2).
+
+Two layers, linear-regression only: after key re-scaling the key→position
+distribution is near-linear (paper Fig. 3), so the root is a linear model
+that partitions ``[0, L)`` into ``n_leaves`` equal prediction ranges and each
+leaf is an independent linear model. Fitting is closed-form weighted least
+squares computed with centered segment-sums (one `segment_sum` pass per
+moment) — no gradient loop, exactly reproducible, vmap-able across the ``H``
+arrays of a core model and across LIDER's thousands of clusters.
+
+No hybrid B-tree fallback (paper deliberately drops it for speed); instead
+the per-leaf max training error is recorded — it feeds diagnostics
+(Table 4 reproduction) and the beyond-paper error-bounded refinement.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .types import pytree_dataclass
+
+_EPS = 1e-12
+
+
+@pytree_dataclass(meta_fields=("n_leaves",))
+class RMIParams:
+    root_w: jnp.ndarray  # () f32
+    root_b: jnp.ndarray  # () f32
+    leaf_w: jnp.ndarray  # (n_leaves,) f32
+    leaf_b: jnp.ndarray  # (n_leaves,) f32
+    length: jnp.ndarray  # () f32 — number of valid slots; labels in [0, length-1]
+    max_err: jnp.ndarray  # (n_leaves,) f32 — max |pred - true| seen at fit time
+    n_leaves: int
+
+
+def _wls(x, y, w):
+    """Weighted least squares slope/intercept with centered moments."""
+    n = jnp.sum(w)
+    mx = jnp.sum(w * x) / jnp.maximum(n, _EPS)
+    my = jnp.sum(w * y) / jnp.maximum(n, _EPS)
+    cov = jnp.sum(w * (x - mx) * (y - my))
+    var = jnp.sum(w * (x - mx) ** 2)
+    slope = jnp.where(var > _EPS, cov / jnp.maximum(var, _EPS), 0.0)
+    return slope, my - slope * mx
+
+
+def _leaf_of(root_w, root_b, x, length, n_leaves):
+    hi = jnp.maximum(length - 1.0, 0.0)
+    pred = jnp.clip(root_w * x + root_b, 0.0, hi)
+    leaf = jnp.floor(pred * n_leaves / jnp.maximum(length, 1.0)).astype(jnp.int32)
+    return jnp.clip(leaf, 0, n_leaves - 1)
+
+
+@partial(jax.jit, static_argnames=("n_leaves",))
+def fit_rmi(
+    keys: jnp.ndarray, weights: jnp.ndarray, n_leaves: int
+) -> RMIParams:
+    """Fit a 2-layer linear RMI on one sorted (re-scaled) key array.
+
+    ``keys``: (Lp,) float32 ascending over valid entries (padding at the end).
+    ``weights``: (Lp,) {0,1} mask; position labels are 0..n_valid-1 because
+    padding sorts last.
+    """
+    lp = keys.shape[0]
+    w = weights.astype(jnp.float32)
+    y = jnp.arange(lp, dtype=jnp.float32)
+    length = jnp.sum(w)
+
+    root_w, root_b = _wls(keys, y, w)
+    leaf = _leaf_of(root_w, root_b, keys, length, n_leaves)
+
+    # Per-leaf weighted LS via two segment passes (centered for fp32 safety).
+    seg = partial(jax.ops.segment_sum, segment_ids=leaf, num_segments=n_leaves)
+    n_l = seg(w)
+    mx_l = seg(w * keys) / jnp.maximum(n_l, _EPS)
+    my_l = seg(w * y) / jnp.maximum(n_l, _EPS)
+    dx = keys - mx_l[leaf]
+    dy = y - my_l[leaf]
+    cov_l = seg(w * dx * dy)
+    var_l = seg(w * dx * dx)
+    slope_l = jnp.where(var_l > _EPS, cov_l / jnp.maximum(var_l, _EPS), 0.0)
+    inter_l = my_l - slope_l * mx_l
+    # Empty leaves fall back to the root model.
+    empty = n_l < 0.5
+    leaf_w = jnp.where(empty, root_w, slope_l)
+    leaf_b = jnp.where(empty, root_b, inter_l)
+
+    hi = jnp.maximum(length - 1.0, 0.0)
+    pred = jnp.clip(leaf_w[leaf] * keys + leaf_b[leaf], 0.0, hi)
+    err = jnp.abs(pred - y) * w
+    max_err = jax.ops.segment_max(
+        err, leaf, num_segments=n_leaves, indices_are_sorted=False
+    )
+    max_err = jnp.where(jnp.isfinite(max_err), max_err, 0.0)
+
+    return RMIParams(
+        root_w=root_w,
+        root_b=root_b,
+        leaf_w=leaf_w,
+        leaf_b=leaf_b,
+        length=length,
+        max_err=max_err,
+        n_leaves=n_leaves,
+    )
+
+
+def predict(params: RMIParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Predict positions (float32, clipped to [0, length-1]) for scaled keys."""
+    leaf = _leaf_of(params.root_w, params.root_b, x, params.length, params.n_leaves)
+    hi = jnp.maximum(params.length - 1.0, 0.0)
+    return jnp.clip(params.leaf_w[leaf] * x + params.leaf_b[leaf], 0.0, hi)
+
+
+def predict_raw(params: RMIParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Unclipped prediction — used by the Table 4 out-of-range diagnostics."""
+    leaf = _leaf_of(params.root_w, params.root_b, x, params.length, params.n_leaves)
+    return params.leaf_w[leaf] * x + params.leaf_b[leaf]

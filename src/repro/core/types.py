@@ -1,0 +1,40 @@
+"""Small pytree/dataclass helpers shared across the core library.
+
+Every parameter container in repro is a frozen dataclass registered as a JAX
+pytree via :func:`jax.tree_util.register_dataclass`, with static (non-array)
+configuration split into ``meta_fields`` so jit caches key on them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Type, TypeVar
+
+import jax
+
+T = TypeVar("T")
+
+
+def pytree_dataclass(cls: Type[T] | None = None, *, meta_fields: tuple = ()) -> Any:
+    """Decorator: frozen dataclass registered as a pytree.
+
+    ``meta_fields`` are treated as static aux data (ints, tuples, strings);
+    everything else is a child (arrays / nested pytrees).
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        fields = [f.name for f in dataclasses.fields(c)]
+        data_fields = tuple(f for f in fields if f not in meta_fields)
+        jax.tree_util.register_dataclass(
+            c, data_fields=list(data_fields), meta_fields=list(meta_fields)
+        )
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)
+
+
+def replace(obj: T, **kwargs) -> T:
+    """dataclasses.replace that works through the pytree registration."""
+    return dataclasses.replace(obj, **kwargs)

@@ -1,0 +1,68 @@
+"""Shared numeric helpers: masked top-k with duplicate suppression, etc."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")  # python float: module-level jnp scalars would
+# initialize the backend at import time (breaking the dry-run's XLA_FLAGS).
+
+
+def l2_normalize(x: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """Row-normalise so inner product == cosine similarity (paper Sec. 7.1.1)."""
+    n = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True))
+    return x / jnp.maximum(n, eps)
+
+
+def dedup_topk(
+    ids: jnp.ndarray, scores: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k over the last axis with duplicate/invalid candidates suppressed.
+
+    ``ids``: (..., C) int32 candidate ids, -1 == invalid (padding).
+    ``scores``: (..., C) float32; duplicates of the same id carry equal scores
+    (same vector), so keeping any one occurrence is exact.
+
+    Returns ``(top_ids, top_scores)`` of shape (..., k); slots beyond the
+    number of unique valid candidates have id -1 and score -inf.
+    """
+    invalid = ids < 0
+    # Sort by id so duplicates become adjacent; mask all but the first.
+    order = jnp.argsort(ids, axis=-1, stable=True)
+    sid = jnp.take_along_axis(ids, order, axis=-1)
+    ssc = jnp.take_along_axis(scores, order, axis=-1)
+    sinv = jnp.take_along_axis(invalid, order, axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full(sid.shape[:-1] + (1,), -2, dtype=sid.dtype), sid[..., :-1]], axis=-1
+    )
+    dup = sid == prev
+    masked = jnp.where(dup | sinv, NEG_INF, ssc)
+    kk = min(k, masked.shape[-1])
+    top_scores, idx = jax.lax.top_k(masked, kk)
+    top_ids = jnp.take_along_axis(sid, idx, axis=-1)
+    top_ids = jnp.where(jnp.isneginf(top_scores), -1, top_ids)
+    if kk < k:  # fewer candidates than k: pad the tail
+        pad = [(0, 0)] * (top_ids.ndim - 1) + [(0, k - kk)]
+        top_ids = jnp.pad(top_ids, pad, constant_values=-1)
+        top_scores = jnp.pad(top_scores, pad, constant_values=NEG_INF)
+    return top_ids, top_scores
+
+
+def merge_topk(
+    ids_list: jnp.ndarray, scores_list: jnp.ndarray, k: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Merge per-shard top-k lists (..., S, k) -> global (..., k)."""
+    flat_ids = ids_list.reshape(*ids_list.shape[:-2], -1)
+    flat_scores = scores_list.reshape(*scores_list.shape[:-2], -1)
+    return dedup_topk(flat_ids, flat_scores, k)
+
+
+def recall_at_k(pred_ids: jnp.ndarray, true_ids: jnp.ndarray) -> jnp.ndarray:
+    """Mean recall@k: |pred ∩ true| / |true| per row, averaged."""
+    hits = (pred_ids[..., :, None] == true_ids[..., None, :]) & (
+        true_ids[..., None, :] >= 0
+    )
+    per_row = hits.any(axis=-2).sum(axis=-1) / jnp.maximum(
+        (true_ids >= 0).sum(axis=-1), 1
+    )
+    return per_row.mean()

@@ -1,0 +1,3 @@
+from . import pipeline, synthetic
+
+__all__ = ["pipeline", "synthetic"]

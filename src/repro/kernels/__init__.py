@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for LIDER's compute hot spots.
+
+- ``lsh_hash``      — fused projection + sign + bit-pack (build & query hash)
+- ``kmeans_assign`` — tiled distance + running argmin (Stage-1 Lloyd)
+- ``score_gather``  — scalar-prefetch gather + dot (candidate verification)
+
+``ops`` holds the jit'd dispatchers (TPU -> kernel, CPU -> ``ref`` oracle);
+``ref`` holds the pure-jnp oracles the tests sweep against.
+"""
+from .lsh_hash import lsh_hash
+from .kmeans_assign import kmeans_assign
+from .score_gather import score_gather
+from . import ops, ref
+
+__all__ = ["lsh_hash", "kmeans_assign", "score_gather", "ops", "ref"]

@@ -1,0 +1,72 @@
+"""Fused LSH hashing kernel: matmul + sign + bit-pack in one VMEM pass.
+
+Hashing the corpus is LIDER's build-time hot spot and the first step of every
+query: ``bits = sign(X @ P)`` packed big-endian into uint32. Done naively XLA
+materialises the (N, H*M) float projection tensor in HBM (for MS-8.8M at
+H=10, M=24: 8.4 GB written + re-read). This kernel tiles N into VMEM-resident
+blocks, keeps the projection bank resident (d*H*M*4 B — ~1 MB at paper
+scales), and writes only the (N, H) uint32 keys back: a ~(32*M)x reduction in
+HBM write traffic for the pack stage.
+
+TPU notes: the matmul tile (block_n x d)@(d x HM) feeds the MXU; pick
+``block_n`` a multiple of 8 (f32 sublane) and pad HM to a lane multiple for
+peak efficiency — correctness does not depend on it (compiler pads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lsh_hash_kernel(x_ref, proj_ref, out_ref, *, n_arrays: int, key_len: int):
+    x = x_ref[...].astype(jnp.float32)  # (block_n, d)
+    proj = proj_ref[...].astype(jnp.float32)  # (d, H*M)
+    acc = jnp.dot(x, proj, preferred_element_type=jnp.float32)
+    bits = (acc >= 0.0).astype(jnp.uint32)  # (block_n, H*M)
+    bits = bits.reshape(x.shape[0], n_arrays, key_len)
+    # big-endian weights 2**(M-1-i), built with iota (no captured constants)
+    pos = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, key_len), 2)
+    weights = jnp.uint32(1) << (jnp.uint32(key_len - 1) - pos)
+    out_ref[...] = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_arrays", "key_len", "block_n", "interpret")
+)
+def lsh_hash(
+    x: jnp.ndarray,
+    proj: jnp.ndarray,
+    *,
+    n_arrays: int,
+    key_len: int,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(N, d) float x (d, H*M) float -> (N, H) uint32 packed hashkeys."""
+    n, d = x.shape
+    hm = proj.shape[1]
+    assert hm == n_arrays * key_len
+    block_n = min(block_n, max(8, n))
+    pad = (-n) % block_n
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // block_n,)
+
+    out = pl.pallas_call(
+        functools.partial(_lsh_hash_kernel, n_arrays=n_arrays, key_len=key_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((d, hm), lambda i: (0, 0), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_n, n_arrays), lambda i: (i, 0), memory_space=pltpu.VMEM
+        ),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], n_arrays), jnp.uint32),
+        interpret=interpret,
+    )(x, proj)
+    return out[:n]

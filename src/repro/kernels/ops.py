@@ -1,0 +1,60 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas=None`` (default) picks the Pallas path on TPU and the pure-jnp
+reference on CPU/GPU — the kernels are *TPU targets*; on CPU they are only
+executed for validation via ``interpret=True`` (tests do this explicitly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kmeans_assign import kmeans_assign
+from .lsh_hash import lsh_hash
+from .score_gather import score_gather
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def lsh_hash_op(
+    x: jnp.ndarray,
+    proj: jnp.ndarray,
+    *,
+    n_arrays: int,
+    key_len: int,
+    use_pallas: bool | None = None,
+) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return lsh_hash(
+            x, proj, n_arrays=n_arrays, key_len=key_len, interpret=not _on_tpu()
+        )
+    return ref.lsh_hash_ref(x, proj, n_arrays, key_len)
+
+
+def kmeans_assign_op(
+    x: jnp.ndarray, centroids: jnp.ndarray, *, use_pallas: bool | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return kmeans_assign(x, centroids, interpret=not _on_tpu())
+    return ref.kmeans_assign_ref(x, centroids)
+
+
+def score_gather_op(
+    embs: jnp.ndarray,
+    cand_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return score_gather(embs, cand_ids, queries, interpret=not _on_tpu())
+    return ref.score_gather_ref(embs, cand_ids, queries)

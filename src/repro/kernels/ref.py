@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each ``*_ref`` is the mathematically transparent version of the kernel with
+identical signature and semantics; tests sweep shapes/dtypes and assert the
+kernels (interpret mode on CPU, compiled on TPU) match these exactly
+(integer outputs) or to fp tolerance (scores).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lsh_hash_ref(
+    x: jnp.ndarray, proj: jnp.ndarray, n_arrays: int, key_len: int
+) -> jnp.ndarray:
+    """(N, d) x (d, H*M) -> (N, H) packed big-endian uint32 hashkeys."""
+    acc = x.astype(jnp.float32) @ proj.astype(jnp.float32)
+    bits = (acc >= 0.0).astype(jnp.uint32)
+    bits = bits.reshape(x.shape[0], n_arrays, key_len)
+    weights = (jnp.uint32(1) << jnp.arange(key_len - 1, -1, -1, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def kmeans_assign_ref(
+    x: jnp.ndarray, centroids: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, d), (c, d) -> (assignment (N,) int32, min squared-L2 (N,) f32)."""
+    x = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    d2 = (
+        jnp.sum(x * x, -1, keepdims=True)
+        - 2.0 * x @ c.T
+        + jnp.sum(c * c, -1)[None, :]
+    )
+    return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)
+
+
+def score_gather_ref(
+    embs: jnp.ndarray, cand_ids: jnp.ndarray, queries: jnp.ndarray
+) -> jnp.ndarray:
+    """Candidate verification: (N,d) table, (B,C) ids, (B,d) queries -> (B,C)
+    inner-product scores, -inf where id < 0."""
+    safe = jnp.maximum(cand_ids, 0)
+    cand = embs[safe].astype(jnp.float32)
+    scores = jnp.einsum("bcd,bd->bc", cand, queries.astype(jnp.float32))
+    return jnp.where(cand_ids < 0, -jnp.inf, scores)

@@ -1,0 +1,63 @@
+"""Candidate-verification kernel: scalar-prefetched gather + dot product.
+
+LIDER's verification step scores each query against the H*R candidate rows
+its sorted arrays produced — a data-dependent gather followed by a dot, the
+same block-table indirection pattern as paged attention. Candidate ids are
+scalar-prefetched (SMEM) so the BlockSpec index_map can steer each DMA to
+``embs[ids[b, c]]`` directly: the embedding table never moves wholesale, only
+the touched rows cross HBM->VMEM.
+
+This one-row-per-step formulation is the canonical/minimal form; a
+production variant batches ``block_c`` DMAs per step with double-buffering
+(``pltpu.make_async_copy``) to hide latency — the HBM byte count (the
+roofline term) is identical, so the analysis in EXPERIMENTS.md uses this
+kernel's traffic model.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _score_gather_kernel(ids_ref, q_ref, emb_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+    e = emb_ref[...].astype(jnp.float32)  # (1, d)
+    out_ref[...] = jnp.sum(q * e, axis=-1, keepdims=True)  # (1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def score_gather(
+    embs: jnp.ndarray,
+    cand_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(N, d) table, (B, C) int32 ids, (B, d) queries -> (B, C) IP scores.
+
+    Ids < 0 (padding) score -inf.
+    """
+    b, c = cand_ids.shape
+    n, d = embs.shape
+    safe_ids = jnp.maximum(cand_ids, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bi, ci, ids: (bi, 0)),
+            pl.BlockSpec((1, d), lambda bi, ci, ids: (ids[bi, ci], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda bi, ci, ids: (bi, ci)),
+    )
+    scores = pl.pallas_call(
+        _score_gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(safe_ids, queries, embs)
+    return jnp.where(cand_ids < 0, -jnp.inf, scores)

@@ -1,0 +1,5 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and must
+# only be imported as the entry point of a fresh process.
+from . import mesh, steps
+
+__all__ = ["mesh", "steps"]

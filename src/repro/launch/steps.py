@@ -1,0 +1,654 @@
+"""Step construction: (arch x shape x mesh) -> lowerable jitted computation.
+
+``make_bundle`` returns everything the dry-run needs: the step function, its
+abstract inputs (ShapeDtypeStructs — **no allocation**), the in/out
+shardings, and the analytic MODEL_FLOPS for the roofline's useful-compute
+ratio. Train shapes lower ``train_step`` (fwd+bwd+AdamW); decode shapes lower
+``serve_step`` (one token against a full KV cache); retrieval shapes lower
+the candidate-scoring / LIDER-search computations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchSpec, ShapeSpec
+from ..core import distributed as dist
+from ..core import lider as lider_lib
+from ..core import lsh as lsh_lib
+from ..core import rescale as rescale_lib
+from ..core import rmi as rmi_lib
+from ..core.core_model import CoreModelParams
+from ..models import gnn as gnn_lib
+from ..models import recsys as recsys_lib
+from ..models import transformer as tfm
+from ..training import optimizer as opt_lib
+from .mesh import data_axes
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    model_flops: float
+    donate_argnums: tuple = ()
+    # XLA cost_analysis counts while-loop bodies ONCE; this is the dominant
+    # static trip count (layer scan x grad-accum scan) used by
+    # benchmarks/roofline.py to correct HLO flops/bytes (§Roofline method).
+    loop_factor: float = 1.0
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _dense_flops(params, batch: int, *, factor: float = 2.0) -> float:
+    """2*B*sum(matmul param sizes) — the analytic MODEL_FLOPS for MLP-ish
+    models (factor 6 for train: fwd + 2x bwd). Embedding tables (huge first
+    dim) are lookups, not matmuls — excluded."""
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if leaf.ndim >= 2 and leaf.shape[0] < 100_000:
+            total += math.prod(leaf.shape[-2:]) * math.prod(leaf.shape[:-2])
+    return factor * batch * total
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+
+def _lm_param_structs(cfg: tfm.LMConfig):
+    return jax.eval_shape(lambda k: tfm.init(k, cfg), jax.random.PRNGKey(0))
+
+
+def _lm_flops(cfg: tfm.LMConfig, tokens: int, *, train: bool) -> float:
+    n = cfg.flops_params()
+    return (6.0 if train else 2.0) * n * tokens
+
+
+def make_lm_bundle(
+    arch: ArchSpec,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    fsdp: bool = True,
+    grad_accum: int | None = None,
+    cfg_override: tfm.LMConfig | None = None,
+) -> StepBundle:
+    """``fsdp``/``grad_accum``/``cfg_override`` are the §Perf iteration
+    knobs; defaults are the recorded baseline."""
+    cfg: tfm.LMConfig = cfg_override or arch.config
+    dp = data_axes(mesh)
+    b = shape.dims["global_batch"]
+    s = shape.dims["seq_len"]
+    params_s = _lm_param_structs(cfg)
+    pspecs = tfm.param_specs(cfg, mesh.axis_names, fsdp=fsdp)
+    params_ns = _ns(mesh, pspecs)
+
+    if shape.kind == "train":
+        opt_cfg = opt_lib.OptimizerConfig()
+        opt_s = jax.eval_shape(opt_lib.init_state, params_s)
+        opt_ns = {"mu": params_ns, "nu": params_ns, "step": NamedSharding(mesh, P())}
+        dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+        # Microbatch so one sequence per device is live at a time (the
+        # activation-memory knob; grads accumulate sharded per FSDP specs).
+        if grad_accum is None:
+            grad_accum = max(1, b // max(dp_size, 1))
+        from ..training.train_loop import make_train_step
+
+        train_step = make_train_step(
+            lambda p, mb: tfm.train_loss(p, cfg, mb), opt_cfg, grad_accum=grad_accum
+        )
+
+        batch_s = {
+            "tokens": SDS((b, s), jnp.int32),
+            "targets": SDS((b, s), jnp.int32),
+        }
+        batch_ns = _ns(mesh, {"tokens": P(dp, None), "targets": P(dp, None)})
+        return StepBundle(
+            name=f"{arch.arch_id}:{shape.name}",
+            fn=train_step,
+            args=(params_s, opt_s, batch_s),
+            in_shardings=(params_ns, opt_ns, batch_ns),
+            out_shardings=(params_ns, opt_ns, None),
+            model_flops=_lm_flops(cfg, b * s, train=True),
+            donate_argnums=(0, 1),
+            loop_factor=float(cfg.n_layers * grad_accum),
+        )
+
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens):
+            return tfm.prefill(params, cfg, tokens)
+
+        tokens_s = SDS((b, s), jnp.int32)
+        cache_out = _ns(
+            mesh, tfm.cache_specs(cfg, mesh.axis_names, seq_sharded=False)
+        )
+        # prefill cache: batch over data, sequence over model (tfm.prefill
+        # constrains the same layout internally).
+        return StepBundle(
+            name=f"{arch.arch_id}:{shape.name}",
+            fn=prefill_step,
+            args=(params_s, tokens_s),
+            in_shardings=(params_ns, NamedSharding(mesh, P(dp, None))),
+            out_shardings=(None, cache_out),
+            model_flops=_lm_flops(cfg, b * s, train=False),
+            donate_argnums=(),
+            loop_factor=float(cfg.n_layers),
+        )
+
+    # decode: one new token against a seq_len KV cache. Batch-1 long-context
+    # shards the cache sequence axis (flash-decoding); batched decode shards
+    # the batch axis.
+    seq_sharded = b < math.prod(mesh.shape[a] for a in dp)
+    cache_s = {
+        "k": SDS((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "v": SDS((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim), cfg.dtype),
+        "length": SDS((), jnp.int32),
+    }
+    cache_ns = _ns(
+        mesh, tfm.cache_specs(cfg, mesh.axis_names, seq_sharded=seq_sharded)
+    )
+    token_s = SDS((b, 1), jnp.int32)
+    token_sharding = NamedSharding(mesh, P(dp if not seq_sharded else None, None))
+
+    def serve_step(params, cache, token):
+        return tfm.decode_step(params, cfg, cache, token)
+
+    attn_flops = (
+        4.0 * cfg.n_layers * b * cfg.n_heads * s * cfg.head_dim
+    )  # QK^T + PV against the cache
+    return StepBundle(
+        name=f"{arch.arch_id}:{shape.name}",
+        fn=serve_step,
+        args=(params_s, cache_s, token_s),
+        in_shardings=(params_ns, cache_ns, token_sharding),
+        out_shardings=None,
+        model_flops=_lm_flops(cfg, b, train=False) + attn_flops,
+        donate_argnums=(1,),
+        loop_factor=float(cfg.n_layers),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def _gnn_cfg_for_shape(base: gnn_lib.GNNConfig, shape: ShapeSpec) -> gnn_lib.GNNConfig:
+    d = shape.dims
+    return dataclasses.replace(
+        base,
+        d_feat=d["d_feat"],
+        d_edge=d.get("d_edge", 0),
+        n_classes=1 if d.get("regression") else d.get("n_classes", base.n_classes),
+        readout="graph" if d.get("regression") else "node",
+    )
+
+
+def _gnn_flops(cfg: gnn_lib.GNNConfig, n: int, e: int, *, train: bool) -> float:
+    h = cfg.d_hidden
+    per_layer = 2 * h * h * (3 * e + 2 * n)  # A,B,C on edges; U,V on nodes
+    io = 2 * n * cfg.d_feat * h + 2 * n * h * cfg.n_classes
+    return (3.0 if train else 1.0) * (cfg.n_layers * per_layer + io)
+
+
+def make_gnn_bundle(arch: ArchSpec, shape: ShapeSpec, mesh) -> StepBundle:
+    base: gnn_lib.GNNConfig = arch.config
+    cfg = _gnn_cfg_for_shape(base, shape)
+    dp = data_axes(mesh)
+    d = shape.dims
+    opt_cfg = opt_lib.OptimizerConfig()
+
+    if shape.name == "minibatch_lg":
+        # Input is the sampled block (sampler runs in the data pipeline).
+        bn = d["batch_nodes"]
+        f1, f2 = d["fanout"]
+        n = bn + bn * f1 + bn * f1 * f2
+        e = bn * f1 + bn * f1 * f2
+        graph_s = {
+            "node_feat": SDS((n, cfg.d_feat), jnp.float32),
+            "edge_index": SDS((2, e), jnp.int32),
+            "labels": SDS((n,), jnp.int32),
+            "label_mask": SDS((n,), jnp.float32),
+        }
+        graph_spec = {
+            "node_feat": P(),
+            "edge_index": P(None, dp),
+            "labels": P(),
+            "label_mask": P(),
+        }
+    elif shape.name == "molecule":
+        g = d["batch"]
+        n = g * d["n_nodes"]
+        e = g * d["n_edges"]
+        graph_s = {
+            "node_feat": SDS((n, cfg.d_feat), jnp.float32),
+            "edge_index": SDS((2, e), jnp.int32),
+            "edge_feat": SDS((e, cfg.d_edge), jnp.float32),
+            "graph_ids": SDS((n,), jnp.int32),
+            "n_graphs": g,
+            "graph_targets": SDS((g,), jnp.float32),
+        }
+        graph_spec = {
+            "node_feat": P(dp, None),
+            "edge_index": P(None, dp),
+            "edge_feat": P(dp, None),
+            "graph_ids": P(dp),
+            "n_graphs": None,
+            "graph_targets": P(),
+        }
+    else:  # full-batch: full_graph_sm / ogb_products
+        n_raw, e_raw = d["n_nodes"], d["n_edges"]
+        # Pad nodes+edges to shard evenly on any mesh (jit *arguments* need
+        # exact divisibility; padded nodes carry label_mask=0, padded edges
+        # edge_mask=0, so training is exact). Edges shard over EVERY axis
+        # (the model axis is otherwise idle for GNNs); node states shard over
+        # 'model' inside the layer scan (gnn.forward constraints).
+        n = math.ceil(n_raw / 1024) * 1024
+        e = math.ceil(e_raw / 1024) * 1024
+        tp = ("model",) if "model" in mesh.axis_names else ()
+        all_axes = dp + tp
+        graph_s = {
+            "node_feat": SDS((n, cfg.d_feat), jnp.float32),
+            "edge_index": SDS((2, e), jnp.int32),
+            "edge_mask": SDS((e,), jnp.float32),
+            "labels": SDS((n,), jnp.int32),
+            "label_mask": SDS((n,), jnp.float32),
+        }
+        graph_spec = {
+            "node_feat": P(tp if tp else None, None),
+            "edge_index": P(None, all_axes),
+            "edge_mask": P(all_axes),
+            "labels": P(tp if tp else None),
+            "label_mask": P(tp if tp else None),
+        }
+
+    params_s = jax.eval_shape(lambda k: gnn_lib.init(k, cfg), jax.random.PRNGKey(0))
+    params_ns = jax.tree.map(lambda _: NamedSharding(mesh, P()), params_s)
+    opt_s = jax.eval_shape(opt_lib.init_state, params_s)
+    opt_ns = {"mu": params_ns, "nu": params_ns, "step": NamedSharding(mesh, P())}
+
+    def train_step(params, opt_state, graph):
+        loss, grads = jax.value_and_grad(gnn_lib.train_loss)(params, cfg, graph)
+        params, opt_state, metrics = opt_lib.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    # Static leaves (n_graphs) are not shardable args — bind via closure.
+    static = {k: v for k, v in graph_s.items() if not isinstance(v, SDS)}
+    dyn_s = {k: v for k, v in graph_s.items() if isinstance(v, SDS)}
+    dyn_spec = {k: graph_spec[k] for k in dyn_s}
+
+    def step(params, opt_state, graph):
+        return train_step(params, opt_state, {**graph, **static})
+
+    return StepBundle(
+        name=f"{arch.arch_id}:{shape.name}",
+        fn=step,
+        args=(params_s, opt_s, dyn_s),
+        in_shardings=(params_ns, opt_ns, _ns(mesh, dyn_spec)),
+        out_shardings=(params_ns, opt_ns, None),
+        model_flops=_gnn_flops(cfg, n, e, train=True),
+        donate_argnums=(0, 1),
+        loop_factor=float(cfg.n_layers),
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch_structs(cfg: recsys_lib.RecsysConfig, batch: int) -> dict:
+    k = cfg.kind
+    if k == "sasrec":
+        return {
+            "seq": SDS((batch, cfg.seq_len), jnp.int32),
+            "pos": SDS((batch, cfg.seq_len), jnp.int32),
+            "neg": SDS((batch, cfg.seq_len), jnp.int32),
+        }
+    if k == "two_tower":
+        return {
+            "user_fields": SDS((batch, cfg.n_user_fields), jnp.int32),
+            "item_fields": SDS((batch, cfg.n_item_fields), jnp.int32),
+        }
+    if k == "din":
+        return {
+            "history": SDS((batch, cfg.seq_len), jnp.int32),
+            "target": SDS((batch,), jnp.int32),
+            "label": SDS((batch,), jnp.float32),
+        }
+    if k == "xdeepfm":
+        return {
+            "fields": SDS((batch, cfg.n_sparse), jnp.int32),
+            "label": SDS((batch,), jnp.float32),
+        }
+    raise ValueError(k)
+
+
+def _recsys_forward(cfg: recsys_lib.RecsysConfig):
+    k = cfg.kind
+    if k == "sasrec":
+        return lambda p, b: recsys_lib.sasrec_forward(p, cfg, b["seq"])[:, -1]
+    if k == "two_tower":
+        return lambda p, b: recsys_lib.user_embed(p, cfg, b["user_fields"])
+    if k == "din":
+        return lambda p, b: recsys_lib.din_forward(p, cfg, b)
+    if k == "xdeepfm":
+        return lambda p, b: recsys_lib.xdeepfm_forward(p, cfg, b)
+    raise ValueError(k)
+
+
+def make_recsys_bundle(arch: ArchSpec, shape: ShapeSpec, mesh) -> StepBundle:
+    cfg: recsys_lib.RecsysConfig = arch.config
+    dp = data_axes(mesh)
+    init_fn = recsys_lib.INIT[cfg.kind]
+    params_s = jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.PRNGKey(0))
+    pspecs = recsys_lib.param_specs(params_s)
+    params_ns = _ns(mesh, pspecs)
+    name = f"{arch.arch_id}:{shape.name}"
+
+    if shape.kind == "train":
+        b = shape.dims["batch"]
+        opt_cfg = opt_lib.OptimizerConfig()
+        loss_fn = recsys_lib.LOSS[cfg.kind]
+        opt_s = jax.eval_shape(opt_lib.init_state, params_s)
+        opt_ns = {"mu": params_ns, "nu": params_ns, "step": NamedSharding(mesh, P())}
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+            params, opt_state, metrics = opt_lib.apply_updates(
+                params, grads, opt_state, opt_cfg
+            )
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        batch_s = _recsys_batch_structs(cfg, b)
+        batch_ns = _ns(
+            mesh,
+            jax.tree.map(
+                lambda x: P(dp, *([None] * (x.ndim - 1))), batch_s
+            ),
+        )
+        return StepBundle(
+            name=name,
+            fn=train_step,
+            args=(params_s, opt_s, batch_s),
+            in_shardings=(params_ns, opt_ns, batch_ns),
+            out_shardings=(params_ns, opt_ns, None),
+            model_flops=_dense_flops(params_s, b, factor=6.0),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "serve":
+        b = shape.dims["batch"]
+        fwd = _recsys_forward(cfg)
+        batch_s = _recsys_batch_structs(cfg, b)
+        batch_s.pop("label", None)
+        batch_s.pop("pos", None)
+        batch_s.pop("neg", None)
+        batch_ns = _ns(
+            mesh,
+            jax.tree.map(lambda x: P(dp, *([None] * (x.ndim - 1))), batch_s),
+        )
+        return StepBundle(
+            name=name,
+            fn=lambda p, b_: fwd(p, b_),
+            args=(params_s, batch_s),
+            in_shardings=(params_ns, batch_ns),
+            out_shardings=None,
+            model_flops=_dense_flops(params_s, b, factor=2.0),
+            donate_argnums=(),
+        )
+
+    # retrieval_cand: one query context scored against n_candidates items.
+    c = shape.dims["n_candidates"]
+    k_top = 100
+    if cfg.kind == "two_tower":
+        cand_s = SDS((c, cfg.tower_dims[-1]), jnp.float32)
+        user_s = SDS((1, cfg.n_user_fields), jnp.int32)
+
+        def retrieval_step(params, user_fields, cand_embs):
+            return recsys_lib.two_tower_score_candidates(
+                params, cfg, user_fields, cand_embs, k_top
+            )
+
+        args = (params_s, user_s, cand_s)
+        shardings = (
+            params_ns,
+            NamedSharding(mesh, P(None, None)),
+            NamedSharding(mesh, P(dp, None)),
+        )
+        flops = 2.0 * c * cfg.tower_dims[-1] + _dense_flops(
+            {"t": params_s["user_tower"]}, 1, factor=2.0
+        )
+    elif cfg.kind == "sasrec":
+        seq_s = SDS((1, cfg.seq_len), jnp.int32)
+        cand_ids = SDS((c,), jnp.int32)
+
+        def retrieval_step(params, seq, cands):
+            h = recsys_lib.sasrec_forward(params, cfg, seq)[:, -1]  # (1, d)
+            emb = recsys_lib.embedding_lookup(params["item_emb"], cands)
+            scores = (emb @ h[0]).astype(jnp.float32)
+            return jax.lax.top_k(scores, k_top)
+
+        args = (params_s, seq_s, cand_ids)
+        shardings = (
+            params_ns,
+            NamedSharding(mesh, P(None, None)),
+            NamedSharding(mesh, P(dp)),
+        )
+        flops = 2.0 * c * cfg.embed_dim
+    elif cfg.kind == "din":
+        hist_s = SDS((1, cfg.seq_len), jnp.int32)
+        cand_ids = SDS((c,), jnp.int32)
+
+        def retrieval_step(params, history, cands):
+            hist = jnp.broadcast_to(history, (c, cfg.seq_len))
+            logits = recsys_lib.din_forward(
+                params, cfg, {"history": hist, "target": cands}
+            )
+            return jax.lax.top_k(logits, k_top)
+
+        args = (params_s, hist_s, cand_ids)
+        shardings = (
+            params_ns,
+            NamedSharding(mesh, P(None, None)),
+            NamedSharding(mesh, P(dp)),
+        )
+        flops = 2.0 * c * cfg.seq_len * (
+            4 * cfg.embed_dim * cfg.attn_dims[0]
+            + cfg.attn_dims[0] * cfg.attn_dims[1]
+        ) + _dense_flops({"m": params_s["mlp"]}, c, factor=2.0)
+    else:  # xdeepfm
+        fields_s = SDS((c, cfg.n_sparse), jnp.int32)
+
+        def retrieval_step(params, fields):
+            logits = recsys_lib.xdeepfm_forward(params, cfg, {"fields": fields})
+            return jax.lax.top_k(logits, k_top)
+
+        args = (params_s, fields_s)
+        shardings = (params_ns, NamedSharding(mesh, P(dp, None)))
+        m, dd = cfg.n_sparse, cfg.embed_dim
+        cin = sum(
+            2 * h_prev * m * dd * h
+            for h_prev, h in zip((m,) + cfg.cin_dims[:-1], cfg.cin_dims)
+        )
+        flops = c * (cin + 2 * m * dd * cfg.dnn_dims[0])
+
+    return StepBundle(
+        name=name,
+        fn=retrieval_step,
+        args=args,
+        in_shardings=shardings,
+        out_shardings=None,
+        model_flops=float(flops),
+        donate_argnums=(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Retrieval family (the paper's own arch)
+# ---------------------------------------------------------------------------
+
+
+def lider_param_structs(rcfg, emb_dtype=jnp.float32) -> lider_lib.LiderParams:
+    """Abstract LiderParams for the dry-run (no 38 GB corpus allocation)."""
+    cfg: lider_lib.LiderConfig = rcfg.lider
+    c, d, lp = cfg.n_clusters, rcfg.dim, rcfg.capacity
+    h, hc = cfg.n_arrays, cfg.n_arrays_centroid
+    m, mc = cfg.key_len, cfg.key_len_centroid
+    w, wc = cfg.n_leaves, cfg.n_leaves_centroid
+
+    def rmi_s(lead, nl):
+        return rmi_lib.RMIParams(
+            root_w=SDS(lead, jnp.float32),
+            root_b=SDS(lead, jnp.float32),
+            leaf_w=SDS(lead + (nl,), jnp.float32),
+            leaf_b=SDS(lead + (nl,), jnp.float32),
+            length=SDS(lead, jnp.float32),
+            max_err=SDS(lead + (nl,), jnp.float32),
+            n_leaves=nl,
+        )
+
+    def resc_s(lead):
+        return rescale_lib.RescaleParams(
+            key_min=SDS(lead, jnp.uint32),
+            key_max=SDS(lead, jnp.uint32),
+            length=SDS(lead, jnp.float32),
+        )
+
+    centroid_cm = CoreModelParams(
+        lsh=lsh_lib.LSHParams(
+            projections=SDS((d, hc * mc), jnp.float32), n_arrays=hc, key_len=mc
+        ),
+        rescale=resc_s((hc,)),
+        rmi=rmi_s((hc,), wc),
+        sorted_keys=SDS((hc, c), jnp.uint32),
+        sorted_ids=SDS((hc, c), jnp.int32),
+    )
+    return lider_lib.LiderParams(
+        centroid_cm=centroid_cm,
+        centroids=SDS((c, d), jnp.float32),
+        in_lsh=lsh_lib.LSHParams(
+            projections=SDS((d, h * m), jnp.float32), n_arrays=h, key_len=m
+        ),
+        in_rescale=resc_s((c, h)),
+        in_rmi=rmi_s((c, h), w),
+        sorted_keys=SDS((c, h, lp), jnp.uint32),
+        sorted_pos=SDS((c, h, lp), jnp.int32),
+        cluster_embs=SDS((c, lp, d), emb_dtype),
+        cluster_gids=SDS((c, lp), jnp.int32),
+        cluster_sizes=SDS((c,), jnp.int32),
+    )
+
+
+def _lider_flops(rcfg, batch: int) -> float:
+    cfg = rcfg.lider
+    d = rcfg.dim
+    hash_f = 2.0 * batch * d * (
+        cfg.n_arrays * (cfg.key_len or 16)
+        + cfg.n_arrays_centroid * (cfg.key_len_centroid or 10)
+    )
+    cen_verify = 2.0 * batch * cfg.r0_centroid * cfg.n_probe * cfg.n_arrays_centroid * d
+    r = cfg.r0 * rcfg.k
+    verify = 2.0 * batch * cfg.n_probe * cfg.n_arrays * r * d
+    return hash_f + cen_verify + verify
+
+
+def make_retrieval_bundle(
+    arch: ArchSpec,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    emb_dtype=jnp.float32,
+    r0: int | None = None,
+    refine: bool = False,
+    capacity_factor: float = 2.0,
+) -> StepBundle:
+    """``emb_dtype``/``r0``/``refine`` are §Perf iteration knobs."""
+    rcfg = arch.config
+    cfg: lider_lib.LiderConfig = rcfg.lider
+    dp = data_axes(mesh)
+    name = f"{arch.arch_id}:{shape.name}"
+
+    if shape.kind == "build":
+        step = dist.make_sharded_kmeans_step(
+            mesh, n_clusters=cfg.n_clusters, data_axes=dp
+        )
+        x_s = SDS((rcfg.corpus_size, rcfg.dim), jnp.float32)
+        cen_s = SDS((cfg.n_clusters, rcfg.dim), jnp.float32)
+        dp_size = math.prod(mesh.shape[a] for a in dp)
+        return StepBundle(
+            name=name,
+            fn=step,
+            args=(x_s, cen_s),
+            in_shardings=(
+                NamedSharding(mesh, P(dp, None)),
+                NamedSharding(mesh, P()),
+            ),
+            out_shardings=None,
+            model_flops=2.0 * rcfg.corpus_size * cfg.n_clusters * rcfg.dim,
+            donate_argnums=(),
+            loop_factor=float(rcfg.corpus_size // dp_size // 4096),
+        )
+
+    b = shape.dims["batch"]
+    q_axes = ("model",) if ("model" in mesh.axis_names and b % mesh.shape["model"] == 0) else ()
+    params_s = lider_param_structs(rcfg, emb_dtype=emb_dtype)
+    search = dist.make_sharded_search(
+        mesh,
+        params_s,
+        k=rcfg.k,
+        n_probe=cfg.n_probe,
+        r0=r0 or cfg.r0,
+        r0_centroid=cfg.r0_centroid,
+        cluster_axes=dp,
+        query_axes=q_axes,
+        capacity_factor=capacity_factor,
+        refine=refine,
+    )
+    specs = dist.lider_param_specs(params_s, dp)
+    return StepBundle(
+        name=name,
+        fn=search,
+        args=(params_s, SDS((b, rcfg.dim), jnp.float32)),
+        in_shardings=(
+            _ns(mesh, specs),
+            NamedSharding(mesh, P(q_axes if q_axes else None, None)),
+        ),
+        out_shardings=None,
+        model_flops=_lider_flops(rcfg, b),
+        donate_argnums=(),
+    )
+
+
+FAMILY_BUILDERS = {
+    "lm": make_lm_bundle,
+    "gnn": make_gnn_bundle,
+    "recsys": make_recsys_bundle,
+    "retrieval": make_retrieval_bundle,
+}
+
+
+def make_bundle(arch: ArchSpec, shape: ShapeSpec, mesh) -> StepBundle:
+    return FAMILY_BUILDERS[arch.family](arch, shape, mesh)

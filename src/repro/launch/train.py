@@ -1,0 +1,130 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs real steps on the local device(s) at a reduced scale (``--preset
+smoke``) or the full config (on real hardware). Wires together: config
+registry -> synthetic data pipeline -> train step -> checkpoint manager ->
+restart harness. The dry-run (launch/dryrun.py) is the scale proof; this is
+the runnable driver.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_arch
+from ..data import pipeline as pipe_lib
+from ..data import synthetic
+from ..models import gnn as gnn_lib
+from ..models import recsys as recsys_lib
+from ..models import transformer as tfm
+from ..training import checkpoint as ckpt_lib
+from ..training import optimizer as opt_lib
+from ..training import train_loop
+
+
+def reduced_lm(cfg: tfm.LMConfig) -> tfm.LMConfig:
+    return dataclasses.replace(
+        cfg,
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=max(1, cfg.n_kv_heads * 4 // cfg.n_heads),
+        d_head=32,
+        d_ff=256,
+        vocab=512,
+        moe=dataclasses.replace(cfg.moe, n_experts=4, top_k=min(2, cfg.moe.top_k), d_ff_expert=64)
+        if cfg.moe
+        else None,
+        dtype=jnp.float32,
+    )
+
+
+def reduced_recsys(cfg: recsys_lib.RecsysConfig) -> recsys_lib.RecsysConfig:
+    return dataclasses.replace(
+        cfg,
+        item_vocab=2048,
+        field_vocab=256,
+        seq_len=min(cfg.seq_len, 20),
+        tower_dims=(64, 32),
+        cin_dims=(16, 16),
+        dnn_dims=(32, 32),
+        n_sparse=min(cfg.n_sparse, 13),
+    )
+
+
+def reduced_gnn(cfg: gnn_lib.GNNConfig) -> gnn_lib.GNNConfig:
+    return dataclasses.replace(cfg, n_layers=3, d_hidden=32, d_feat=16, n_classes=5)
+
+
+def build_task(arch_id: str, preset: str, batch: int, seq: int):
+    """-> (params, loss_fn, batch_at). Smoke preset shrinks the config."""
+    arch = get_arch(arch_id)
+    rng = jax.random.PRNGKey(0)
+    if arch.family == "lm":
+        cfg = reduced_lm(arch.config) if preset == "smoke" else arch.config
+        params = tfm.init(rng, cfg)
+        loss_fn = lambda p, b: tfm.train_loss(p, cfg, b)
+        batch_at = lambda s: synthetic.lm_batch(
+            0, s, batch=batch, seq=seq, vocab=cfg.vocab
+        )
+        return params, loss_fn, batch_at
+    if arch.family == "recsys":
+        cfg = reduced_recsys(arch.config) if preset == "smoke" else arch.config
+        params = recsys_lib.INIT[cfg.kind](rng, cfg)
+        loss = recsys_lib.LOSS[cfg.kind]
+        loss_fn = lambda p, b: loss(p, cfg, b)
+        batch_at = lambda s: synthetic.recsys_batch(
+            0, s, kind=cfg.kind, batch=batch, cfg=cfg
+        )
+        return params, loss_fn, batch_at
+    if arch.family == "gnn":
+        cfg = reduced_gnn(arch.config) if preset == "smoke" else arch.config
+        params = gnn_lib.init(rng, cfg)
+        graph = synthetic.random_graph(0, 512, 4096, cfg.d_feat, cfg.n_classes)
+        loss_fn = lambda p, b: gnn_lib.train_loss(p, cfg, b)
+        g = {k: graph[k] for k in ("node_feat", "edge_index", "labels")}
+        batch_at = lambda s: g  # full-batch
+        return params, loss_fn, batch_at
+    raise ValueError(f"{arch_id}: family {arch.family} has no training driver")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    params, loss_fn, batch_at = build_task(args.arch, args.preset, args.batch, args.seq)
+    opt_cfg = opt_lib.OptimizerConfig(
+        peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1), decay_steps=args.steps
+    )
+    opt_state = opt_lib.init_state(params)
+    step = train_loop.make_train_step(loss_fn, opt_cfg, grad_accum=args.grad_accum)
+    mgr = ckpt_lib.CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    pipe = pipe_lib.DataPipeline(batch_at, prefetch=2)
+    try:
+        train_loop.run(
+            step,
+            params,
+            opt_state,
+            pipe,
+            n_steps=args.steps,
+            checkpoint_manager=mgr,
+            checkpoint_every=args.ckpt_every,
+        )
+    finally:
+        pipe.close()
+
+
+if __name__ == "__main__":
+    main()

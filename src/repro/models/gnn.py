@@ -1,0 +1,195 @@
+"""GatedGCN (Bresson & Laurent 2017; benchmarking-GNNs arXiv:2003.00982).
+
+Message passing is ``jax.ops.segment_sum`` over an explicit edge list — the
+JAX-native SpMM formulation (no CSR kernels; see kernel_taxonomy §GNN). Node
+states are replicated, edge lists shard over the data axes: each shard
+scatter-adds its partial aggregate and SPMD inserts the psum.
+
+Norm note: the reference uses BatchNorm; we use batch statistics computed on
+the fly (train == eval semantics, no running stats) — equivalent at full
+batch, documented adaptation for sampled batches.
+
+Includes the real 2-hop neighbour sampler for the ``minibatch_lg`` shape
+(GraphSAGE fanout sampling over CSR, static shapes, jit-able).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import ALL, DP, TP, maybe_shard
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_feat: int = 1433
+    d_edge: int = 0  # 0 -> constant edge features
+    n_classes: int = 7
+    readout: str = "node"  # "node" (classification) | "graph" (regression)
+    dtype: Any = jnp.float32
+
+
+def _dense(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) / (shape[0] ** 0.5)).astype(
+        dtype
+    )
+
+
+def init(rng: jax.Array, cfg: GNNConfig) -> Params:
+    h = cfg.d_hidden
+    k_in, k_e, k_out, k_layers = jax.random.split(rng, 4)
+
+    def layer_init(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "A": _dense(ks[0], (h, h), cfg.dtype),  # edge: src term
+            "B": _dense(ks[1], (h, h), cfg.dtype),  # edge: dst term
+            "C": _dense(ks[2], (h, h), cfg.dtype),  # edge: edge term
+            "U": _dense(ks[3], (h, h), cfg.dtype),  # node: self term
+            "V": _dense(ks[4], (h, h), cfg.dtype),  # node: neighbour term
+            "bn_h": jnp.ones((h,), cfg.dtype),
+            "bn_e": jnp.ones((h,), cfg.dtype),
+        }
+    stacked = jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers))
+    return {
+        "w_in": _dense(k_in, (cfg.d_feat, h), cfg.dtype),
+        "w_edge": _dense(k_e, (max(cfg.d_edge, 1), h), cfg.dtype),
+        "w_out": _dense(k_out, (h, cfg.n_classes), cfg.dtype),
+        "layers": stacked,
+    }
+
+
+def _batch_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.var(x, axis=0, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale
+
+
+def forward(params: Params, cfg: GNNConfig, graph: dict) -> jnp.ndarray:
+    """graph: node_feat (N, F), edge_index (2, E) int32, optional edge_feat
+    (E, Fe), optional graph_ids (N,) for batched small graphs.
+
+    Returns node logits (N, C) or graph outputs (G, C).
+    """
+    n = graph["node_feat"].shape[0]
+    src, dst = graph["edge_index"]
+    h = graph["node_feat"].astype(cfg.dtype) @ params["w_in"]
+    if cfg.d_edge and "edge_feat" in graph:
+        e = graph["edge_feat"].astype(cfg.dtype) @ params["w_edge"]
+    else:
+        e = jnp.zeros((src.shape[0], cfg.d_hidden), cfg.dtype) + params["w_edge"][0]
+
+    # Optional mask for padded edges (inputs are padded to shard evenly).
+    edge_mask = graph.get("edge_mask")
+
+    def body(carry, lp):
+        h, e = carry
+        h_src = h[src]
+        h_dst = h[dst]
+        e_new = e + jax.nn.relu(
+            _batch_norm(h_src @ lp["A"] + h_dst @ lp["B"] + e @ lp["C"], lp["bn_e"])
+        )
+        eta = jax.nn.sigmoid(e_new)
+        if edge_mask is not None:
+            eta = eta * edge_mask[:, None]
+        msg = eta * (h_src @ lp["V"])
+        num = jax.ops.segment_sum(msg, dst, num_segments=n)
+        den = jax.ops.segment_sum(eta, dst, num_segments=n)
+        agg = num / (den + 1e-6)
+        h_new = h + jax.nn.relu(_batch_norm(h @ lp["U"] + agg, lp["bn_h"]))
+        # Node states shard over 'model', edge states over every axis — the
+        # per-layer scan carries stay small (DESIGN.md: GNN on the 2D mesh).
+        h_new = maybe_shard(h_new, TP, None)
+        e_new = maybe_shard(e_new, ALL, None)
+        return (h_new, e_new), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, _), _ = jax.lax.scan(body, (h, e), params["layers"])
+    out = h @ params["w_out"]
+    if cfg.readout == "graph":
+        gids = graph["graph_ids"]
+        g = int(graph["n_graphs"])
+        pooled = jax.ops.segment_sum(out, gids, num_segments=g)
+        counts = jax.ops.segment_sum(jnp.ones((n, 1), cfg.dtype), gids, num_segments=g)
+        return pooled / jnp.maximum(counts, 1.0)
+    return out
+
+
+def train_loss(params: Params, cfg: GNNConfig, graph: dict) -> jnp.ndarray:
+    out = forward(params, cfg, graph)
+    if cfg.readout == "graph":
+        return jnp.mean((out[:, 0] - graph["graph_targets"]) ** 2)  # ZINC-style MAE->MSE
+    labels = graph["labels"]
+    mask = graph.get("label_mask")
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Neighbour sampler (minibatch_lg shape): 2-hop fanout sampling over CSR.
+# ---------------------------------------------------------------------------
+
+
+def neighbor_sample(
+    rng: jax.Array,
+    indptr: jnp.ndarray,  # (N+1,)
+    indices: jnp.ndarray,  # (E,)
+    node_feat: jnp.ndarray,  # (N, F)
+    labels: jnp.ndarray,  # (N,)
+    seeds: jnp.ndarray,  # (B,)
+    fanouts: tuple[int, ...],
+) -> dict:
+    """GraphSAGE-style sampled block with static shapes.
+
+    Sampled-with-replacement via random offsets mod degree; zero-degree
+    frontier nodes self-loop. Block node order: [seeds, hop-1, hop-2, ...];
+    edges point sampled-neighbour -> parent. Works inside jit (static B,
+    fanouts).
+    """
+    frontier = seeds
+    all_nodes = [seeds]
+    srcs, dsts = [], []
+    offset = seeds.shape[0]
+    parent_base = 0
+    for hop, f in enumerate(fanouts):
+        rng, sub = jax.random.split(rng)
+        deg = indptr[frontier + 1] - indptr[frontier]
+        draw = jax.random.randint(
+            sub, (frontier.shape[0], f), 0, 1 << 30, dtype=jnp.int32
+        )
+        off = draw % jnp.maximum(deg, 1)[:, None]
+        neigh = indices[indptr[frontier][:, None] + off]  # (|F|, f)
+        neigh = jnp.where(deg[:, None] > 0, neigh, frontier[:, None])  # self-loop
+        n_new = frontier.shape[0] * f
+        src = offset + jnp.arange(n_new, dtype=jnp.int32)  # block-local ids
+        dst = parent_base + jnp.repeat(
+            jnp.arange(frontier.shape[0], dtype=jnp.int32), f
+        )
+        srcs.append(src)
+        dsts.append(dst)
+        all_nodes.append(neigh.reshape(-1))
+        parent_base = offset
+        offset += n_new
+        frontier = neigh.reshape(-1)
+
+    block_nodes = jnp.concatenate(all_nodes)  # global ids, (Nb,)
+    return {
+        "node_feat": node_feat[block_nodes],
+        "edge_index": jnp.stack([jnp.concatenate(srcs), jnp.concatenate(dsts)]),
+        "labels": labels[block_nodes],
+        "label_mask": (
+            jnp.arange(block_nodes.shape[0]) < seeds.shape[0]
+        ).astype(jnp.float32),
+        "block_nodes": block_nodes,
+    }

@@ -1,0 +1,293 @@
+"""Shared transformer layers: norms, RoPE, GQA flash attention, MLP, MoE.
+
+Everything is a pure function over param dicts (nested pytrees of arrays) so
+jit/pjit/vmap compose without framework machinery. Attention is a pure-jnp
+blockwise (flash-style) implementation — scores never materialise beyond a
+(q_chunk, kv_chunk) tile, which is what lets 32k prefill fit the dry-run
+memory budget; the Pallas kernel slot for it is deliberately NOT taken:
+XLA:TPU already emits fused flash attention for this pattern, the paper's own
+kernels live in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import DP, TP, maybe_shard
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / positional
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(
+    x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-6
+) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(
+        dt
+    ) + bias.astype(dt)
+
+
+def cast_floats(tree, dtype, *, exempt: tuple[str, ...] = ("router",)):
+    """Cast floating leaves of a param subtree to the compute dtype (fp32
+    master weights stay in the optimizer; ``exempt`` names stay fp32 —
+    router logits are precision-sensitive)."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {
+                k: node[k] if k in exempt else walk(node[k]) for k in node
+            }
+        if hasattr(node, "dtype") and jnp.issubdtype(node.dtype, jnp.floating):
+            return node.astype(dtype)
+        return node
+
+    return walk(tree)
+
+
+def rope(
+    x: jnp.ndarray, positions: jnp.ndarray, *, theta: float = 10000.0
+) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, D), positions: (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def flash_attention(
+    q: jnp.ndarray,  # (B, S, Hq, D)
+    k: jnp.ndarray,  # (B, S, Hkv, D)
+    v: jnp.ndarray,  # (B, S, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,  # local (chunked) attention span
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Blockwise softmax attention with GQA, numerically-stable streaming.
+
+    ``window=w`` restricts attention to keys with ``qpos - w < kpos <= qpos``
+    (llama4-scout local layers). Memory high-water: one (q_chunk, kv_chunk)
+    score tile per (batch, head).
+    """
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    assert s % q_chunk == 0 and s % kv_chunk == 0
+    nq, nk = s // q_chunk, s // kv_chunk
+    scale = 1.0 / (d**0.5)
+
+    qr = q.reshape(b, nq, q_chunk, hkv, g, d)
+    kr = k.reshape(b, nk, kv_chunk, hkv, d)
+    vr = v.reshape(b, nk, kv_chunk, hkv, d)
+
+    def q_block(qi, q_tile):  # q_tile: (B, qc, Hkv, G, D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            ki, k_tile, v_tile = inp
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s_ = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_tile, k_tile, preferred_element_type=jnp.float32
+            ) * scale  # (B, Hkv, G, qc, kc)
+            mask = jnp.ones((q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= q_pos[:, None] - k_pos[None, :] < window
+            s_ = jnp.where(mask, s_, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s_, axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(v_tile.dtype), v_tile,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, hkv, g, q_chunk), _NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, q_chunk), jnp.float32),
+            jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, Hkv, G, qc, D)
+        return jnp.moveaxis(out, 3, 1)  # (B, qc, Hkv, G, D)
+
+    out = jax.lax.map(
+        lambda args: q_block(*args), (jnp.arange(nq), jnp.moveaxis(qr, 1, 0))
+    )  # (nq, B, qc, Hkv, G, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, hq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, 1, Hq, D)
+    cache_k: jnp.ndarray,  # (B, S, Hkv, D)
+    cache_v: jnp.ndarray,  # (B, S, Hkv, D)
+    *,
+    length: jnp.ndarray | int,  # valid cache length (scalar or (B,))
+    window: int | None = None,
+) -> jnp.ndarray:
+    """Single-token attention against a KV cache.
+
+    Written as plain reductions over the S axis so that when the cache is
+    sequence-sharded (long-context batch-1 decode) SPMD lowers the softmax to
+    partial max/sum + psum — flash-decoding parallelism for free.
+    """
+    b, s, hkv, d = cache_k.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (d**0.5)
+    qr = q.reshape(b, hkv, g, d)
+    s_ = jnp.einsum(
+        "bhgd,bkhd->bhgk", qr, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    pos = jnp.arange(s)
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        length = jnp.broadcast_to(length, (b,))
+    valid = pos[None, :] < length[:, None]  # (B, S)
+    if window is not None:
+        valid &= pos[None, :] >= (length[:, None] - window)
+    s_ = jnp.where(valid[:, None, None, :], s_, _NEG)
+    m = jnp.max(s_, axis=-1, keepdims=True)
+    p = jnp.exp(s_ - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", (p / jnp.maximum(l, 1e-30)).astype(cache_v.dtype), cache_v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    h = jax.nn.silu(gate) * up
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def moe_mlp(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based token-choice MoE with per-batch-row dispatch.
+
+    Each batch row sorts its own (token, expert-choice) pairs into per-expert
+    capacity slots — dispatch is *local to the data shard by construction*
+    (no global sort collective). Expert buffers are (B, E, C, d): B rides the
+    data axis, E the model axis (expert parallelism); SPMD inserts the
+    dispatch all-to-all at the scatter. Returns (output, aux load-balance
+    loss).
+    """
+    b, s, d = x.shape
+    e = p["w_gate"].shape[0]
+    ff = p["w_gate"].shape[2]
+    cap = int(max(top_k, round(s * top_k / e * capacity_factor)))
+    cap = min(cap, s * top_k)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)  # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Aux loss (Switch-style): mean fraction routed vs mean router prob.
+    density = jnp.mean(
+        jax.nn.one_hot(experts[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_prob) * e
+
+    def dispatch_row(x_row, experts_row, gates_row):
+        # x_row: (S, d); experts_row/gates_row: (S, K)
+        flat_e = experts_row.reshape(-1)  # (S*K,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(flat_e, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(s * top_k, dtype=jnp.int32) - starts[sorted_e]
+        keep = pos < cap
+        slot = jnp.where(keep, sorted_e * cap + pos, e * cap)
+        tok = order // top_k
+        buf = (
+            jnp.zeros((e * cap + 1, d), x_row.dtype)
+            .at[slot]
+            .set(x_row[tok])
+        )
+        return buf[:-1].reshape(e, cap, d), slot, tok, order
+
+    expert_in, slot, tok, order = jax.vmap(dispatch_row)(x, experts, gate_vals)
+    # Expert buffers ride (data, expert-parallel) — SPMD inserts the dispatch
+    # collective at the scatter above. Every buffer is pinned: without the
+    # constraints SPMD resolves the (FSDP-d weights x row-sharded buffer)
+    # einsum by replicating the buffers (observed on the multi-pod mesh).
+    expert_in = maybe_shard(expert_in, DP, TP, None, None)
+
+    h = maybe_shard(
+        jnp.einsum("becd,edf->becf", expert_in, p["w_gate"]), DP, TP, None, None
+    )
+    u = maybe_shard(
+        jnp.einsum("becd,edf->becf", expert_in, p["w_up"]), DP, TP, None, None
+    )
+    expert_out = maybe_shard(
+        jnp.einsum("becf,efd->becd", jax.nn.silu(h) * u, p["w_down"]),
+        DP, TP, None, None,
+    )  # (B, E, C, d)
+
+    def combine_row(out_row, slot_row, tok_row, order_row, gates_row):
+        flat = out_row.reshape(e * cap, d)
+        safe = jnp.minimum(slot_row, e * cap - 1)
+        y = jnp.where((slot_row < e * cap)[:, None], flat[safe], 0.0)
+        gsel = gates_row.reshape(-1)[order_row]  # gate per sorted pair
+        y = y * gsel[:, None]
+        return jax.ops.segment_sum(y, tok_row, num_segments=s)
+
+    out = jax.vmap(combine_row)(expert_out, slot, tok, order, gate_vals)
+    return out.astype(x.dtype), aux

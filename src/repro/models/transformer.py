@@ -1,0 +1,427 @@
+"""Decoder-only transformer LM: dense or MoE, GQA, RoPE, optional
+local/global interleaved attention (llama4-scout iRoPE style).
+
+Pure-function design: ``init`` builds a nested param dict (layers stacked on
+a leading axis for ``lax.scan``), ``forward`` returns final hidden states,
+``lm_loss`` computes sequence-chunked softmax cross-entropy (logits never
+materialise beyond a (B, chunk, V) tile), ``prefill``/``decode_step`` serve
+with a KV cache. ``param_specs`` gives the Megatron-style TP layout used by
+the dry-run and launcher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers
+from .sharding import DP, TP, maybe_shard
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # shared (always-on) experts, llama4 style
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    # every `local_ratio`-th layer is global, the rest use `window` (llama4);
+    # window=None -> all layers full attention.
+    window: int | None = None
+    local_ratio: int = 4
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    loss_chunk: int = 128
+    # Sequence parallelism for activations: residual-stream carries shard
+    # (batch x seq) over (dp x model) instead of batch-only — cuts per-layer
+    # activation memory TP-fold, at the cost of a per-layer seq all-gather
+    # before attention (§Perf iteration C2).
+    seq_shard_activations: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def flops_params(self) -> int:
+        """Parameter count N for the 6*N*D model-FLOPs estimate (active
+        params for MoE)."""
+        d, dh = self.d_model, self.head_dim
+        attn = d * dh * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * dh * d
+        if self.moe:
+            ff = 3 * d * self.moe.d_ff_expert * (self.moe.top_k + self.moe.n_shared)
+        else:
+            ff = 3 * d * self.d_ff
+        return self.n_layers * (attn + ff) + 2 * self.vocab * d
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale or (1.0 / (shape[0] ** 0.5))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init(rng: jax.Array, cfg: LMConfig) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    pd = cfg.param_dtype
+    k_emb, k_head, k_layers = jax.random.split(rng, 3)
+
+    def layer_init(key):
+        ks = jax.random.split(key, 12)
+        p: Params = {
+            "ln_attn": jnp.ones((d,), pd),
+            "ln_mlp": jnp.ones((d,), pd),
+            "wq": _dense(ks[0], (d, hq * dh), pd),
+            "wk": _dense(ks[1], (d, hkv * dh), pd),
+            "wv": _dense(ks[2], (d, hkv * dh), pd),
+            "wo": _dense(ks[3], (hq * dh, d), pd),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((hq * dh,), pd)
+            p["bk"] = jnp.zeros((hkv * dh,), pd)
+            p["bv"] = jnp.zeros((hkv * dh,), pd)
+        if cfg.moe:
+            e, ffe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+            p["moe"] = {
+                "router": _dense(ks[4], (d, e), jnp.float32),
+                "w_gate": _dense(ks[5], (e, d, ffe), pd),
+                "w_up": _dense(ks[6], (e, d, ffe), pd),
+                "w_down": _dense(ks[7], (e, ffe, d), pd),
+            }
+            if cfg.moe.n_shared:
+                ffs = cfg.moe.d_ff_expert * cfg.moe.n_shared
+                p["shared"] = {
+                    "w_gate": _dense(ks[8], (d, ffs), pd),
+                    "w_up": _dense(ks[9], (d, ffs), pd),
+                    "w_down": _dense(ks[10], (ffs, d), pd),
+                }
+        else:
+            p["mlp"] = {
+                "w_gate": _dense(ks[5], (d, cfg.d_ff), pd),
+                "w_up": _dense(ks[6], (d, cfg.d_ff), pd),
+                "w_down": _dense(ks[7], (cfg.d_ff, d), pd),
+            }
+        return p
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(layer_init)(layer_keys)
+    return {
+        "embed": _dense(k_emb, (cfg.vocab, d), pd, scale=0.02),
+        "lm_head": _dense(k_head, (d, cfg.vocab), pd),
+        "ln_final": jnp.ones((d,), pd),
+        "layers": stacked,
+    }
+
+
+def layer_windows(cfg: LMConfig, seq_len: int) -> jnp.ndarray:
+    """Per-layer attention window (traced through the layer scan). Full
+    attention = seq_len (mask never fires)."""
+    if cfg.window is None:
+        return jnp.full((cfg.n_layers,), jnp.int32(2**30))
+    idx = jnp.arange(cfg.n_layers)
+    is_global = (idx % cfg.local_ratio) == (cfg.local_ratio - 1)
+    return jnp.where(is_global, jnp.int32(2**30), jnp.int32(cfg.window))
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(lp: Params, cfg: LMConfig, x: jnp.ndarray, positions, window):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = layers.rms_norm(x, lp["ln_attn"])
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"])
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"])
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = layers.rope(q.reshape(b, s, hq, dh), positions, theta=cfg.rope_theta)
+    k = layers.rope(k.reshape(b, s, hkv, dh), positions, theta=cfg.rope_theta)
+    v = v.reshape(b, s, hkv, dh)
+    o = layers.flash_attention(q, k, v, causal=True, window=window)
+    o = jnp.einsum("bsh,hd->bsd", o.reshape(b, s, hq * dh), lp["wo"])
+    return o, (k, v)
+
+
+MOE_SEQ_CHUNK = 8192  # cap MoE dispatch-buffer length for long prefills
+
+
+def _mlp_block(lp: Params, cfg: LMConfig, x: jnp.ndarray):
+    h = layers.rms_norm(x, lp["ln_mlp"])
+    aux = jnp.float32(0.0)
+    if cfg.moe:
+        b, s, d = h.shape
+        moe = lambda hx: layers.moe_mlp(
+            lp["moe"],
+            hx,
+            top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor,
+        )
+        if s > MOE_SEQ_CHUNK and s % MOE_SEQ_CHUNK == 0:
+            # Dispatch sequence chunks *sequentially* (lax.map): only one
+            # chunk's expert buffers are live — the 32k-prefill memory knob.
+            nc = s // MOE_SEQ_CHUNK
+            hc = jnp.moveaxis(
+                h.reshape(b, nc, MOE_SEQ_CHUNK, d), 1, 0
+            )  # (nc, B, chunk, d)
+            out, aux = jax.lax.map(moe, hc)
+            out = jnp.moveaxis(out, 0, 1).reshape(b, s, d)
+            aux = jnp.sum(aux)
+        else:
+            out, aux = moe(h)
+        if cfg.moe.n_shared:
+            out = out + layers.swiglu_mlp(lp["shared"], h)
+    else:
+        out = layers.swiglu_mlp(lp["mlp"], h)
+    return out, aux
+
+
+def forward(
+    params: Params, cfg: LMConfig, tokens: jnp.ndarray, *, collect_cache: bool = False
+):
+    """tokens (B, S) -> hidden (B, S, d); optionally also per-layer (k, v)."""
+    b, s = tokens.shape
+    act_spec = (DP, TP, None) if cfg.seq_shard_activations else (DP, None, None)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = maybe_shard(x, *act_spec)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    windows = layer_windows(cfg, s)
+
+    def body(x, inp):
+        lp, win = inp
+        lp = layers.cast_floats(lp, cfg.dtype)
+        attn_out, kv = _attn_block(lp, cfg, x, positions, win)
+        x = maybe_shard(x + attn_out, *act_spec)
+        mlp_out, aux = _mlp_block(lp, cfg, x)
+        x = maybe_shard(x + mlp_out, *act_spec)
+        if collect_cache:
+            # Pin the per-layer cache slice layout inside the scan (batch
+            # over data, sequence over model) — without this the stacked
+            # (L, B, S, Hkv, Dh) cache replicates over 'model' (GQA heads
+            # can't shard 16-way) and blows the prefill memory budget.
+            kv = tuple(maybe_shard(t, DP, TP, None, None) for t in kv)
+            ys = (kv, aux)
+        else:
+            ys = aux
+        return x, ys
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(body, x, (params["layers"], windows))
+    x = layers.rms_norm(x, params["ln_final"])
+    if collect_cache:
+        (ks, vs), aux = ys
+        return x, (ks, vs), jnp.sum(aux)
+    return x, jnp.sum(ys)
+
+
+def lm_loss(
+    params: Params, cfg: LMConfig, hidden: jnp.ndarray, targets: jnp.ndarray
+) -> jnp.ndarray:
+    """Sequence-chunked softmax cross-entropy (B, chunk, V) tiles only."""
+    b, s, d = hidden.shape
+    chunk = min(cfg.loss_chunk, s)
+    assert s % chunk == 0
+    hs = jnp.moveaxis(hidden.reshape(b, s // chunk, chunk, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, s // chunk, chunk), 1, 0)
+    head = params["lm_head"].astype(cfg.dtype)
+
+    def body(acc, inp):
+        h, t = inp
+        logits = jnp.einsum("bcd,dv->bcv", h, head).astype(jnp.float32)
+        logits = maybe_shard(logits, DP, None, TP)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ts))
+    return total / (b * s)
+
+
+def train_loss(params: Params, cfg: LMConfig, batch: dict) -> jnp.ndarray:
+    hidden, aux = forward(params, cfg, batch["tokens"])
+    loss = lm_loss(params, cfg, hidden, batch["targets"])
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jnp.ndarray):
+    """Run the prompt; returns (last-token logits, cache)."""
+    hidden, (ks, vs), _ = forward(params, cfg, tokens, collect_cache=True)
+    last = hidden[:, -1:, :]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", last, params["lm_head"].astype(cfg.dtype)
+    ).astype(jnp.float32)
+    # Cache layout matches decode: batch over data, *sequence* over model
+    # (KV heads are too few to shard 16-way under GQA).
+    cache = {
+        "k": maybe_shard(ks, None, DP, TP, None, None),
+        "v": maybe_shard(vs, None, DP, TP, None, None),
+        "length": jnp.int32(tokens.shape[1]),
+    }
+    return logits[:, 0], cache
+
+
+def decode_step(params: Params, cfg: LMConfig, cache: dict, token: jnp.ndarray):
+    """One autoregressive step. token: (B, 1) -> (logits (B, V), new cache).
+
+    Attention is expressed as plain reductions over the cache S axis so a
+    sequence-sharded cache (batch-1 long-context) lowers to flash-decoding
+    style partial-softmax + psum.
+    """
+    b = token.shape[0]
+    x = params["embed"].astype(cfg.dtype)[token]  # (B, 1, d)
+    length = cache["length"]
+    positions = jnp.full((b, 1), length, jnp.int32)
+    windows = layer_windows(cfg, int(cache["k"].shape[2]))
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def body(x, inp):
+        lp, ck, cv, win = inp  # ck/cv: (B, S, Hkv, Dh)
+        lp = layers.cast_floats(lp, cfg.dtype)
+        h = layers.rms_norm(x, lp["ln_attn"])
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"])
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"])
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+        q = layers.rope(q.reshape(b, 1, hq, dh), positions, theta=cfg.rope_theta)
+        k = layers.rope(k.reshape(b, 1, hkv, dh), positions, theta=cfg.rope_theta)
+        v = v.reshape(b, 1, hkv, dh)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, length, 0, 0))
+        o = layers.decode_attention(q, ck, cv, length=length + 1, window=win)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, hq * dh), lp["wo"])
+        mlp_out, _ = _mlp_block(lp, cfg, x)
+        return x + mlp_out, (k.astype(ck.dtype), v.astype(cv.dtype))
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], windows)
+    )
+    x = layers.rms_norm(x, params["ln_final"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, params["lm_head"].astype(cfg.dtype)
+    ).astype(jnp.float32)[:, 0]
+    # new_k/new_v from scan are already (L, B, 1, Hkv, Dh).
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], new_k, (0, 0, length, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], new_v, (0, 0, length, 0, 0)),
+        "length": length + 1,
+    }
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Partitioning
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: LMConfig, mesh_axis_names, *, fsdp: bool = True) -> Params:
+    """Megatron TP layout + FSDP: the non-TP matrix dim additionally shards
+    over the data axes (ZeRO-3 — params, grads and optimizer moments all
+    follow these specs, so per-device state is param_bytes/(dp*tp)). XLA
+    inserts the per-layer all-gather inside the layer scan; ``fsdp=False``
+    gives the pure-TP baseline (the §Perf before/after)."""
+    tp = "model" if "model" in mesh_axis_names else None
+    dp: Any = tuple(a for a in ("pod", "data") if a in mesh_axis_names)
+    if not dp or not fsdp:
+        dp = None
+
+    def spec(*entries):
+        return P(*entries)
+
+    layer: Params = {
+        "ln_attn": spec(None, None),
+        "ln_mlp": spec(None, None),
+        "wq": spec(None, dp, tp),
+        "wk": spec(None, dp, tp),
+        "wv": spec(None, dp, tp),
+        "wo": spec(None, tp, dp),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = spec(None, tp)
+        layer["bk"] = spec(None, tp)
+        layer["bv"] = spec(None, tp)
+    if cfg.moe:
+        layer["moe"] = {
+            "router": spec(None, None, None),
+            "w_gate": spec(None, tp, dp, None),  # expert parallel + FSDP on d
+            "w_up": spec(None, tp, dp, None),
+            "w_down": spec(None, tp, None, dp),
+        }
+        if cfg.moe.n_shared:
+            layer["shared"] = {
+                "w_gate": spec(None, dp, tp),
+                "w_up": spec(None, dp, tp),
+                "w_down": spec(None, tp, dp),
+            }
+    else:
+        layer["mlp"] = {
+            "w_gate": spec(None, dp, tp),
+            "w_up": spec(None, dp, tp),
+            "w_down": spec(None, tp, dp),
+        }
+    return {
+        "embed": spec(tp, dp),
+        "lm_head": spec(dp, tp),
+        "ln_final": spec(None),
+        "layers": layer,
+    }
+
+
+def cache_specs(cfg: LMConfig, mesh_axis_names, *, seq_sharded: bool):
+    """KV-cache layout (L, B, S, Hkv, Dh).
+
+    KV heads cannot shard over a 16-way model axis (GQA: Hkv in {2..8}), so
+    decode shards the cache **sequence** axis over 'model' — flash-decoding
+    style split-KV; the softmax lowers to partial max/sum + psum. Batched
+    decode additionally shards B over data; batch-1 long-context shards S
+    over every axis.
+    """
+    dp = tuple(a for a in ("pod", "data") if a in mesh_axis_names)
+    tp = "model" if "model" in mesh_axis_names else None
+    if seq_sharded:
+        all_axes = dp + ((tp,) if tp else ())
+        kv = P(None, None, all_axes if all_axes else None, None, None)
+    else:
+        kv = P(None, dp if dp else None, tp, None, None)
+    return {"k": kv, "v": kv, "length": P()}

@@ -1,0 +1,3 @@
+from .engine import RetrievalEngine, make_backend
+
+__all__ = ["RetrievalEngine", "make_backend"]

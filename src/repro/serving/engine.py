@@ -1,0 +1,118 @@
+"""Batched retrieval serving engine.
+
+Wraps an index backend (LIDER or any baseline) behind one API:
+``submit`` queues requests, ``drain`` pads to the compiled batch size and
+executes — the latency-vs-throughput batching knob real serving stacks tune.
+AQT (average query time, the paper's efficiency metric) is measured here.
+
+Backends share the signature ``search(queries (B, d), k) -> TopK``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import lider as lider_lib
+from ..core.baselines import (
+    flat_search,
+    ivfpq_search,
+    mplsh_search,
+    pq_search,
+    sklsh_search,
+)
+from ..core.core_model import TopK
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_queries: int = 0
+    n_batches: int = 0
+    total_time_s: float = 0.0
+
+    @property
+    def aqt(self) -> float:
+        return self.total_time_s / max(self.n_queries, 1)
+
+
+def make_backend(kind: str, index, embs: jnp.ndarray | None = None, **kw) -> Callable:
+    """Uniform search closure over any index type."""
+    if kind == "lider":
+        def search(q, k):
+            return lider_lib.search_lider(
+                index,
+                q,
+                k=k,
+                n_probe=kw.get("n_probe", 20),
+                r0=kw.get("r0", 4),
+                refine=kw.get("refine", False),
+            )
+    elif kind == "flat":
+        def search(q, k):
+            return flat_search(embs, q, k=k)
+    elif kind == "pq":
+        def search(q, k):
+            return pq_search(index, q, k=k)
+    elif kind == "ivfpq":
+        def search(q, k):
+            return ivfpq_search(index, q, k=k, n_probe=kw.get("n_probe", 8))
+    elif kind == "sklsh":
+        def search(q, k):
+            return sklsh_search(index, embs, q, k=k)
+    elif kind == "mplsh":
+        def search(q, k):
+            return mplsh_search(index, embs, q, k=k, n_probes=kw.get("n_probes", 8))
+    else:
+        raise ValueError(f"unknown backend {kind}")
+    return search
+
+
+class RetrievalEngine:
+    """Fixed-batch serving with request queueing and AQT accounting."""
+
+    def __init__(self, search_fn: Callable, *, batch_size: int, k: int, dim: int):
+        self.search_fn = search_fn
+        self.batch_size = batch_size
+        self.k = k
+        self.dim = dim
+        self.queue: list[tuple[int, np.ndarray]] = []
+        self.results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self.stats = EngineStats()
+        self._next_id = 0
+
+    def warmup(self):
+        q = jnp.zeros((self.batch_size, self.dim), jnp.float32)
+        jax.block_until_ready(self.search_fn(q, self.k).ids)
+
+    def submit(self, query: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, np.asarray(query, np.float32)))
+        return rid
+
+    def drain(self) -> None:
+        """Execute queued requests in fixed-size (padded) batches."""
+        while self.queue:
+            chunk = self.queue[: self.batch_size]
+            self.queue = self.queue[self.batch_size:]
+            n = len(chunk)
+            q = np.zeros((self.batch_size, self.dim), np.float32)
+            for i, (_, vec) in enumerate(chunk):
+                q[i] = vec
+            t0 = time.perf_counter()
+            out: TopK = self.search_fn(jnp.asarray(q), self.k)
+            ids = np.asarray(jax.block_until_ready(out.ids))
+            scores = np.asarray(out.scores)
+            dt = time.perf_counter() - t0
+            self.stats.n_queries += n
+            self.stats.n_batches += 1
+            self.stats.total_time_s += dt
+            for i, (rid, _) in enumerate(chunk):
+                self.results[rid] = (ids[i], scores[i])
+
+    def result(self, rid: int):
+        return self.results.get(rid)

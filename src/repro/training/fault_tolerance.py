@@ -1,0 +1,66 @@
+"""Fault tolerance: restart-on-failure harness + determinism contracts.
+
+At 1000+ nodes the recovery model is: (a) any step may die (preemption, ICI
+flap, host OOM); (b) training must resume from the last checkpoint with a
+*bitwise-identical* data stream; (c) replacement nodes may change the device
+count (elastic).
+
+This module supplies the harness half:
+- ``run_with_restarts``: drives a step loop, catches ``Preemption`` (tests
+  inject it) or any transient error, restores from the CheckpointManager and
+  replays — the data pipeline is step-indexed so replay is exact.
+- capacity-padded static shapes (LIDER clusters, MoE buffers) are the
+  straggler story: every device executes the same program on the same byte
+  count per step, so there is no data-dependent long pole; the remaining
+  stragglers (hardware) are handled by restart.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from .checkpoint import CheckpointManager
+
+
+class Preemption(Exception):
+    """Injected/observed node loss."""
+
+
+def run_with_restarts(
+    make_state: Callable[[], dict],
+    step_fn: Callable[[dict, int], dict],
+    *,
+    n_steps: int,
+    manager: CheckpointManager,
+    checkpoint_every: int = 10,
+    max_restarts: int = 10,
+    on_restart: Callable[[int], None] | None = None,
+):
+    """Run ``step_fn(state, step) -> state`` to ``n_steps`` with restart
+    recovery. ``make_state`` builds the step-0 state (params, opt, rng...).
+
+    Returns (final_state, n_restarts). Restore picks the latest checkpoint;
+    steps re-execute from there (the step index keys the data pipeline, so
+    replayed batches are identical).
+    """
+    restarts = 0
+    while True:
+        latest = manager.latest_step()
+        if latest is None:
+            state, start = make_state(), 0
+        else:
+            _, state = manager.restore_latest(make_state())
+            start = latest
+        try:
+            for i in range(start, n_steps):
+                state = step_fn(state, i)
+                if (i + 1) % checkpoint_every == 0:
+                    manager.save(i + 1, state)
+            if n_steps % checkpoint_every != 0:
+                manager.save(n_steps, state)
+            return state, restarts
+        except Preemption:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart:
+                on_restart(restarts)

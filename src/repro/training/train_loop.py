@@ -1,0 +1,94 @@
+"""Train-step factory: grad accumulation, loss scaling, metrics.
+
+``make_train_step(loss_fn, opt_cfg, grad_accum)`` returns a jit-able
+``step(params, opt_state, batch) -> (params, opt_state, metrics)``.
+Microbatching runs as a ``lax.scan`` over the leading split of the batch —
+each microbatch's backward overlaps the next microbatch's forward in XLA's
+schedule, and only one microbatch of activations is ever live (the
+activation-memory knob for the big train shapes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt_lib
+
+
+def make_train_step(
+    loss_fn: Callable,
+    opt_cfg: opt_lib.OptimizerConfig,
+    *,
+    grad_accum: int = 1,
+):
+    """loss_fn(params, batch) -> scalar. Batch leaves must have leading dim
+    divisible by ``grad_accum``."""
+
+    def split(batch):
+        return jax.tree.map(
+            lambda x: x.reshape(grad_accum, x.shape[0] // grad_accum, *x.shape[1:]),
+            batch,
+        )
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = split(batch)
+
+            def body(acc, mb):
+                loss_acc, grad_acc = acc
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                return (
+                    loss_acc + loss,
+                    jax.tree.map(jnp.add, grad_acc, grads),
+                ), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), micro)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+
+        params, opt_state, metrics = opt_lib.apply_updates(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+def run(
+    step_fn,
+    params,
+    opt_state,
+    data_iter,
+    *,
+    n_steps: int,
+    log_every: int = 10,
+    checkpoint_manager=None,
+    checkpoint_every: int = 0,
+    start_step: int = 0,
+    log_fn=print,
+):
+    """Host-side loop: data, jitted step, periodic checkpoint. Returns final
+    (params, opt_state, history)."""
+    jstep = jax.jit(step_fn)
+    history = []
+    for i in range(start_step, n_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = jstep(params, opt_state, batch)
+        if log_every and (i % log_every == 0 or i == n_steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            log_fn(f"step {i}: " + " ".join(f"{k}={v:.4g}" for k, v in m.items()))
+        if checkpoint_manager and checkpoint_every and (i + 1) % checkpoint_every == 0:
+            checkpoint_manager.save(
+                i + 1, {"params": params, "opt_state": opt_state}
+            )
+    return params, opt_state, history

@@ -1,0 +1,80 @@
+"""Baseline ANN indexes: exactness of Flat, sanity of the approximate ones."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import (
+    build_ivfpq,
+    build_mplsh,
+    build_pq,
+    build_sklsh,
+    flat_search,
+    ivfpq_search,
+    mplsh_search,
+    pq_search,
+    sklsh_search,
+)
+from repro.core.baselines.pq import _decode, _encode
+from repro.core.utils import recall_at_k
+
+
+def test_flat_is_exact(corpus):
+    x, q, gt = corpus
+    res = flat_search(x, q, k=10)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(gt))
+    # chunk size must not matter
+    res2 = flat_search(x, q, k=10, chunk=1000)
+    np.testing.assert_array_equal(np.asarray(res2.ids), np.asarray(gt))
+
+
+def test_pq_reconstruction_improves_with_subspaces(corpus):
+    x, _, _ = corpus
+    errs = []
+    for m in (2, 8):
+        pq = build_pq(jax.random.PRNGKey(1), x, n_subspaces=m, bits=5, kmeans_iters=6)
+        recon = _decode(pq.codebooks, pq.codes)
+        errs.append(float(jnp.mean((recon - x) ** 2)))
+    assert errs[1] < errs[0]
+
+
+def test_pq_recall_reasonable(corpus):
+    x, q, gt = corpus
+    pq = build_pq(jax.random.PRNGKey(1), x, n_subspaces=8, bits=6, kmeans_iters=8)
+    r = float(recall_at_k(pq_search(pq, q, k=10).ids, gt))
+    assert r > 0.05  # quantized but far above random (10/4000)
+
+
+def test_opq_and_pcapq_build(corpus):
+    x, q, gt = corpus
+    opq = build_pq(jax.random.PRNGKey(1), x, n_subspaces=8, bits=5, kmeans_iters=5, opq_iters=1)
+    assert opq.rotation is not None
+    r = float(recall_at_k(pq_search(opq, q, k=10).ids, gt))
+    assert r > 0.05
+    ppq = build_pq(jax.random.PRNGKey(1), x, n_subspaces=8, bits=5, kmeans_iters=5, pca_dim=32)
+    assert ppq.rotation.shape == (64, 32)
+    assert float(recall_at_k(pq_search(ppq, q, k=10).ids, gt)) > 0.05
+
+
+def test_ivfpq_recall_improves_with_probes(corpus):
+    x, q, gt = corpus
+    ivf = build_ivfpq(jax.random.PRNGKey(2), x, n_subspaces=8, bits=6, kmeans_iters=8)
+    r2 = float(recall_at_k(ivfpq_search(ivf, q, k=10, n_probe=2).ids, gt))
+    r16 = float(recall_at_k(ivfpq_search(ivf, q, k=10, n_probe=16).ids, gt))
+    assert r16 >= r2
+    assert r16 > 0.15
+
+
+def test_sklsh_recall(corpus):
+    x, q, gt = corpus
+    sk = build_sklsh(jax.random.PRNGKey(3), x, n_arrays=16)
+    r = float(recall_at_k(sklsh_search(sk, x, q, k=10, n_candidates=100).ids, gt))
+    assert r > 0.5
+
+
+def test_mplsh_recall_and_probing(corpus):
+    x, q, gt = corpus
+    mp = build_mplsh(jax.random.PRNGKey(4), x, n_tables=16)
+    r1 = float(recall_at_k(mplsh_search(mp, x, q, k=10, n_probes=1).ids, gt))
+    r8 = float(recall_at_k(mplsh_search(mp, x, q, k=10, n_probes=8).ids, gt))
+    assert r8 >= r1
+    assert r8 > 0.6

@@ -1,0 +1,63 @@
+"""Core model (ESK-LSH + rescale + RMI) end-to-end search behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import core_model
+from repro.core.utils import recall_at_k
+
+
+def test_core_model_recall_vs_flat(corpus):
+    x, q, gt = corpus
+    cm = core_model.build_core_model(
+        jax.random.PRNGKey(1), x, n_arrays=8, n_leaves=8
+    )
+    res = core_model.search_core_model(cm, x, q, k=10, r0=8)
+    assert float(recall_at_k(res.ids, gt)) > 0.75
+
+
+def test_refine_not_worse(corpus):
+    x, q, gt = corpus
+    cm = core_model.build_core_model(jax.random.PRNGKey(1), x, n_arrays=8, n_leaves=8)
+    base = recall_at_k(core_model.search_core_model(cm, x, q, k=10, r0=4).ids, gt)
+    ref = recall_at_k(
+        core_model.search_core_model(cm, x, q, k=10, r0=4, refine=True).ids, gt
+    )
+    assert float(ref) >= float(base) - 0.02
+
+
+def test_larger_r0_improves_recall(corpus):
+    x, q, gt = corpus
+    cm = core_model.build_core_model(jax.random.PRNGKey(1), x, n_arrays=6, n_leaves=8)
+    r_small = recall_at_k(core_model.search_core_model(cm, x, q, k=10, r0=2).ids, gt)
+    r_large = recall_at_k(core_model.search_core_model(cm, x, q, k=10, r0=16).ids, gt)
+    assert float(r_large) >= float(r_small)
+
+
+def test_more_arrays_improve_recall(corpus):
+    """Paper Table 3: larger H -> better quality."""
+    x, q, gt = corpus
+    r = {}
+    for h in (2, 8):
+        cm = core_model.build_core_model(
+            jax.random.PRNGKey(2), x, n_arrays=h, n_leaves=8
+        )
+        r[h] = float(
+            recall_at_k(core_model.search_core_model(cm, x, q, k=10, r0=4).ids, gt)
+        )
+    assert r[8] >= r[2]
+
+
+def test_search_outputs_well_formed(corpus):
+    x, q, _ = corpus
+    cm = core_model.build_core_model(jax.random.PRNGKey(1), x, n_arrays=4, n_leaves=4)
+    res = core_model.search_core_model(cm, x, q, k=10, r0=4)
+    ids = np.asarray(res.ids)
+    scores = np.asarray(res.scores)
+    assert ids.shape == (q.shape[0], 10)
+    # scores sorted descending; ids valid & unique per row
+    assert (np.diff(scores, axis=1) <= 1e-6).all()
+    for row in ids:
+        v = row[row >= 0]
+        assert len(set(v.tolist())) == len(v)
+        assert (v < x.shape[0]).all()

@@ -1,0 +1,99 @@
+"""LIDER two-layer index: build integrity + end-to-end search quality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lider
+from repro.core.utils import recall_at_k
+
+CFG = lider.LiderConfig(
+    n_clusters=64, n_probe=8, n_arrays=4, n_leaves=4, kmeans_iters=10
+)
+
+
+@pytest.fixture(scope="module")
+def built(corpus):
+    x, q, gt = corpus
+    params = lider.build_lider(jax.random.PRNGKey(2), x, CFG)
+    return x, q, gt, params
+
+
+def test_build_integrity(built):
+    x, _, _, p = built
+    n = x.shape[0]
+    gids = np.asarray(p.cluster_gids)
+    valid = gids[gids >= 0]
+    # every point indexed exactly once (no capacity drops at default Lp)
+    assert len(valid) == n
+    assert len(set(valid.tolist())) == n
+    # cluster embeddings match the corpus rows
+    c, lp = gids.shape
+    embs = np.asarray(p.cluster_embs)
+    xs = np.asarray(x)
+    for ci in range(0, c, 13):
+        for li in range(0, lp, 17):
+            g = gids[ci, li]
+            if g >= 0:
+                np.testing.assert_allclose(embs[ci, li], xs[g], rtol=1e-6)
+    # sorted arrays are sorted with pads at the end
+    keys = np.asarray(p.sorted_keys)
+    pos = np.asarray(p.sorted_pos)
+    assert (np.diff(keys.astype(np.int64), axis=-1) >= 0).all()
+    sizes = np.asarray(p.cluster_sizes)
+    for ci in range(c):
+        row_pos = pos[ci]  # (H, Lp)
+        assert ((row_pos >= 0).sum(axis=-1) == sizes[ci]).all()
+
+
+def test_end_to_end_recall(built):
+    x, q, gt, p = built
+    out = lider.search_lider(p, q, k=10, n_probe=8, r0=8)
+    assert float(recall_at_k(out.ids, gt)) > 0.9
+
+
+def test_no_duplicates_and_sorted(built):
+    _, q, _, p = built
+    out = lider.search_lider(p, q, k=10, n_probe=8, r0=8)
+    ids = np.asarray(out.ids)
+    scores = np.asarray(out.scores)
+    assert (np.diff(scores, axis=1) <= 1e-6).all()
+    for row in ids:
+        v = row[row >= 0]
+        assert len(set(v.tolist())) == len(v)
+
+
+def test_more_probes_improve_recall(built):
+    """Paper Fig. 7: recall increases with c0."""
+    x, q, gt, p = built
+    r1 = float(recall_at_k(lider.search_lider(p, q, k=10, n_probe=1, r0=8).ids, gt))
+    r8 = float(recall_at_k(lider.search_lider(p, q, k=10, n_probe=8, r0=8).ids, gt))
+    assert r8 >= r1
+
+
+def test_refine_variant(built):
+    x, q, gt, p = built
+    out = lider.search_lider(p, q, k=10, n_probe=8, r0=8, refine=True)
+    assert float(recall_at_k(out.ids, gt)) > 0.9
+
+
+def test_capacity_overflow_drops_are_counted(corpus):
+    x, _, _ = corpus
+    cfg = lider.LiderConfig(
+        n_clusters=16, n_probe=4, n_arrays=2, n_leaves=2, kmeans_iters=5, capacity=64
+    )
+    p = lider.build_lider(jax.random.PRNGKey(3), x, cfg)
+    gids = np.asarray(p.cluster_gids)
+    kept = (gids >= 0).sum()
+    assert kept <= x.shape[0]
+    assert p.capacity == 64
+    # sizes clamped to capacity
+    assert (np.asarray(p.cluster_sizes) <= 64).all()
+
+
+def test_route_then_incluster_equals_search(built):
+    x, q, _, p = built
+    routed = lider.route_queries(p, q, n_probe=8, r0=4)
+    a = lider.incluster_search(p, q, routed.ids, k=10, r0=8)
+    b = lider.search_lider(p, q, k=10, n_probe=8, r0=8, r0_centroid=4)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))

@@ -1,0 +1,108 @@
+"""ESK-LSH properties: packing, linear order, and the paper's Lemmas 4.3/4.4
+for the extended hashkey distance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh
+
+
+@given(
+    st.integers(1, 31),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(m, value):
+    value = value % (2**m)
+    key = jnp.asarray([value], jnp.uint32)
+    bits = lsh.unpack_bits(key, m)
+    packed = lsh.pack_bits(bits)
+    assert int(packed[0]) == value
+
+
+@given(st.integers(2, 20), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_lexicographic_order_is_numeric_order(m, seed):
+    """SK-LSH's element-wise significant-first order == packed numeric order."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(32, m)).astype(np.uint32)
+    packed = np.asarray(lsh.pack_bits(jnp.asarray(bits)))
+    # lexicographic comparison of bit tuples must order like the integers
+    order_lex = sorted(range(32), key=lambda i: tuple(bits[i]))
+    order_num = list(np.argsort(packed, kind="stable"))
+    assert [int(packed[i]) for i in order_lex] == [int(packed[i]) for i in order_num]
+
+
+@given(st.integers(3, 24), st.integers(1, 8), st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_dist_e_linear_order_lemmas(m, b, seed):
+    """Paper Lemmas 4.3/4.4: for sorted hashkeys K <= K1 <= K2 the extended
+    distance satisfies dist_e(K2, K) >= dist_e(K1, K) (and mirrored)."""
+    b = min(b, m)
+    rng = np.random.default_rng(seed)
+    keys = np.sort(rng.integers(0, 2**m, size=8).astype(np.uint32))
+    k, k1, k2 = keys[0], keys[3], keys[7]
+    d21 = float(lsh.dist_e(jnp.uint32(k2), jnp.uint32(k), m, b))
+    d11 = float(lsh.dist_e(jnp.uint32(k1), jnp.uint32(k), m, b))
+    assert d21 >= d11 - 1e-6
+    # mirrored (Lemma 4.4): K2 <= K1 <= K ordered descending
+    d_far = float(lsh.dist_e(jnp.uint32(keys[0]), jnp.uint32(keys[7]), m, b))
+    d_near = float(lsh.dist_e(jnp.uint32(keys[4]), jnp.uint32(keys[7]), m, b))
+    assert d_far >= d_near - 1e-6
+
+
+def test_dist_e_fixes_low_resolution_problem():
+    """The paper's Sec 4.2 example: K_q=000000, K_1=111111, K_2=100000.
+    Original KD cannot separate them; dist_e must rank K_2 closer."""
+    m = 6
+    kq = jnp.uint32(0b000000)
+    k1 = jnp.uint32(0b111111)
+    k2 = jnp.uint32(0b100000)
+    d1 = float(lsh.dist_e(kq, k1, m, 3))
+    d2 = float(lsh.dist_e(kq, k2, m, 3))
+    assert d1 > d2
+    # both share zero common prefix -> same KL=6; difference is in KD_e
+    assert int(d1) == 6 and int(d2) == 6
+
+
+def test_common_prefix_len():
+    m = 8
+    assert int(lsh.common_prefix_len(jnp.uint32(0b10110000), jnp.uint32(0b10111111), m)) == 4
+    assert int(lsh.common_prefix_len(jnp.uint32(5), jnp.uint32(5), m)) == m
+    assert int(lsh.common_prefix_len(jnp.uint32(0), jnp.uint32(0b10000000), m)) == 0
+
+
+def test_hash_collision_probability_monotone_in_angle():
+    """Charikar LSH: P[h(u)=h(v)] = 1 - theta/pi — closer vectors share more
+    hash bits (statistical check, fixed seed)."""
+    rng = jax.random.PRNGKey(3)
+    params = lsh.make_lsh(rng, 32, n_arrays=1, key_len=31)
+    base = jax.random.normal(jax.random.PRNGKey(4), (1, 32))
+    near = base + 0.1 * jax.random.normal(jax.random.PRNGKey(5), (1, 32))
+    far = jax.random.normal(jax.random.PRNGKey(6), (1, 32))
+    kb, kn, kf = (lsh.hash_vectors(params, v)[0, 0] for v in (base, near, far))
+    ham = lambda a, b: int(jax.lax.population_count(jnp.uint32(a) ^ jnp.uint32(b)))
+    assert ham(kb, kn) < ham(kb, kf)
+
+
+def test_query_position_exact():
+    keys = jnp.asarray([1, 5, 9, 9, 20], jnp.uint32)
+    assert int(lsh.query_position(keys, jnp.uint32(9))) == 2
+    assert int(lsh.query_position(keys, jnp.uint32(0))) == 0
+    assert int(lsh.query_position(keys, jnp.uint32(25))) == 5
+
+
+def test_sorted_arrays_group_similar_vectors(corpus):
+    """Locality property: adjacent keys in a sorted array are closer on
+    average than random pairs."""
+    x, _, _ = corpus
+    params = lsh.make_lsh(jax.random.PRNGKey(7), x.shape[1], n_arrays=1, key_len=20)
+    keys = lsh.hash_vectors(params, x)[:, 0]
+    skeys, order = lsh.sort_hashkeys(keys)
+    xs = x[order]
+    adjacent_sim = jnp.mean(jnp.sum(xs[:-1] * xs[1:], axis=-1))
+    perm = jax.random.permutation(jax.random.PRNGKey(8), x.shape[0])
+    random_sim = jnp.mean(jnp.sum(x * x[perm], axis=-1))
+    assert float(adjacent_sim) > float(random_sim) + 0.1

@@ -1,0 +1,39 @@
+"""Serving engine: batching, padding, result routing, AQT accounting."""
+import jax
+import numpy as np
+
+from repro.core import lider
+from repro.core.baselines import flat_search
+from repro.serving import RetrievalEngine, make_backend
+
+
+def test_engine_routes_results_correctly(corpus):
+    x, q, _ = corpus
+    search = make_backend("flat", None, x)
+    engine = RetrievalEngine(search, batch_size=16, k=5, dim=x.shape[1])
+    engine.warmup()
+    qs = np.asarray(q)[:40]  # not a multiple of batch size -> padding path
+    rids = [engine.submit(v) for v in qs]
+    engine.drain()
+    gt = flat_search(x, q[:40], k=5)
+    for i, rid in enumerate(rids):
+        ids, scores = engine.result(rid)
+        np.testing.assert_array_equal(ids, np.asarray(gt.ids)[i])
+    assert engine.stats.n_queries == 40
+    assert engine.stats.n_batches == 3  # ceil(40/16)
+    assert engine.stats.aqt > 0
+
+
+def test_engine_lider_backend(corpus):
+    x, q, gt = corpus
+    cfg = lider.LiderConfig(n_clusters=32, n_probe=8, n_arrays=4, n_leaves=4, kmeans_iters=8)
+    index = lider.build_lider(jax.random.PRNGKey(0), x, cfg)
+    search = make_backend("lider", index, n_probe=8, r0=8)
+    engine = RetrievalEngine(search, batch_size=32, k=10, dim=x.shape[1])
+    rids = [engine.submit(v) for v in np.asarray(q)[:32]]
+    engine.drain()
+    hits = 0
+    for i, rid in enumerate(rids):
+        ids, _ = engine.result(rid)
+        hits += len(set(ids.tolist()) & set(np.asarray(gt)[i].tolist()))
+    assert hits / (32 * 10) > 0.8

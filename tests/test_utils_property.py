@@ -1,0 +1,60 @@
+"""Property tests for the shared top-k machinery (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.utils import dedup_topk, merge_topk, recall_at_k
+
+
+@given(st.integers(0, 5000), st.integers(1, 40), st.integers(1, 12))
+@settings(max_examples=40, deadline=None)
+def test_dedup_topk_matches_bruteforce(seed, c, k):
+    rng = np.random.default_rng(seed)
+    ids = rng.integers(-1, 10, size=(3, c)).astype(np.int32)
+    # equal ids must carry equal scores (they denote the same vector)
+    base_scores = rng.normal(size=11).astype(np.float32)
+    scores = np.where(ids >= 0, base_scores[np.maximum(ids, 0)], -np.inf)
+    got_ids, got_scores = dedup_topk(jnp.asarray(ids), jnp.asarray(scores), k)
+    got_ids = np.asarray(got_ids)
+    got_scores = np.asarray(got_scores)
+    for row in range(3):
+        uniq = {i: s for i, s in zip(ids[row], scores[row]) if i >= 0}
+        want = sorted(uniq.items(), key=lambda kv: -kv[1])[:k]
+        got_valid = [(i, s) for i, s in zip(got_ids[row], got_scores[row]) if i >= 0]
+        assert len(got_valid) == len(want)
+        assert {i for i, _ in got_valid} == {i for i, _ in want}
+        np.testing.assert_allclose(
+            sorted([s for _, s in got_valid], reverse=True),
+            [s for _, s in want],
+            rtol=1e-6,
+        )
+        # no duplicates, scores descending over the valid prefix
+        v = got_ids[row][got_ids[row] >= 0]
+        assert len(set(v.tolist())) == len(v)
+        fin = got_scores[row][np.isfinite(got_scores[row])]
+        assert (np.diff(fin) <= 1e-9).all()
+
+
+@given(st.integers(0, 1000), st.integers(1, 4), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_merge_topk_equals_global(seed, shards, k):
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(1000)[: shards * k].reshape(1, shards, k).astype(np.int32)
+    scores = rng.normal(size=(1, shards, k)).astype(np.float32)
+    # per-shard lists must be sorted descending (as produced by top_k)
+    order = np.argsort(-scores, axis=-1)
+    scores = np.take_along_axis(scores, order, -1)
+    ids = np.take_along_axis(ids, order, -1)
+    m_ids, m_scores = merge_topk(jnp.asarray(ids), jnp.asarray(scores), k)
+    flat = sorted(
+        zip(ids.reshape(-1), scores.reshape(-1)), key=lambda t: -t[1]
+    )[:k]
+    np.testing.assert_allclose(np.asarray(m_scores)[0], [s for _, s in flat], rtol=1e-6)
+
+
+def test_recall_at_k_basics():
+    pred = jnp.asarray([[1, 2, 3], [4, 5, -1]])
+    true = jnp.asarray([[1, 9, 3], [4, 5, 6]])
+    r = float(recall_at_k(pred, true))
+    assert abs(r - (2 / 3 + 2 / 3) / 2) < 1e-6
