@@ -21,8 +21,8 @@ import jax.numpy as jnp
 from . import lsh as lsh_lib
 from . import rescale as rescale_lib
 from . import rmi as rmi_lib
+from ..kernels.ops import verify_topk_op
 from .types import pytree_dataclass
-from .utils import NEG_INF, dedup_topk
 
 
 class TopK(NamedTuple):
@@ -106,16 +106,6 @@ def candidate_windows(
     return jnp.moveaxis(cand, 0, 1).reshape(positions.shape[1], -1)
 
 
-def score_candidates(
-    embs: jnp.ndarray, cand_ids: jnp.ndarray, queries: jnp.ndarray
-) -> jnp.ndarray:
-    """Exact verification: inner product of each candidate with its query."""
-    safe = jnp.maximum(cand_ids, 0)
-    cand = embs[safe]  # (B, C, d)
-    scores = jnp.einsum("bcd,bd->bc", cand, queries)
-    return jnp.where(cand_ids < 0, NEG_INF, scores)
-
-
 def search_core_model(
     cm: CoreModelParams,
     embs: jnp.ndarray,
@@ -124,10 +114,16 @@ def search_core_model(
     k: int,
     r0: int = 4,
     refine: bool = False,
+    use_fused: bool | None = None,
 ) -> TopK:
-    """Full paper search path on a single core model."""
+    """Full paper search path on a single core model.
+
+    Verification (gather candidate rows -> exact scores -> dedup top-k) runs
+    through ``verify_topk_op``: a single fused VMEM-resident Pallas pass on
+    TPU, the materialized reference elsewhere (``use_fused`` overrides;
+    DESIGN.md §Verification-kernel).
+    """
     positions = predict_positions(cm, queries, refine=refine)
     cand_ids = candidate_windows(cm, positions, width=r0 * k)
-    scores = score_candidates(embs, cand_ids, queries)
-    ids, sc = dedup_topk(cand_ids, scores, k)
+    ids, sc = verify_topk_op(embs, cand_ids, queries, k=k, use_pallas=use_fused)
     return TopK(ids=ids, scores=sc)

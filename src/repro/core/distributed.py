@@ -79,12 +79,18 @@ def make_sharded_search(
     cluster_axes: Sequence[str] = ("data",),
     query_axes: Sequence[str] = ("model",),
     refine: bool = False,
+    use_fused: bool | None = None,
 ):
     """Build the jitted multi-device search fn: (params, queries) -> (TopK, drops).
 
     ``params_like`` supplies the pytree structure/shapes (ShapeDtypeStructs are
     fine — used by the dry-run). Returned fn expects the query batch to be a
     multiple of the query-axis size.
+
+    ``use_fused`` selects the verification path inside the shard_map body
+    (None -> fused Pallas kernel on TPU, materialized reference elsewhere;
+    DESIGN.md §Verification-kernel). Both the per-pair in-cluster search and
+    the replicated centroid routing honor it.
     """
     caxes = tuple(cluster_axes)
     qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
@@ -107,6 +113,7 @@ def make_sharded_search(
             q_loc,
             k=n_probe,
             r0=r0_centroid,
+            use_fused=use_fused,
         )
         cids = routed.ids  # (B_loc, n_probe) global cluster ids
         b_loc, p = cids.shape
@@ -135,6 +142,7 @@ def make_sharded_search(
             k=k,
             r0=r0,
             refine=refine,
+            use_fused=use_fused,
         )  # (cap, k)
 
         # Scatter per-pair results back to their (query, probe-slot) rows.

@@ -29,9 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
+from ..kernels.ops import verify_topk_op
 from .core_model import CoreModelParams, TopK, build_core_model, search_core_model
 from .types import pytree_dataclass
-from .utils import NEG_INF, dedup_topk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +52,11 @@ class LiderConfig:
     capacity: int | None = None  # Lp cap; None -> max cluster size (no drops)
     pad_multiple: int = 8
     refine: bool = False  # beyond-paper last-mile searchsorted correction
+    # Verification-kernel escape hatch: None -> fused Pallas pass on TPU,
+    # materialized reference elsewhere; True/False forces either path.
+    # Like n_probe/refine, search entry points take this as a kwarg and
+    # launchers feed it from the config (DESIGN.md §Verification-kernel).
+    use_fused: bool | None = None
 
 
 @pytree_dataclass
@@ -155,11 +160,17 @@ def build_lider(
 
 
 def route_queries(
-    params: LiderParams, queries: jnp.ndarray, *, n_probe: int, r0: int = 4
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    n_probe: int,
+    r0: int = 4,
+    use_fused: bool | None = None,
 ) -> TopK:
     """Layer-1: centroids retriever -> (B, n_probe) cluster ids + scores."""
     return search_core_model(
-        params.centroid_cm, params.centroids, queries, k=n_probe, r0=r0
+        params.centroid_cm, params.centroids, queries, k=n_probe, r0=r0,
+        use_fused=use_fused,
     )
 
 
@@ -184,12 +195,18 @@ def incluster_search(
     r0: int = 4,
     refine: bool = False,
     merge: bool = True,
+    use_fused: bool | None = None,
 ) -> TopK:
     """Layer-2: search the probed clusters for each query.
 
     ``queries``: (B, d); ``cids``: (B, P) cluster ids (-1 = unused probe slot).
     With ``merge=False`` returns the per-pair top-k (B, P, k) — the shape the
     distributed capacity-dispatch path scatters back before merging.
+
+    Verification goes through ``verify_topk_op`` (``use_fused`` as in
+    ``LiderConfig``): the fused kernel streams the gathered rows through VMEM
+    and emits only the (B, k) result, instead of materializing the
+    (B, P, H, R, d) candidate tensor in HBM before the einsum.
     """
     c, h, lp = params.sorted_keys.shape
     w = params.in_rmi.n_leaves
@@ -241,29 +258,39 @@ def incluster_search(
     flat_emb = safe_cid[:, :, None, None] * lp + jnp.maximum(local_pos, 0)
     gids = jnp.take(params.cluster_gids.reshape(-1), flat_emb)
     gids = jnp.where(valid, gids, -1)
-    cand = jnp.take(
-        params.cluster_embs.reshape(c * lp, -1), flat_emb.reshape(b, -1), axis=0
-    ).reshape(b, p, h, r, -1)
-    # Score in the embedding storage dtype (bf16 index keeps the MXU inputs
-    # bf16 — upcasting `cand` would double the gather read traffic), with
-    # fp32 accumulation for a stable top-k ordering.
-    scores = jnp.einsum(
-        "bphrd,bd->bphr",
-        cand,
-        queries.astype(cand.dtype),
-        preferred_element_type=jnp.float32,
-    )
-    scores = jnp.where(valid, scores, NEG_INF)
 
+    # Verification: gather rows from the flat (c*Lp, d) table (row_ids =
+    # flat_emb), dedup/report by global passage id (out_ids = gids, -1 where
+    # invalid). Scoring happens in the embedding storage dtype (bf16 stays
+    # bf16 on the MXU) with fp32 accumulation for a stable top-k ordering.
+    flat_table = params.cluster_embs.reshape(c * lp, -1)
     if merge:
-        ids, sc = dedup_topk(gids.reshape(b, -1), scores.reshape(b, -1), k)
+        ids, sc = verify_topk_op(
+            flat_table,
+            flat_emb.reshape(b, -1),
+            queries,
+            k=k,
+            out_ids=gids.reshape(b, -1),
+            use_pallas=use_fused,
+        )
         return TopK(ids=ids, scores=sc)
-    ids, sc = dedup_topk(gids.reshape(b, p, -1), scores.reshape(b, p, -1), k)
-    return TopK(ids=ids, scores=sc)
+    # Per-pair top-k: flatten (query, probe) pairs into the batch axis so the
+    # same kernel covers the shape the distributed path scatters back.
+    pair_q = jnp.broadcast_to(queries[:, None, :], (b, p, queries.shape[-1]))
+    ids, sc = verify_topk_op(
+        flat_table,
+        flat_emb.reshape(b * p, -1),
+        pair_q.reshape(b * p, -1),
+        k=k,
+        out_ids=gids.reshape(b * p, -1),
+        use_pallas=use_fused,
+    )
+    return TopK(ids=ids.reshape(b, p, k), scores=sc.reshape(b, p, k))
 
 
 @partial(
-    jax.jit, static_argnames=("k", "n_probe", "r0", "r0_centroid", "refine")
+    jax.jit,
+    static_argnames=("k", "n_probe", "r0", "r0_centroid", "refine", "use_fused"),
 )
 def search_lider(
     params: LiderParams,
@@ -274,9 +301,13 @@ def search_lider(
     r0: int = 4,
     r0_centroid: int = 4,
     refine: bool = False,
+    use_fused: bool | None = None,
 ) -> TopK:
     """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device."""
-    routed = route_queries(params, queries, n_probe=n_probe, r0=r0_centroid)
+    routed = route_queries(
+        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused
+    )
     return incluster_search(
-        params, queries, routed.ids, k=k, r0=r0, refine=refine
+        params, queries, routed.ids, k=k, r0=r0, refine=refine,
+        use_fused=use_fused,
     )

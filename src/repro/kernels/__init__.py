@@ -2,14 +2,17 @@
 
 - ``lsh_hash``      — fused projection + sign + bit-pack (build & query hash)
 - ``kmeans_assign`` — tiled distance + running argmin (Stage-1 Lloyd)
-- ``score_gather``  — scalar-prefetch gather + dot (candidate verification)
+- ``fused_verify``  — gather-score-reduce candidate verification: scalar-
+  prefetched ids steer double-buffered row DMAs, scores stay in VMEM, and a
+  streaming dedup top-k is the only HBM output (DESIGN.md
+  §Verification-kernel)
 
 ``ops`` holds the jit'd dispatchers (TPU -> kernel, CPU -> ``ref`` oracle);
 ``ref`` holds the pure-jnp oracles the tests sweep against.
 """
 from .lsh_hash import lsh_hash
 from .kmeans_assign import kmeans_assign
-from .score_gather import score_gather
+from .fused_verify import fused_verify
 from . import ops, ref
 
-__all__ = ["lsh_hash", "kmeans_assign", "score_gather", "ops", "ref"]
+__all__ = ["lsh_hash", "kmeans_assign", "fused_verify", "ops", "ref"]

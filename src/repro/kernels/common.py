@@ -1,0 +1,16 @@
+"""Backend-dispatch policy shared by every kernel and the op wrappers."""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> compile on TPU, interpret elsewhere (the kernels are TPU
+    targets; off-TPU they only run for validation)."""
+    if interpret is None:
+        return not on_tpu()
+    return interpret

@@ -1,0 +1,209 @@
+"""Fused gather-score-reduce verification kernel (the LIDER hot path).
+
+LIDER's end-to-end AQT is dominated by candidate verification (paper
+Sec. 3.1/3.3.2): after the RMI predicts positions, each query gathers its
+``C = P*H*R`` candidate embeddings and scores them exactly. The materialized
+formulation (``ref.verify_topk_ref``) writes a ``(B, C, d)`` candidate tensor
+to HBM, re-reads it for the einsum, and round-trips a ``(B, C)`` score matrix
+through the dedup/top-k — all traffic a fused kernel never needs to emit
+(DESIGN.md §Verification-kernel has the byte model).
+
+This kernel makes verification a single VMEM-resident pass per query:
+
+- candidate row ids are **scalar-prefetched** (SMEM) so the kernel can steer
+  row-granularity DMAs itself;
+- each grid step streams ``block_c`` embedding rows HBM->VMEM with
+  **double-buffered async copies** (``pltpu.make_async_copy``): block ``j+1``
+  is in flight while block ``j`` is scored;
+- scoring runs on the MXU in the embedding storage dtype (bf16 stays bf16)
+  with **fp32 accumulation**;
+- a masked **streaming top-k accumulator** lives in VMEM and merges each
+  block with duplicate suppression (same semantics as
+  ``core.utils.dedup_topk``: duplicates of one id carry equal scores, so
+  keeping the first-selected occurrence is exact).
+
+Only the ``(B, k)`` result ever leaves the chip; neither the candidate tensor
+nor the score matrix exists in HBM.
+
+``row_ids`` index the embedding table (what to gather); ``out_ids`` are the
+ids to *report and dedup by* (defaults to ``row_ids``). LIDER passes flat
+``(cluster, slot)`` rows as ``row_ids`` and global passage ids as
+``out_ids``. ``out_ids < 0`` marks padding (scored ``-inf``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import resolve_interpret
+
+NEG_INF = float("-inf")  # python float: jnp scalars would init the backend
+
+
+def _fused_verify_kernel(
+    # scalar prefetch
+    row_ids_s,
+    # inputs
+    q_ref,
+    oid_ref,
+    emb_hbm,
+    # outputs
+    ids_out,
+    sc_out,
+    # scratch
+    cand,
+    acc_ids,
+    acc_sc,
+    sem,
+    *,
+    block_c: int,
+    k: int,
+    n_blocks: int,
+):
+    bi = pl.program_id(0)
+    cj = pl.program_id(1)
+    slot = jax.lax.rem(cj, 2)
+    nslot = jax.lax.rem(cj + 1, 2)
+
+    def row_dma(blk, s, i):
+        row = row_ids_s[bi, blk * block_c + i]
+        return pltpu.make_async_copy(emb_hbm.at[row], cand.at[s, i], sem.at[s])
+
+    def start_block(blk, s):
+        def body(i, _):
+            row_dma(blk, s, i).start()
+            return 0
+
+        jax.lax.fori_loop(0, block_c, body, 0)
+
+    @pl.when(cj == 0)
+    def _():
+        # New query row: reset the accumulator, warm up the first block.
+        acc_sc[...] = jnp.full_like(acc_sc, NEG_INF)
+        acc_ids[...] = jnp.full_like(acc_ids, -1)
+        start_block(0, slot)
+
+    # Double buffering: block cj+1 goes in flight before we block on cj. The
+    # nslot buffer was consumed at step cj-1, so the overwrite is safe.
+    @pl.when(cj + 1 < n_blocks)
+    def _():
+        start_block(cj + 1, nslot)
+
+    def wait_body(i, _):
+        row_dma(cj, slot, i).wait()
+        return 0
+
+    jax.lax.fori_loop(0, block_c, wait_body, 0)
+
+    # Score the resident block: storage-dtype MXU inputs, fp32 accumulation.
+    q = q_ref[...].astype(cand.dtype)  # (1, d)
+    scores = jax.lax.dot_general(
+        q,
+        cand[slot],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, block_c)
+    oid = oid_ref[...]  # (1, block_c)
+    scores = jnp.where(oid >= 0, scores, NEG_INF)
+
+    # Streaming top-k merge with duplicate suppression: select the max k
+    # times from [accumulator ++ block]; each selection kills every copy of
+    # the selected id (duplicates carry equal scores, so this is exact).
+    # Score ties between distinct ids break toward the smallest id — the
+    # order ``dedup_topk`` produces (stable top_k over id-sorted candidates).
+    csc0 = jnp.concatenate([acc_sc[...], scores], axis=1)  # (1, L)
+    cid = jnp.concatenate([acc_ids[...], oid], axis=1)  # (1, L)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def sel_body(i, carry):
+        csc, asc, aid = carry
+        m = jnp.max(csc)
+        tie = csc == m  # all copies of the winner are ties (equal scores)
+        sid = jnp.min(jnp.where(tie, cid, jnp.int32(2**31 - 1)))
+        sid = jnp.where(jnp.isneginf(m), jnp.int32(-1), sid).astype(jnp.int32)
+        kill = (cid == sid) & (sid >= 0)
+        csc = jnp.where(kill, NEG_INF, csc)
+        asc = jnp.where(iota_k == i, m, asc)
+        aid = jnp.where(iota_k == i, sid, aid)
+        return csc, asc, aid
+
+    init = (
+        csc0,
+        jnp.full((1, k), NEG_INF, jnp.float32),
+        jnp.full((1, k), -1, jnp.int32),
+    )
+    _, asc, aid = jax.lax.fori_loop(0, k, sel_body, init)
+    acc_sc[...] = asc
+    acc_ids[...] = aid
+
+    @pl.when(cj == n_blocks - 1)
+    def _():
+        ids_out[...] = acc_ids[...]
+        sc_out[...] = acc_sc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_c", "interpret"))
+def fused_verify(
+    embs: jnp.ndarray,
+    row_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    out_ids: jnp.ndarray | None = None,
+    block_c: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, d) table, (B, C) rows, (B, d) queries -> ((B, k) ids, (B, k) f32).
+
+    Returns the deduplicated top-k by ``out_ids`` (default ``row_ids``),
+    scores descending, padded with (-1, -inf) when fewer than ``k`` unique
+    valid candidates exist. ``out_ids < 0`` marks invalid slots.
+    """
+    interpret = resolve_interpret(interpret)
+    if out_ids is None:
+        out_ids = row_ids
+    b, c = row_ids.shape
+    n, d = embs.shape
+    bc = min(block_c, c)
+    pad = (-c) % bc
+    if pad:
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)))
+        out_ids = jnp.pad(out_ids, ((0, 0), (0, pad)), constant_values=-1)
+    n_blocks = (c + pad) // bc
+    safe_rows = jnp.clip(row_ids, 0, n - 1).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bi, cj, ids: (bi, 0)),
+            pl.BlockSpec((1, bc), lambda bi, cj, ids: (bi, cj)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # embs stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda bi, cj, ids: (bi, 0)),
+            pl.BlockSpec((1, k), lambda bi, cj, ids: (bi, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bc, d), embs.dtype),  # double-buffered rows
+            pltpu.VMEM((1, k), jnp.int32),  # top-k id accumulator
+            pltpu.VMEM((1, k), jnp.float32),  # top-k score accumulator
+            pltpu.SemaphoreType.DMA((2,)),  # one shared sem per buffer slot
+        ],
+    )
+    ids, scores = pl.pallas_call(
+        functools.partial(
+            _fused_verify_kernel, block_c=bc, k=k, n_blocks=n_blocks
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(safe_rows, queries, out_ids.astype(jnp.int32), embs)
+    return ids, scores

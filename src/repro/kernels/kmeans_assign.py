@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import resolve_interpret
+
 _F32_MAX = 3.4e38  # python float: jnp scalars would be captured consts
 
 
@@ -56,9 +58,14 @@ def kmeans_assign(
     *,
     block_n: int = 512,
     block_c: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """(N, d), (c, d) -> (assignment (N,) int32, min squared-L2 (N,) f32)."""
+    """(N, d), (c, d) -> (assignment (N,) int32, min squared-L2 (N,) f32).
+
+    ``interpret=None`` resolves to "not on TPU" (matching ``kernels/ops.py``)
+    so direct calls compile on TPU instead of silently interpreting.
+    """
+    interpret = resolve_interpret(interpret)
     n, d = x.shape
     c = centroids.shape[0]
     block_n = min(block_n, max(8, n))

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import resolve_interpret
+
 
 def _lsh_hash_kernel(x_ref, proj_ref, out_ref, *, n_arrays: int, key_len: int):
     x = x_ref[...].astype(jnp.float32)  # (block_n, d)
@@ -44,9 +46,14 @@ def lsh_hash(
     n_arrays: int,
     key_len: int,
     block_n: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """(N, d) float x (d, H*M) float -> (N, H) uint32 packed hashkeys."""
+    """(N, d) float x (d, H*M) float -> (N, H) uint32 packed hashkeys.
+
+    ``interpret=None`` resolves to "not on TPU" (matching ``kernels/ops.py``)
+    so direct calls compile on TPU instead of silently interpreting.
+    """
+    interpret = resolve_interpret(interpret)
     n, d = x.shape
     hm = proj.shape[1]
     assert hm == n_arrays * key_len

@@ -6,17 +6,13 @@ executed for validation via ``interpret=True`` (tests do this explicitly).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from . import ref
+from .common import on_tpu as _on_tpu
+from .fused_verify import fused_verify
 from .kmeans_assign import kmeans_assign
 from .lsh_hash import lsh_hash
-from .score_gather import score_gather
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def lsh_hash_op(
@@ -46,15 +42,33 @@ def kmeans_assign_op(
     return ref.kmeans_assign_ref(x, centroids)
 
 
-def score_gather_op(
+def verify_topk_op(
     embs: jnp.ndarray,
-    cand_ids: jnp.ndarray,
+    row_ids: jnp.ndarray,
     queries: jnp.ndarray,
     *,
+    k: int,
+    out_ids: jnp.ndarray | None = None,
+    block_c: int = 256,
     use_pallas: bool | None = None,
-) -> jnp.ndarray:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidate verification -> deduplicated top-k, (B, k) ids + scores.
+
+    Pallas: single VMEM-resident gather-score-reduce pass (``fused_verify``).
+    Reference: materialize-then-einsum (``ref.verify_topk_ref``). Both share
+    exact semantics — dedup by ``out_ids`` (< 0 == padding), descending
+    scores, (-1, -inf) fill past the unique-valid count.
+    """
     if use_pallas is None:
         use_pallas = _on_tpu()
     if use_pallas:
-        return score_gather(embs, cand_ids, queries, interpret=not _on_tpu())
-    return ref.score_gather_ref(embs, cand_ids, queries)
+        return fused_verify(
+            embs,
+            row_ids,
+            queries,
+            k=k,
+            out_ids=out_ids,
+            block_c=block_c,
+            interpret=not _on_tpu(),
+        )
+    return ref.verify_topk_ref(embs, row_ids, queries, k=k, out_ids=out_ids)

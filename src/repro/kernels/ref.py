@@ -36,12 +36,33 @@ def kmeans_assign_ref(
     return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)
 
 
-def score_gather_ref(
-    embs: jnp.ndarray, cand_ids: jnp.ndarray, queries: jnp.ndarray
-) -> jnp.ndarray:
-    """Candidate verification: (N,d) table, (B,C) ids, (B,d) queries -> (B,C)
-    inner-product scores, -inf where id < 0."""
-    safe = jnp.maximum(cand_ids, 0)
-    cand = embs[safe].astype(jnp.float32)
-    scores = jnp.einsum("bcd,bd->bc", cand, queries.astype(jnp.float32))
-    return jnp.where(cand_ids < 0, -jnp.inf, scores)
+def verify_topk_ref(
+    embs: jnp.ndarray,
+    row_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    out_ids: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialize-then-einsum verification: the oracle for ``fused_verify``.
+
+    Gathers a (B, C, d) candidate tensor, scores it (storage-dtype MXU
+    inputs, fp32 accumulation — identical math to the fused kernel), then
+    dedup-top-ks by ``out_ids`` (default ``row_ids``; < 0 marks padding).
+    This is exactly the HBM-materialized path the fused kernel replaces, so
+    it doubles as the unfused baseline in benchmarks/kernel_verify.py.
+    """
+    from ..core.utils import NEG_INF, dedup_topk
+
+    if out_ids is None:
+        out_ids = row_ids
+    safe = jnp.maximum(row_ids, 0)
+    cand = embs[safe]  # (B, C, d) — the materialization being eliminated
+    scores = jnp.einsum(
+        "bcd,bd->bc",
+        cand,
+        queries.astype(cand.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    scores = jnp.where(out_ids < 0, NEG_INF, scores)
+    return dedup_topk(out_ids, scores, k)

@@ -36,8 +36,17 @@ def main() -> None:
     ap.add_argument("--n-clusters", type=int, default=64)
     ap.add_argument("--n-probe", type=int, default=8)
     ap.add_argument("--refine", action="store_true")
+    ap.add_argument(
+        "--use-fused",
+        choices=["auto", "on", "off"],
+        default="auto",
+        help="verification kernel: fused Pallas pass (on), materialized "
+        "reference (off), or backend-dispatch (auto; DESIGN.md "
+        "§Verification-kernel)",
+    )
     ap.add_argument("--embeddings", default=None, help=".npy drop-in corpus")
     args = ap.parse_args()
+    use_fused = {"auto": None, "on": True, "off": False}[args.use_fused]
 
     if args.embeddings:
         embs = synthetic.load_embeddings(args.embeddings)
@@ -49,9 +58,15 @@ def main() -> None:
     index = None
     if args.backend == "lider":
         cfg = lider_lib.LiderConfig(
-            n_clusters=args.n_clusters, n_probe=args.n_probe, refine=args.refine
+            n_clusters=args.n_clusters,
+            n_probe=args.n_probe,
+            refine=args.refine,
+            use_fused=use_fused,
         )
         index = lider_lib.build_lider(jax.random.PRNGKey(0), embs, cfg)
+        # Config is the single source for the search-time knobs below
+        # (same convention as n_probe/refine).
+        use_fused = cfg.use_fused
     elif args.backend == "pq":
         index = build_pq(jax.random.PRNGKey(0), embs)
     elif args.backend == "ivfpq":
@@ -69,6 +84,7 @@ def main() -> None:
         embs,
         n_probe=args.n_probe,
         refine=args.refine,
+        use_fused=use_fused,
     )
     engine = RetrievalEngine(
         search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1]
@@ -78,7 +94,8 @@ def main() -> None:
     engine.drain()
     print(
         f"[serve] {engine.stats.n_queries} queries in "
-        f"{engine.stats.total_time_s:.3f}s -> AQT={engine.stats.aqt*1e3:.3f} ms"
+        f"{engine.stats.total_time_s:.3f}s -> AQT={engine.stats.aqt*1e3:.3f} ms "
+        f"(padding {engine.stats.padding_fraction:.1%})"
     )
 
     gt = flat_search(embs, queries, k=args.k)

@@ -33,10 +33,16 @@ class EngineStats:
     n_queries: int = 0
     n_batches: int = 0
     total_time_s: float = 0.0
+    n_padded: int = 0  # pad slots executed for partial batches
 
     @property
     def aqt(self) -> float:
         return self.total_time_s / max(self.n_queries, 1)
+
+    @property
+    def padding_fraction(self) -> float:
+        """Fraction of executed batch slots that were padding (wasted work)."""
+        return self.n_padded / max(self.n_queries + self.n_padded, 1)
 
 
 def make_backend(kind: str, index, embs: jnp.ndarray | None = None, **kw) -> Callable:
@@ -50,6 +56,7 @@ def make_backend(kind: str, index, embs: jnp.ndarray | None = None, **kw) -> Cal
                 n_probe=kw.get("n_probe", 20),
                 r0=kw.get("r0", 4),
                 refine=kw.get("refine", False),
+                use_fused=kw.get("use_fused"),
             )
     elif kind == "flat":
         def search(q, k):
@@ -83,6 +90,9 @@ class RetrievalEngine:
         self.results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self.stats = EngineStats()
         self._next_id = 0
+        # Preallocated padded batch buffer: drain fills it in place instead
+        # of allocating (batch, dim) floats per batch.
+        self._batch_buf = np.zeros((batch_size, dim), np.float32)
 
     def warmup(self):
         q = jnp.zeros((self.batch_size, self.dim), jnp.float32)
@@ -100,16 +110,21 @@ class RetrievalEngine:
             chunk = self.queue[: self.batch_size]
             self.queue = self.queue[self.batch_size:]
             n = len(chunk)
-            q = np.zeros((self.batch_size, self.dim), np.float32)
+            q = self._batch_buf
             for i, (_, vec) in enumerate(chunk):
                 q[i] = vec
+            if n < self.batch_size:  # zero stale rows from the last batch
+                q[n:] = 0.0
             t0 = time.perf_counter()
             out: TopK = self.search_fn(jnp.asarray(q), self.k)
+            # Block on BOTH outputs so AQT covers all device time — blocking
+            # on ids alone under-counts when scores finish later.
             ids = np.asarray(jax.block_until_ready(out.ids))
-            scores = np.asarray(out.scores)
+            scores = np.asarray(jax.block_until_ready(out.scores))
             dt = time.perf_counter() - t0
             self.stats.n_queries += n
             self.stats.n_batches += 1
+            self.stats.n_padded += self.batch_size - n
             self.stats.total_time_s += dt
             for i, (rid, _) in enumerate(chunk):
                 self.results[rid] = (ids[i], scores[i])

@@ -1,0 +1,131 @@
+"""Fused gather-score-reduce verification kernel: parity with the
+materialized reference across padding/dtype/blocking edge cases, plus the
+end-to-end LIDER regression (DESIGN.md §Verification-kernel)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lider
+from repro.core.utils import l2_normalize
+from repro.kernels import fused_verify, ref
+
+
+def _case(seed, n, d, b, c, dtype, id_lo=-1):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    embs = jax.random.normal(k1, (n, d), dtype)
+    ids = jax.random.randint(k2, (b, c), id_lo, n)
+    q = jax.random.normal(k3, (b, d), dtype)
+    return embs, ids, q
+
+
+def _assert_parity(embs, row_ids, q, k, block_c, out_ids=None, rtol=1e-6):
+    gi, gs = fused_verify(
+        embs, row_ids, q, k=k, out_ids=out_ids, block_c=block_c, interpret=True
+    )
+    wi, ws = ref.verify_topk_ref(embs, row_ids, q, k=k, out_ids=out_ids)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_padded_ids(dtype):
+    """-1 slots are excluded and never win a top-k slot."""
+    embs, ids, q = _case(0, 40, 32, 3, 17, dtype)
+    ids = ids.at[:, ::3].set(-1)
+    _assert_parity(embs, ids, q, k=5, block_c=8)
+
+
+@pytest.mark.parametrize("c,block_c", [(17, 8), (21, 4), (7, 16), (64, 16)])
+def test_parity_c_not_multiple_of_block(c, block_c):
+    embs, ids, q = _case(c, 50, 16, 2, c, jnp.float32)
+    _assert_parity(embs, ids, q, k=4, block_c=block_c)
+
+
+def test_parity_k_exceeds_valid_candidates():
+    """k > #unique valid ids: tail slots are (-1, -inf), same as the ref."""
+    embs, ids, q = _case(3, 30, 16, 2, 6, jnp.float32)
+    ids = ids.at[:, 3:].set(-1)  # 3 valid per row, duplicates possible
+    gi, gs = fused_verify(embs, ids, q, k=8, block_c=4, interpret=True)
+    wi, ws = ref.verify_topk_ref(embs, ids, q, k=8)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    assert (np.asarray(gi)[:, 3:] == -1).all()
+    assert np.isneginf(np.asarray(gs)[:, 3:]).all()
+
+
+def test_parity_duplicate_ids_deduped():
+    """Duplicate candidates occupy one top-k slot, not several."""
+    embs, ids, q = _case(4, 25, 16, 2, 12, jnp.float32, id_lo=0)
+    ids = ids.at[:, 6:].set(ids[:, :6])  # every candidate duplicated
+    gi, _ = fused_verify(embs, ids, q, k=6, block_c=4, interpret=True)
+    _assert_parity(embs, ids, q, k=6, block_c=4)
+    for row in np.asarray(gi):
+        v = row[row >= 0]
+        assert len(set(v.tolist())) == len(v)
+
+
+def test_parity_score_ties_break_by_smallest_id():
+    """Distinct ids with bit-equal scores (duplicate table rows) must come
+    out in the reference order: smallest id first."""
+    k1, k3 = jax.random.split(jax.random.PRNGKey(11), 2)
+    embs = jax.random.normal(k1, (20, 16))
+    embs = embs.at[7].set(embs[2]).at[13].set(embs[2])  # 3-way score tie
+    ids = jnp.asarray([[13, 2, 0, 7, 5, 13]])
+    q = jax.random.normal(k3, (1, 16))
+    _assert_parity(embs, ids, q, k=5, block_c=2)
+
+
+def test_parity_out_ids_mapping():
+    """row_ids gather rows; out_ids name/dedup them (the LIDER shape: flat
+    (cluster, slot) rows in, global passage ids out)."""
+    embs, rows, q = _case(5, 40, 16, 3, 10, jnp.float32, id_lo=0)
+    out_ids = rows + 100  # distinct id space
+    out_ids = out_ids.at[:, 1].set(-1)  # padding marked on out_ids only
+    _assert_parity(embs, rows, q, k=4, block_c=4, out_ids=out_ids)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_large_shape_sweep(dtype):
+    embs, ids, q = _case(6, 200, 64, 4, 70, dtype)
+    rtol = 1e-6 if dtype == jnp.float32 else 2e-2
+    _assert_parity(embs, ids, q, k=10, block_c=16, rtol=rtol)
+
+
+@pytest.fixture(scope="module")
+def small_lider():
+    rng = jax.random.PRNGKey(7)
+    kc, kx, kq, kb = jax.random.split(rng, 4)
+    centers = jax.random.normal(kc, (16, 32))
+    assign = jax.random.randint(kx, (1500,), 0, 16)
+    x = l2_normalize(centers[assign] + 0.3 * jax.random.normal(kq, (1500, 32)))
+    q = l2_normalize(x[:8] + 0.05 * jax.random.normal(kb, (8, 32)))
+    cfg = lider.LiderConfig(
+        n_clusters=16, n_probe=4, n_arrays=2, n_leaves=2, kmeans_iters=5
+    )
+    params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+    return params, q
+
+
+def test_search_lider_fused_matches_unfused(small_lider):
+    """Regression: the end-to-end fused path returns the exact unfused ids."""
+    params, q = small_lider
+    unfused = lider.search_lider(params, q, k=10, n_probe=4, r0=8, use_fused=False)
+    fused = lider.search_lider(params, q, k=10, n_probe=4, r0=8, use_fused=True)
+    np.testing.assert_array_equal(np.asarray(fused.ids), np.asarray(unfused.ids))
+    np.testing.assert_allclose(
+        np.asarray(fused.scores), np.asarray(unfused.scores), rtol=1e-6
+    )
+
+
+def test_incluster_merge_false_fused_matches_unfused(small_lider):
+    """The per-pair (B, P, k) shape the distributed path scatters back."""
+    params, q = small_lider
+    routed = lider.route_queries(params, q, n_probe=4)
+    unfused = lider.incluster_search(
+        params, q, routed.ids, k=5, r0=8, merge=False, use_fused=False
+    )
+    fused = lider.incluster_search(
+        params, q, routed.ids, k=5, r0=8, merge=False, use_fused=True
+    )
+    assert fused.ids.shape == (q.shape[0], 4, 5)
+    np.testing.assert_array_equal(np.asarray(fused.ids), np.asarray(unfused.ids))

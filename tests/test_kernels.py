@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import kmeans_assign, lsh_hash, ref, score_gather
-from repro.kernels.ops import kmeans_assign_op, lsh_hash_op, score_gather_op
+from repro.kernels import fused_verify, kmeans_assign, lsh_hash, ref
+from repro.kernels.ops import kmeans_assign_op, lsh_hash_op, verify_topk_op
 
 
 @pytest.mark.parametrize(
@@ -37,18 +37,19 @@ def test_kmeans_assign_matches_ref(n, c, d, bn, bc):
     np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.parametrize("b,c,n,d", [(2, 8, 20, 16), (4, 10, 50, 64), (1, 3, 5, 128)])
+@pytest.mark.parametrize("b,c,n,d,k", [(2, 8, 20, 16, 3), (4, 10, 50, 64, 5), (1, 3, 5, 128, 2)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_score_gather_matches_ref(b, c, n, d, dtype):
+def test_fused_verify_matches_ref(b, c, n, d, k, dtype):
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * c), 3)
     embs = jax.random.normal(k1, (n, d), dtype)
     ids = jax.random.randint(k2, (b, c), -1, n)
     q = jax.random.normal(k3, (b, d), dtype)
-    got = score_gather(embs, ids, q, interpret=True)
-    want = ref.score_gather_ref(embs, ids, q)
+    gi, gs = fused_verify(embs, ids, q, k=k, block_c=4, interpret=True)
+    wi, ws = ref.verify_topk_ref(embs, ids, q, k=k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
     rtol = 1e-5 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(
-        np.asarray(got), np.asarray(want), rtol=rtol, atol=rtol
+        np.asarray(gs), np.asarray(ws), rtol=rtol, atol=rtol
     )
 
 
@@ -65,11 +66,10 @@ def test_ops_dispatch_to_ref_on_cpu():
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
     ids = jnp.asarray([[0, 1, -1]])
     q = x[:1]
-    np.testing.assert_allclose(
-        np.asarray(score_gather_op(x, ids, q)),
-        np.asarray(ref.score_gather_ref(x, ids, q)),
-        rtol=1e-6,
-    )
+    gi, gs = verify_topk_op(x, ids, q, k=2)
+    wi, ws = ref.verify_topk_ref(x, ids, q, k=2)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws), rtol=1e-6)
 
 
 def test_lsh_hash_pallas_used_by_core_build(corpus):

@@ -3,6 +3,8 @@ claim that re-scaling removes out-of-range predictions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import lsh, rescale, rmi

@@ -1,6 +1,7 @@
 """Serving engine: batching, padding, result routing, AQT accounting."""
 import jax
 import numpy as np
+import pytest
 
 from repro.core import lider
 from repro.core.baselines import flat_search
@@ -22,13 +23,27 @@ def test_engine_routes_results_correctly(corpus):
     assert engine.stats.n_queries == 40
     assert engine.stats.n_batches == 3  # ceil(40/16)
     assert engine.stats.aqt > 0
+    # partial-batch padding accounting: 3 batches x 16 slots, 40 real queries
+    assert engine.stats.n_padded == 8
+    assert engine.stats.padding_fraction == pytest.approx(8 / 48)
+
+
+def test_engine_full_batches_have_zero_padding(corpus):
+    x, q, _ = corpus
+    search = make_backend("flat", None, x)
+    engine = RetrievalEngine(search, batch_size=16, k=5, dim=x.shape[1])
+    for v in np.asarray(q)[:32]:
+        engine.submit(v)
+    engine.drain()
+    assert engine.stats.n_padded == 0
+    assert engine.stats.padding_fraction == 0.0
 
 
 def test_engine_lider_backend(corpus):
     x, q, gt = corpus
     cfg = lider.LiderConfig(n_clusters=32, n_probe=8, n_arrays=4, n_leaves=4, kmeans_iters=8)
     index = lider.build_lider(jax.random.PRNGKey(0), x, cfg)
-    search = make_backend("lider", index, n_probe=8, r0=8)
+    search = make_backend("lider", index, n_probe=8, r0=8, use_fused=False)
     engine = RetrievalEngine(search, batch_size=32, k=10, dim=x.shape[1])
     rids = [engine.submit(v) for v in np.asarray(q)[:32]]
     engine.drain()
