@@ -1,0 +1,179 @@
+"""Index-update benchmark: incremental upsert vs full rebuild.
+
+Emits ``BENCH_update.json`` so the cost of keeping a live LIDER index fresh
+is recorded per commit (CI runs ``--smoke``). The scenario matches the
+lifecycle acceptance test: build on an 80% base corpus, then absorb the
+remaining 20% either by
+
+- **upsert** — route + append + dirty-cluster refit (``core.update``), or
+- **full rebuild** — ``build_lider`` over the combined corpus (layer-1
+  frozen, same centroids, same capacity),
+
+and compare wall time, update throughput (passages/s), and recall@k against
+the exact Flat search over the combined corpus. With exact routing the two
+index states are slot-identical, so the recall delta should be ~0 — the
+report records it so a routing/refit regression shows up as a nonzero delta,
+alongside the delete path (tombstone + eager compaction, never-surfaced
+check).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.index_update [--smoke]
+        [--out BENCH_update.json] [--n 100000] [--dim 128] [--k 10]
+        [--n-clusters 64] [--update-fraction 0.2] [--batches 4]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def _bench(n, dim, k, n_clusters, update_fraction, batches, queries=256):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import clustering, lider, update
+    from repro.core.baselines import flat_search
+    from repro.core.utils import l2_normalize, recall_at_k
+
+    rng = jax.random.PRNGKey(0)
+    kc, kx, kn, kq = jax.random.split(rng, 4)
+    centers = jax.random.normal(kc, (n_clusters, dim))
+    assign = jax.random.randint(kx, (n,), 0, n_clusters)
+    x = l2_normalize(centers[assign] + 0.3 * jax.random.normal(kn, (n, dim)))
+    q = l2_normalize(
+        x[:queries] + 0.05 * jax.random.normal(kq, (queries, dim))
+    )
+
+    n_base = int(n * (1 - update_fraction))
+    base_x, new_x = x[:n_base], x[n_base:]
+    cfg0 = lider.LiderConfig(
+        n_clusters=n_clusters, n_probe=8, n_arrays=4, n_leaves=4, kmeans_iters=10
+    )
+    km = clustering.kmeans(jax.random.PRNGKey(2), base_x, n_clusters, iters=10)
+    # Pin the capacity both indexes need on the combined corpus (no throwaway
+    # build — just the assignment histogram build_lider itself would compute).
+    assignment, _ = clustering.assign_chunked(x, km.centroids)
+    max_size = int(jnp.bincount(assignment, length=n_clusters).max())
+    cfg = dataclasses.replace(
+        cfg0, capacity=lider.padded_capacity(max_size, None, cfg0.pad_multiple)
+    )
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree_util.tree_leaves(out))
+        return out, time.perf_counter() - t0
+
+    base, t_base = timed(
+        lambda: lider.build_lider(jax.random.PRNGKey(2), base_x, cfg,
+                                  centroids=km.centroids)
+    )
+    full, t_rebuild = timed(
+        lambda: lider.build_lider(jax.random.PRNGKey(2), x, cfg,
+                                  centroids=km.centroids)
+    )
+
+    # Upsert the holdout in ``batches`` slices (the serving-shaped pattern);
+    # first slice pays the refit jit, so report both total and steady-state.
+    slices = np.array_split(np.asarray(jax.device_get(new_x)), batches)
+    up = base
+    slice_times = []
+    for s in slices:
+        (up, _), dt = timed(lambda up=up, s=s: update.upsert(up, jnp.asarray(s)))
+        slice_times.append(dt)
+    t_upsert = sum(slice_times)
+    t_steady = sum(slice_times[1:]) / max(len(slice_times) - 1, 1)
+
+    gt = flat_search(x, q, k=k)
+    rec = {
+        name: float(recall_at_k(
+            lider.search_lider(p, q, k=k, n_probe=8, r0=8).ids, gt.ids
+        ))
+        for name, p in (("base", base), ("upserted", up), ("rebuilt", full))
+    }
+
+    # Delete path: tombstone 1% of the corpus with eager compaction and make
+    # sure nothing dead is ever surfaced.
+    dead = jnp.arange(0, max(n // 100, 1), dtype=jnp.int32)
+    (deleted, dstats), t_delete = timed(
+        lambda: update.delete(up, dead, refit_threshold=0.0)
+    )
+    post = lider.search_lider(deleted, q, k=k, n_probe=8, r0=8)
+    leaked = int(
+        np.intersect1d(np.asarray(post.ids), np.asarray(dead)).size
+    )
+
+    n_new = int(new_x.shape[0])
+    return {
+        "shape": {
+            "n": n, "dim": dim, "k": k, "n_clusters": n_clusters,
+            "update_fraction": update_fraction, "batches": batches,
+            "capacity": up.capacity,
+        },
+        "wall_s": {
+            "build_base": t_base,
+            "rebuild_full": t_rebuild,
+            "upsert_total": t_upsert,
+            "upsert_steady_per_batch": t_steady,
+            "delete_1pct_compact": t_delete,
+        },
+        "upsert_throughput_per_s": n_new / max(t_upsert, 1e-9),
+        # first slice pays the refit jit; steady-state is the serving number
+        "upsert_throughput_steady_per_s": (n_new / batches) / max(t_steady, 1e-9),
+        "upsert_speedup_vs_rebuild": t_rebuild / max(t_upsert, 1e-9),
+        "recall_at_k": rec,
+        "recall_delta_upsert_vs_rebuild": rec["upserted"] - rec["rebuilt"],
+        "deleted_ids_leaked": leaked,
+        "clusters_compacted": dstats.n_refit,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="small shapes (CI)")
+    ap.add_argument("--out", default="BENCH_update.json")
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--n-clusters", type=int, default=64)
+    ap.add_argument("--update-fraction", type=float, default=0.2)
+    ap.add_argument("--batches", type=int, default=4)
+    args = ap.parse_args()
+
+    if args.smoke:
+        report = _bench(n=4000, dim=64, k=10, n_clusters=32,
+                        update_fraction=args.update_fraction, batches=2,
+                        queries=64)
+    else:
+        report = _bench(n=args.n, dim=args.dim, k=args.k,
+                        n_clusters=args.n_clusters,
+                        update_fraction=args.update_fraction,
+                        batches=args.batches)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    w = report["wall_s"]
+    print(
+        f"index update @ n={report['shape']['n']} "
+        f"f={report['shape']['update_fraction']}\n"
+        f"  rebuild {w['rebuild_full']:.3f}s | upsert {w['upsert_total']:.3f}s "
+        f"({report['upsert_throughput_per_s']:,.0f} passages/s total, "
+        f"{report['upsert_throughput_steady_per_s']:,.0f}/s steady, "
+        f"{report['upsert_speedup_vs_rebuild']:.2f}x vs rebuild)\n"
+        f"  recall@{report['shape']['k']}: upserted "
+        f"{report['recall_at_k']['upserted']:.4f} vs rebuilt "
+        f"{report['recall_at_k']['rebuilt']:.4f} "
+        f"(delta {report['recall_delta_upsert_vs_rebuild']:+.4f})\n"
+        f"  delete: {report['clusters_compacted']} clusters compacted, "
+        f"{report['deleted_ids_leaked']} dead ids leaked\n"
+        f"-> {args.out}"
+    )
+    if report["deleted_ids_leaked"]:
+        raise SystemExit("tombstoned ids surfaced in search results")
+
+
+if __name__ == "__main__":
+    main()

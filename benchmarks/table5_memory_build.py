@@ -57,10 +57,10 @@ def run(n: int = 50_000, verbose: bool = True):
     # Stage 3: all in-cluster retrievers (full build; includes stage 1+2 work)
     t0 = time.perf_counter()
     idx = lider.build_lider(jax.random.PRNGKey(0), corpus, cfg)
-    jax.block_until_ready(idx.sorted_keys)
+    jax.block_until_ready(idx.bank.sorted_keys)
     t_stage3 = time.perf_counter() - t0
     # paper convention: index memory excludes the data embeddings
-    m_stage3 = _tree_bytes(idx, exclude=("cluster_embs",))
+    m_stage3 = _tree_bytes(idx, exclude=("bank/embs",))
 
     sk_t0 = time.perf_counter()
     sk = build_sklsh(jax.random.PRNGKey(2), corpus, n_arrays=24)

@@ -43,7 +43,7 @@ def main():
     )
     backends["sklsh"] = make_backend("sklsh", build_sklsh(rng, corpus), corpus)
     backends["mplsh"] = make_backend(
-        "mplsh", build_mplsh(rng, corpus), corpus, n_probes=8
+        "mplsh", build_mplsh(rng, corpus), corpus, n_probe=8
     )
 
     print(f"{'backend':8s} {'AQT(ms)':>9s} {'recall@10':>10s} {'batches':>8s}")

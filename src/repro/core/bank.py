@@ -1,0 +1,211 @@
+"""ClusterBank: the stacked per-cluster index state + staged build primitives.
+
+LIDER's layer-2 state (one in-cluster retriever per cluster, stacked into
+dense padded tensors — DESIGN.md §1/§2) used to live as seven loose fields on
+``LiderParams``. This module makes it a first-class pytree so the build, the
+incremental-update path (``core.update``), checkpointing, and the distributed
+partition-spec derivation all share one structure:
+
+    sorted_keys  (c, H, Lp) uint32   per-cluster sorted hashkey arrays
+    sorted_pos   (c, H, Lp) int32    sorted position -> cluster-local row (-1 = pad/dead)
+    embs         (c, Lp, d)          embeddings grouped by cluster (zero at pads)
+    gids         (c, Lp)    int32    cluster-local row -> global id (-1 = free/tombstone)
+    sizes        (c,)       int32    live rows per cluster
+    tombstones   (c,)       int32    dead rows awaiting compaction
+    next_gid     ()         int32    next global passage id to assign
+
+Each dataclass field carries ``cluster_axis`` metadata: 0 for tensors whose
+leading axis is the cluster axis (sharded over the cluster mesh axes by
+``core.distributed``), ``None`` for replicated state (the shared LSH bank and
+scalar bank metadata). ``core.distributed.lider_param_specs`` derives its
+PartitionSpecs from this metadata instead of a hard-coded name list.
+
+Build is staged (paper Sec. 3.3.2 Stage 3, decomposed):
+
+    assign (k-means / nearest-centroid)  ->  pack (capacity slots)
+        ->  hash + sort + fit, one cluster at a time: :func:`refit_cluster`
+
+Full build is just ``vmap(refit_cluster)`` over all clusters
+(:func:`build_bank`); incremental maintenance (``core.update``) re-runs the
+*same* ``refit_cluster`` on only the dirty clusters — there is no separate
+"online" fitting code path to drift from the offline one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
+from .types import pytree_dataclass
+
+# dataclasses.field metadata key: leading cluster axis (int) or None for
+# replicated leaves. core.distributed reads this to build PartitionSpecs.
+CLUSTER_AXIS = "cluster_axis"
+
+
+def _f(cluster_axis: int | None):
+    return dataclasses.field(metadata={CLUSTER_AXIS: cluster_axis})
+
+
+@pytree_dataclass
+class ClusterBank:
+    lsh: lsh_lib.LSHParams = _f(None)  # shared across clusters (DESIGN.md §2)
+    rescale: rescale_lib.RescaleParams = _f(0)  # leaves (c, H)
+    rmi: rmi_lib.RMIParams = _f(0)  # leaves (c, H) / (c, H, W)
+    sorted_keys: jnp.ndarray = _f(0)  # (c, H, Lp) uint32
+    sorted_pos: jnp.ndarray = _f(0)  # (c, H, Lp) int32
+    embs: jnp.ndarray = _f(0)  # (c, Lp, d)
+    gids: jnp.ndarray = _f(0)  # (c, Lp) int32
+    sizes: jnp.ndarray = _f(0)  # (c,) int32 — live rows
+    tombstones: jnp.ndarray = _f(0)  # (c,) int32 — dead rows awaiting compaction
+    next_gid: jnp.ndarray = _f(None)  # () int32 — bank metadata, replicated
+
+    @property
+    def n_clusters(self) -> int:
+        return self.gids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.gids.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.embs.shape[-1]
+
+
+def replicated_field_names() -> tuple[str, ...]:
+    """Bank fields whose leaves are replicated (no cluster axis)."""
+    return tuple(
+        f.name
+        for f in dataclasses.fields(ClusterBank)
+        if f.metadata.get(CLUSTER_AXIS) is None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Staged build primitives
+# ---------------------------------------------------------------------------
+
+
+def fit_sorted_array(
+    sorted_keys: jnp.ndarray, valid: jnp.ndarray, *, n_leaves: int
+) -> tuple[rescale_lib.RescaleParams, rmi_lib.RMIParams]:
+    """Fit re-scale stats + RMI on one sorted hashkey array ``(L,)``.
+
+    The single learned-fit primitive shared by standalone core models, the
+    full bank build, and incremental refits. ``valid`` masks padded slots
+    (padding must sort last — the UINT32_PAD sentinel guarantees it).
+    """
+    resc = rescale_lib.fit_rescale(sorted_keys, valid)
+    scaled = rescale_lib.rescale(resc, sorted_keys)
+    r = rmi_lib.fit_rmi(scaled, valid.astype(jnp.float32), n_leaves=n_leaves)
+    return resc, r
+
+
+def refit_cluster(
+    lsh: lsh_lib.LSHParams,
+    row_embs: jnp.ndarray,
+    row_valid: jnp.ndarray,
+    *,
+    n_leaves: int,
+):
+    """Hash + sort + fit ONE cluster from its packed embedding rows.
+
+    ``row_embs``: (Lp, d); ``row_valid``: (Lp,) bool — live rows. Returns
+    ``(sorted_keys (H, Lp), sorted_pos (H, Lp), rescale (H,), rmi (H,))``.
+    The unit of both the offline build (``vmap`` over all clusters) and the
+    online dirty-cluster refit (``core.update``).
+    """
+    keys = lsh_lib.hash_vectors(lsh, row_embs)  # (Lp, H)
+    keys = lsh_lib.mask_padded(keys, row_valid[:, None]).T  # (H, Lp)
+    sorted_keys, order = lsh_lib.sort_hashkeys(keys)
+    sorted_pos = jnp.where(
+        sorted_keys == jnp.uint32(lsh_lib.UINT32_PAD), -1, order
+    ).astype(jnp.int32)
+    resc, r = jax.vmap(partial(fit_sorted_array, n_leaves=n_leaves))(
+        sorted_keys, sorted_pos >= 0
+    )
+    return sorted_keys, sorted_pos, resc, r
+
+
+@partial(jax.jit, static_argnames=("n_leaves",))
+def _fit_all_clusters(lsh, row_embs, row_valid, *, n_leaves):
+    return jax.vmap(partial(refit_cluster, lsh, n_leaves=n_leaves))(
+        row_embs, row_valid
+    )
+
+
+def gather_cluster_rows(embs: jnp.ndarray, gids: jnp.ndarray) -> jnp.ndarray:
+    """Pack corpus rows into ``(c, Lp, d)`` per-cluster slots (zero at pads)."""
+    valid = gids >= 0
+    return embs[jnp.maximum(gids, 0)] * valid[..., None]
+
+
+def build_bank(
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    assignment: jnp.ndarray,
+    *,
+    n_clusters: int,
+    capacity: int,
+    n_arrays: int,
+    key_len: int,
+    n_leaves: int,
+) -> ClusterBank:
+    """Stage-3 build: pack -> hash/sort -> fit, all clusters at once.
+
+    ``assignment`` is the Stage-1 point->cluster map; the fit itself is
+    ``vmap(refit_cluster)``, so an incremental refit of a single cluster
+    (``core.update``) runs byte-identical math.
+    """
+    gids, sizes = clustering.group_by_cluster(assignment, n_clusters, capacity)
+    row_embs = gather_cluster_rows(embs, gids)
+    lsh = lsh_lib.make_lsh(rng, embs.shape[-1], n_arrays, key_len)
+    sorted_keys, sorted_pos, resc, r = _fit_all_clusters(
+        lsh, row_embs, gids >= 0, n_leaves=n_leaves
+    )
+    return ClusterBank(
+        lsh=lsh,
+        rescale=resc,
+        rmi=r,
+        sorted_keys=sorted_keys,
+        sorted_pos=sorted_pos,
+        embs=row_embs,
+        gids=gids,
+        sizes=sizes,
+        tombstones=jnp.zeros((n_clusters,), jnp.int32),
+        next_gid=jnp.int32(embs.shape[0]),
+    )
+
+
+def grow_bank(bank: ClusterBank, new_capacity: int) -> ClusterBank:
+    """Grow the per-cluster slot axis ``Lp`` to ``new_capacity``.
+
+    Pads sorted arrays with the UINT32_PAD sentinel / -1 (padding sorts last,
+    so sortedness and every fit statistic are preserved — no refit needed).
+    Shapes change, so downstream jits recompile: callers batch growth in
+    ``pad_multiple`` steps and serving recompiles only on this event
+    (``RetrievalEngine.apply_updates``).
+    """
+    lp = bank.capacity
+    if new_capacity < lp:
+        raise ValueError(f"cannot shrink capacity {lp} -> {new_capacity}")
+    if new_capacity == lp:
+        return bank
+    extra = new_capacity - lp
+    return dataclasses.replace(
+        bank,
+        sorted_keys=jnp.pad(
+            bank.sorted_keys,
+            ((0, 0), (0, 0), (0, extra)),
+            constant_values=jnp.uint32(lsh_lib.UINT32_PAD),
+        ),
+        sorted_pos=jnp.pad(
+            bank.sorted_pos, ((0, 0), (0, 0), (0, extra)), constant_values=-1
+        ),
+        embs=jnp.pad(bank.embs, ((0, 0), (0, extra), (0, 0))),
+        gids=jnp.pad(bank.gids, ((0, 0), (0, extra)), constant_values=-1),
+    )

@@ -76,7 +76,13 @@ def init_centroids(rng: jax.Array, x: jnp.ndarray, n_clusters: int) -> jnp.ndarr
     """Seeded init from distinct corpus points (k-means++ costs c sequential
     passes — deliberately skipped; Lloyd from a seeded sample is deterministic
     and clusters dense-retrieval embeddings well in practice)."""
-    idx = jax.random.choice(rng, x.shape[0], (n_clusters,), replace=False)
+    n = x.shape[0]
+    if n < n_clusters:
+        raise ValueError(
+            f"cannot draw {n_clusters} distinct centroids from {n} points; "
+            f"pass n_clusters <= {n} (or grow the corpus)"
+        )
+    idx = jax.random.choice(rng, n, (n_clusters,), replace=False)
     return x[idx]
 
 

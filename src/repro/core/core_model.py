@@ -18,6 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import bank as bank_lib
 from . import lsh as lsh_lib
 from . import rescale as rescale_lib
 from . import rmi as rmi_lib
@@ -61,10 +62,11 @@ def build_core_model(
     lsh = lsh_lib.make_lsh(rng, dim, n_arrays, key_len)
     keys = lsh_lib.hash_vectors(lsh, embs).T  # (H, L)
     sorted_keys, order = jax.vmap(lsh_lib.sort_hashkeys)(keys)
-    resc = jax.vmap(rescale_lib.fit_rescale)(sorted_keys)
-    scaled = jax.vmap(rescale_lib.rescale)(resc, sorted_keys)
-    weights = jnp.ones_like(scaled)
-    rmi = jax.vmap(partial(rmi_lib.fit_rmi, n_leaves=n_leaves))(scaled, weights)
+    # Same fit primitive as the cluster-bank build/refit (no padded slots
+    # here, so the mask is all-ones).
+    resc, rmi = jax.vmap(partial(bank_lib.fit_sorted_array, n_leaves=n_leaves))(
+        sorted_keys, jnp.ones(sorted_keys.shape, bool)
+    )
     return CoreModelParams(
         lsh=lsh,
         rescale=resc,

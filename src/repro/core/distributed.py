@@ -31,22 +31,36 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .bank import replicated_field_names
 from .clustering import update_centroids
 from .core_model import TopK, search_core_model
 from .lider import LiderParams, incluster_search
 from .utils import dedup_topk
 
-REPLICATED_PREFIXES = ("centroid_cm", "centroids", "in_lsh")
+
+def _path_name(entry) -> str:
+    return entry.name if hasattr(entry, "name") else str(entry)
 
 
 def lider_param_specs(params: LiderParams, cluster_axes: Sequence[str]):
-    """PartitionSpec pytree matching ``params``: cluster-sharded leaves get
-    ``P(cluster_axes, None, ...)``, the retriever/centroid/LSH leaves ``P()``."""
+    """PartitionSpec pytree matching ``params``.
+
+    The spec is derived from the :class:`~repro.core.bank.ClusterBank` field
+    metadata rather than a hard-coded name list: every leaf under a bank
+    field whose ``cluster_axis`` metadata is 0 is sharded
+    ``P(cluster_axes, None, ...)``; bank fields marked replicated (the shared
+    LSH bank, scalar bank metadata like ``next_gid``) and everything outside
+    the bank (centroids + centroids retriever) get ``P()``. New bank fields
+    therefore pick the right layout from their own declaration instead of
+    silently cluster-sharding.
+    """
     caxes = tuple(cluster_axes)
+    replicated_bank_fields = set(replicated_field_names())
 
     def spec_for(path, leaf):
-        name = path[0].name if hasattr(path[0], "name") else str(path[0])
-        if name in REPLICATED_PREFIXES:
+        if _path_name(path[0]) != "bank":
+            return P()  # centroid retriever + centroids: replicated
+        if len(path) < 2 or _path_name(path[1]) in replicated_bank_fields:
             return P()
         return P(caxes, *([None] * (leaf.ndim - 1)))
 
@@ -96,7 +110,7 @@ def make_sharded_search(
     qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
     n_cluster_shards = math.prod(mesh.shape[a] for a in caxes)
     n_query_shards = math.prod(mesh.shape[a] for a in qaxes) if qaxes else 1
-    c_total = params_like.cluster_gids.shape[0]
+    c_total = params_like.bank.gids.shape[0]
     if c_total % n_cluster_shards:
         raise ValueError(
             f"n_clusters={c_total} must divide cluster shards={n_cluster_shards}"
@@ -105,7 +119,7 @@ def make_sharded_search(
     param_specs = lider_param_specs(params_like, caxes)
 
     def body(local_params: LiderParams, q_loc: jnp.ndarray):
-        c_local = local_params.cluster_gids.shape[0]
+        c_local = local_params.bank.gids.shape[0]
         my = _flat_axis_index(caxes)
         routed = search_core_model(
             local_params.centroid_cm,

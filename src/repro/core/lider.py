@@ -1,19 +1,16 @@
 """LIDER: the clustering-based two-layer learned index (paper Sec. 3).
 
 Layer 1: a *centroids retriever* (one core model over the k-means centroids)
-routes each query to ``n_probe`` (= paper c0) clusters. Layer 2: one
-*in-cluster retriever* per cluster. On TPU the per-cluster retrievers are
-**stacked into dense padded tensors** so a (query x probed-cluster) batch is
-pure gather + matmul dataflow:
+routes each query to ``n_probe`` (= paper c0) clusters. Layer 2: a
+:class:`~repro.core.bank.ClusterBank` — the per-cluster retrievers stacked
+into dense padded tensors so a (query x probed-cluster) batch is pure gather
++ matmul dataflow (see ``core/bank.py`` for the layout).
 
-    sorted_keys   (c, H, Lp) uint32   per-cluster sorted hashkey arrays
-    sorted_pos    (c, H, Lp) int32    position -> cluster-local row (-1 = pad)
-    cluster_embs  (c, Lp, d) float32  embeddings grouped by cluster
-    cluster_gids  (c, Lp)    int32    cluster-local row -> global id (-1 = pad)
-
-The in-cluster LSH projection bank is shared across clusters (DESIGN.md §2);
-re-scale stats and RMIs are per-cluster (the learned parts), matching the
-paper's per-cluster core models.
+Build is staged (paper Sec. 3.3.2): ``assign`` (k-means or nearest-centroid
+against precomputed centroids) -> ``pack`` (capacity slots) -> ``hash/sort/
+fit`` via ``vmap(bank.refit_cluster)``. The same ``refit_cluster`` unit
+powers the incremental upsert/delete path in ``core.update``, so online
+maintenance and offline build cannot drift.
 
 ``search_lider`` is the single-device reference; ``core.distributed`` wraps
 the same ``incluster_search`` math in a shard_map with capacity-based
@@ -28,8 +25,10 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import bank as bank_lib
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
 from ..kernels.ops import verify_topk_op
+from .bank import ClusterBank
 from .core_model import CoreModelParams, TopK, build_core_model, search_core_model
 from .types import pytree_dataclass
 
@@ -63,26 +62,19 @@ class LiderConfig:
 class LiderParams:
     centroid_cm: CoreModelParams
     centroids: jnp.ndarray  # (c, d)
-    in_lsh: lsh_lib.LSHParams
-    in_rescale: rescale_lib.RescaleParams  # leaves (c, H)
-    in_rmi: rmi_lib.RMIParams  # leaves (c, H) / (c, H, W)
-    sorted_keys: jnp.ndarray  # (c, H, Lp) uint32
-    sorted_pos: jnp.ndarray  # (c, H, Lp) int32
-    cluster_embs: jnp.ndarray  # (c, Lp, d)
-    cluster_gids: jnp.ndarray  # (c, Lp) int32
-    cluster_sizes: jnp.ndarray  # (c,) int32
+    bank: ClusterBank  # stacked per-cluster state (core/bank.py)
 
     @property
     def n_clusters(self) -> int:
-        return self.cluster_gids.shape[0]
+        return self.bank.n_clusters
 
     @property
     def capacity(self) -> int:
-        return self.cluster_gids.shape[1]
+        return self.bank.capacity
 
     @property
     def dim(self) -> int:
-        return self.cluster_embs.shape[-1]
+        return self.bank.dim
 
 
 # ---------------------------------------------------------------------------
@@ -90,46 +82,61 @@ class LiderParams:
 # ---------------------------------------------------------------------------
 
 
+def padded_capacity(max_size: int, cap: int | None, pad_multiple: int) -> int:
+    """Slot count per cluster: requested (or max) size, padded for the TPU."""
+    cap = cap or max_size
+    return max(pad_multiple, math.ceil(cap / pad_multiple) * pad_multiple)
+
+
+def assign_points(
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    config: LiderConfig,
+    *,
+    centroids: jnp.ndarray | None = None,
+) -> clustering.KMeansResult:
+    """Stage 1: k-means, or nearest-centroid against precomputed centroids.
+
+    The ``centroids`` override is the layer-1-frozen rebuild used by the
+    update lifecycle (and by multi-stage corpora that share one routing
+    layer): assignment is the exact nearest centroid, the same rule the final
+    Lloyd step applies — so an index built this way is slot-for-slot
+    comparable with one grown by ``core.update.upsert``.
+    """
+    if centroids is None:
+        return clustering.kmeans(rng, embs, config.n_clusters, iters=config.kmeans_iters)
+    assignment, _ = clustering.assign_chunked(embs, centroids)
+    return clustering.KMeansResult(centroids=centroids, assignment=assignment)
+
+
 def build_lider(
-    rng: jax.Array, embs: jnp.ndarray, config: LiderConfig
+    rng: jax.Array,
+    embs: jnp.ndarray,
+    config: LiderConfig,
+    *,
+    centroids: jnp.ndarray | None = None,
 ) -> LiderParams:
     n, dim = embs.shape
     c = config.n_clusters
     rng_km, rng_cen, rng_in = jax.random.split(rng, 3)
 
-    # Stage 1: clustering.
-    km = clustering.kmeans(rng_km, embs, c, iters=config.kmeans_iters)
+    # Stage 1: clustering (or routing against supplied centroids).
+    km = assign_points(rng_km, embs, config, centroids=centroids)
     sizes = jnp.bincount(km.assignment, length=c).astype(jnp.int32)
     max_size = int(jax.device_get(jnp.max(sizes)))
-    cap = config.capacity or max_size
-    cap = max(config.pad_multiple, math.ceil(cap / config.pad_multiple) * config.pad_multiple)
-    cluster_gids, cluster_sizes = clustering.group_by_cluster(km.assignment, c, cap)
+    cap = padded_capacity(max_size, config.capacity, config.pad_multiple)
 
-    valid_local = cluster_gids >= 0  # (c, Lp)
-    safe_gid = jnp.maximum(cluster_gids, 0)
-    cluster_embs = embs[safe_gid] * valid_local[..., None]
-
-    # Stage 3 prep: shared in-cluster LSH bank, per-cluster sorted arrays.
-    key_len = config.key_len or lsh_lib.suggest_key_len(cap)
-    in_lsh = lsh_lib.make_lsh(rng_in, dim, config.n_arrays, key_len)
-    all_keys = lsh_lib.hash_vectors(in_lsh, embs)  # (N, H)
-    keys_cl = jnp.where(
-        valid_local[..., None], all_keys[safe_gid], jnp.uint32(lsh_lib.UINT32_PAD)
-    )  # (c, Lp, H)
-    keys_cl = jnp.moveaxis(keys_cl, -1, 1)  # (c, H, Lp)
-    sorted_keys, local_order = lsh_lib.sort_hashkeys(keys_cl)
-    sorted_pos = jnp.where(
-        sorted_keys == jnp.uint32(lsh_lib.UINT32_PAD), -1, local_order
-    ).astype(jnp.int32)
-
-    def _fit_one(skeys: jnp.ndarray, spos: jnp.ndarray):
-        valid = spos >= 0
-        resc = rescale_lib.fit_rescale(skeys, valid)
-        scaled = rescale_lib.rescale(resc, skeys)
-        r = rmi_lib.fit_rmi(scaled, valid.astype(jnp.float32), n_leaves=config.n_leaves)
-        return resc, r
-
-    in_rescale, in_rmi = jax.vmap(jax.vmap(_fit_one))(sorted_keys, sorted_pos)
+    # Stage 3: pack -> hash/sort -> fit (vmap of the single-cluster refit).
+    bank = bank_lib.build_bank(
+        rng_in,
+        embs,
+        km.assignment,
+        n_clusters=c,
+        capacity=cap,
+        n_arrays=config.n_arrays,
+        key_len=config.key_len or lsh_lib.suggest_key_len(cap),
+        n_leaves=config.n_leaves,
+    )
 
     # Stage 2: centroids retriever.
     centroid_cm = build_core_model(
@@ -140,18 +147,7 @@ def build_lider(
         n_leaves=config.n_leaves_centroid,
     )
 
-    return LiderParams(
-        centroid_cm=centroid_cm,
-        centroids=km.centroids,
-        in_lsh=in_lsh,
-        in_rescale=in_rescale,
-        in_rmi=in_rmi,
-        sorted_keys=sorted_keys,
-        sorted_pos=sorted_pos,
-        cluster_embs=cluster_embs,
-        cluster_gids=cluster_gids,
-        cluster_sizes=cluster_sizes,
-    )
+    return LiderParams(centroid_cm=centroid_cm, centroids=km.centroids, bank=bank)
 
 
 # ---------------------------------------------------------------------------
@@ -172,18 +168,6 @@ def route_queries(
         params.centroid_cm, params.centroids, queries, k=n_probe, r0=r0,
         use_fused=use_fused,
     )
-
-
-def _batched_rmi_predict(root_w, root_b, leaf_w, leaf_b, length, n_leaves, x):
-    """RMI predict where every model parameter carries batch dims (gathered
-    per (query, probed cluster, array))."""
-    hi = jnp.maximum(length - 1.0, 0.0)
-    pred = jnp.clip(root_w * x + root_b, 0.0, hi)
-    leaf = jnp.floor(pred * n_leaves / jnp.maximum(length, 1.0)).astype(jnp.int32)
-    leaf = jnp.clip(leaf, 0, n_leaves - 1)
-    lw = jnp.take_along_axis(leaf_w, leaf[..., None], axis=-1)[..., 0]
-    lb = jnp.take_along_axis(leaf_b, leaf[..., None], axis=-1)[..., 0]
-    return jnp.clip(lw * x + lb, 0.0, hi)
 
 
 def incluster_search(
@@ -208,30 +192,21 @@ def incluster_search(
     and emits only the (B, k) result, instead of materializing the
     (B, P, H, R, d) candidate tensor in HBM before the einsum.
     """
-    c, h, lp = params.sorted_keys.shape
-    w = params.in_rmi.n_leaves
+    bank = params.bank
+    c, h, lp = bank.sorted_keys.shape
     b, p = cids.shape
     r = min(r0 * k, lp)
 
-    qkeys = lsh_lib.hash_vectors(params.in_lsh, queries)  # (B, H)
+    qkeys = lsh_lib.hash_vectors(bank.lsh, queries)  # (B, H)
     safe_cid = jnp.clip(cids, 0, c - 1)
     cvalid = cids >= 0  # (B, P)
 
-    # Gather per-pair rescale + RMI parameters, then predict positions.
-    resc = rescale_lib.RescaleParams(
-        key_min=params.in_rescale.key_min[safe_cid],
-        key_max=params.in_rescale.key_max[safe_cid],
-        length=params.in_rescale.length[safe_cid],
-    )  # leaves (B, P, H)
+    # Gather per-(query, probe) rescale + RMI models out of the bank, then
+    # predict positions with the banked RMI form.
+    resc = jax.tree.map(lambda leaf: leaf[safe_cid], bank.rescale)  # (B, P, H)
     scaled = rescale_lib.rescale(resc, qkeys[:, None, :])  # (B, P, H)
-    pos = _batched_rmi_predict(
-        params.in_rmi.root_w[safe_cid],
-        params.in_rmi.root_b[safe_cid],
-        params.in_rmi.leaf_w[safe_cid],
-        params.in_rmi.leaf_b[safe_cid],
-        params.in_rmi.length[safe_cid],
-        w,
-        scaled,
+    pos = rmi_lib.predict_banked(
+        rmi_lib.gather_banked(bank.rmi, safe_cid), scaled
     )  # (B, P, H)
 
     h_idx = jnp.arange(h, dtype=jnp.int32)[None, None, :, None]
@@ -243,7 +218,7 @@ def incluster_search(
         start1 = jnp.clip(jnp.round(pos).astype(jnp.int32) - w1 // 2, 0, lp - w1)
         idx1 = start1[..., None] + jnp.arange(w1, dtype=jnp.int32)
         flat1 = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx1
-        keys_win = jnp.take(params.sorted_keys.reshape(-1), flat1)  # (B,P,H,W1)
+        keys_win = jnp.take(bank.sorted_keys.reshape(-1), flat1)  # (B,P,H,W1)
         qk = jnp.broadcast_to(qkeys[:, None, :], (b, p, h)).reshape(-1)
         rows = keys_win.reshape(-1, w1)
         off = jax.vmap(lambda row, q: jnp.searchsorted(row, q))(rows, qk)
@@ -252,18 +227,19 @@ def incluster_search(
     start = jnp.clip(jnp.round(pos).astype(jnp.int32) - r // 2, 0, lp - r)
     idx = start[..., None] + jnp.arange(r, dtype=jnp.int32)  # (B, P, H, R)
     flat = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx
-    local_pos = jnp.take(params.sorted_pos.reshape(-1), flat)  # (B, P, H, R)
+    local_pos = jnp.take(bank.sorted_pos.reshape(-1), flat)  # (B, P, H, R)
 
     valid = (local_pos >= 0) & cvalid[:, :, None, None]
     flat_emb = safe_cid[:, :, None, None] * lp + jnp.maximum(local_pos, 0)
-    gids = jnp.take(params.cluster_gids.reshape(-1), flat_emb)
+    gids = jnp.take(bank.gids.reshape(-1), flat_emb)
     gids = jnp.where(valid, gids, -1)
 
     # Verification: gather rows from the flat (c*Lp, d) table (row_ids =
     # flat_emb), dedup/report by global passage id (out_ids = gids, -1 where
-    # invalid). Scoring happens in the embedding storage dtype (bf16 stays
-    # bf16 on the MXU) with fp32 accumulation for a stable top-k ordering.
-    flat_table = params.cluster_embs.reshape(c * lp, -1)
+    # invalid — tombstoned rows carry gid -1 and are suppressed here).
+    # Scoring happens in the embedding storage dtype (bf16 stays bf16 on the
+    # MXU) with fp32 accumulation for a stable top-k ordering.
+    flat_table = bank.embs.reshape(c * lp, -1)
     if merge:
         ids, sc = verify_topk_op(
             flat_table,

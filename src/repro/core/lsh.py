@@ -80,6 +80,16 @@ def hash_vectors(params: LSHParams, x: jnp.ndarray) -> jnp.ndarray:
     return pack_bits(bits)
 
 
+def mask_padded(keys: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Replace keys of padded/dead slots with the UINT32_PAD sentinel.
+
+    The sentinel is the largest uint32, so masked slots sort to the end of
+    every array — the invariant the bank build/refit and the rescale fit
+    rely on (padding sorts last).
+    """
+    return jnp.where(valid, keys.astype(jnp.uint32), jnp.uint32(UINT32_PAD))
+
+
 def _clz32(x: jnp.ndarray) -> jnp.ndarray:
     """Count leading zeros of uint32 (branchless smear + popcount)."""
     x = x.astype(jnp.uint32)

@@ -113,6 +113,32 @@ def predict(params: RMIParams, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.clip(params.leaf_w[leaf] * x + params.leaf_b[leaf], 0.0, hi)
 
 
+def predict_banked(params: RMIParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Predict when every RMI leaf carries batch dims matching ``x``.
+
+    The banked form of :func:`predict`: LIDER gathers per-(query, probed
+    cluster, array) models out of the stacked ``(c, H)`` bank, so ``root_w``/
+    ``root_b``/``length`` have shape ``x.shape`` and ``leaf_w``/``leaf_b``
+    have ``x.shape + (n_leaves,)`` — the leaf pick becomes a
+    ``take_along_axis`` over the trailing axis instead of a fancy index.
+    """
+    hi = jnp.maximum(params.length - 1.0, 0.0)
+    pred = jnp.clip(params.root_w * x + params.root_b, 0.0, hi)
+    leaf = jnp.floor(
+        pred * params.n_leaves / jnp.maximum(params.length, 1.0)
+    ).astype(jnp.int32)
+    leaf = jnp.clip(leaf, 0, params.n_leaves - 1)
+    lw = jnp.take_along_axis(params.leaf_w, leaf[..., None], axis=-1)[..., 0]
+    lb = jnp.take_along_axis(params.leaf_b, leaf[..., None], axis=-1)[..., 0]
+    return jnp.clip(lw * x + lb, 0.0, hi)
+
+
+def gather_banked(params: RMIParams, idx: jnp.ndarray) -> RMIParams:
+    """Gather per-index models out of a stacked bank: leaves ``(c, ...)`` ->
+    ``idx.shape + (...,)``. Output feeds :func:`predict_banked`."""
+    return jax.tree.map(lambda leaf: leaf[idx], params)
+
+
 def predict_raw(params: RMIParams, x: jnp.ndarray) -> jnp.ndarray:
     """Unclipped prediction — used by the Table 4 out-of-range diagnostics."""
     leaf = _leaf_of(params.root_w, params.root_b, x, params.length, params.n_leaves)

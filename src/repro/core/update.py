@@ -1,0 +1,290 @@
+"""Incremental index maintenance: upsert / delete without a full rebuild.
+
+The paper specifies a one-shot offline build (Sec. 3.3.2); a production
+retrieval service needs to add, remove, and persist passages while serving.
+LIDER's per-cluster core models are well-shaped for that: the unit of the
+offline build is a single-cluster ``bank.refit_cluster``, so incremental
+maintenance is "edit the packed rows of the touched clusters, then re-run the
+exact same refit on only those clusters".
+
+**Upsert** routes each new embedding through layer 1 (exact nearest-centroid
+by default — the same rule Stage 1 applies, so an upserted index is
+slot-for-slot identical to a layer-1-frozen rebuild over the combined corpus;
+``route="learned"`` uses the centroids-retriever ANN instead, trading that
+guarantee for hashing cost at scale), appends into the free capacity slots of
+the target clusters, grows the slot axis ``Lp`` in ``pad_multiple`` steps on
+overflow (the only shape change — serving recompiles only then), and refits
+the dirty clusters.
+
+**Delete** tombstones: the global ids are cleared from ``bank.gids`` and the
+``sorted_pos`` entries pointing at dead rows are set to -1, so verification
+can never surface them (dead candidates carry ``out_id = -1``, which both the
+fused kernel and ``dedup_topk`` treat as padding). Dead rows waste capacity
+and window slots until a cluster's tombstone fraction crosses
+``refit_threshold``; then the cluster is compacted (live rows repacked to the
+slot prefix) and refit.
+
+Dirty-cluster refits run under jit with the cluster list padded to a power of
+two (sentinel -1, scattered with ``mode="drop"``), so recompile count is
+O(log max-dirty-batch), not O(distinct batch sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bank as bank_lib
+from . import clustering
+from .bank import ClusterBank
+from .lider import LiderParams, padded_capacity, route_queries
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateStats:
+    """Host-side accounting for one upsert/delete call."""
+
+    n_added: int = 0
+    n_deleted: int = 0
+    n_refit: int = 0  # clusters re-fit (dirty or compacted)
+    capacity: int = 0  # Lp after the call
+    capacity_grew: bool = False  # shape change -> serving must recompile
+
+
+def tombstone_fraction(bank: ClusterBank) -> jnp.ndarray:
+    """(c,) fraction of occupied slots that are dead."""
+    used = bank.sizes + bank.tombstones
+    return bank.tombstones / jnp.maximum(used, 1)
+
+
+def _pad_pow2(m: int, lo: int = 8) -> int:
+    """Next power of two >= m (>= lo) — bounds jit recompiles of the
+    dirty-cluster refit to O(log max-batch)."""
+    return max(lo, 1 << (max(m, 1) - 1).bit_length())
+
+
+def _pad_ids(values, fill: int = -1) -> jnp.ndarray:
+    """Pad an int id list to the next power of two with ``fill`` sentinels —
+    the one place the recompile-bounding batch policy lives."""
+    values = jnp.asarray(values, jnp.int32)
+    n = int(values.shape[0])
+    return jnp.full((_pad_pow2(n),), fill, jnp.int32).at[:n].set(values)
+
+
+def _scatter_fit(bank: ClusterBank, tgt, sorted_keys, sorted_pos, resc, rmi):
+    """Write per-cluster fit results back at rows ``tgt`` (OOB = dropped)."""
+    put = lambda old, new: old.at[tgt].set(new, mode="drop")
+    return dataclasses.replace(
+        bank,
+        sorted_keys=put(bank.sorted_keys, sorted_keys),
+        sorted_pos=put(bank.sorted_pos, sorted_pos),
+        rescale=jax.tree.map(put, bank.rescale, resc),
+        rmi=jax.tree.map(put, bank.rmi, rmi),
+    )
+
+
+@jax.jit
+def _refit_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
+    """Re-run the build-unit refit on clusters ``cids`` ((m,) int32, -1 pad)."""
+    safe = jnp.maximum(cids, 0)
+    rows = bank.embs[safe]
+    valid = bank.gids[safe] >= 0
+    sk, sp, resc, rmi = jax.vmap(
+        partial(bank_lib.refit_cluster, bank.lsh, n_leaves=bank.rmi.n_leaves)
+    )(rows, valid)
+    tgt = jnp.where(cids >= 0, cids, bank.n_clusters)
+    return _scatter_fit(bank, tgt, sk, sp, resc, rmi)
+
+
+@jax.jit
+def _append_rows(
+    bank: ClusterBank, new_embs: jnp.ndarray, assignment: jnp.ndarray
+) -> ClusterBank:
+    """Scatter ``new_embs`` into the free slot prefix of their clusters.
+
+    ``assignment == n_clusters`` marks batch-padding rows (the caller pads
+    batches to a power of two to bound recompiles) — they rank past every
+    real point and scatter out of range, i.e. are dropped. New global ids
+    continue from ``bank.next_gid`` in input order — the same ids a
+    layer-1-frozen rebuild over ``concat(old corpus, new_embs)`` would
+    assign. Caller guarantees capacity (grow first)."""
+    c, lp = bank.gids.shape
+    n = new_embs.shape[0]
+    used = bank.sizes + bank.tombstones  # occupied slot prefix per cluster
+    counts = jnp.bincount(assignment, length=c).astype(jnp.int32)  # pads drop
+    # Slot per point: used[cluster] + rank among this batch's same-cluster
+    # points (in input order), via the group_by_cluster ranking trick.
+    order = jnp.argsort(assignment, stable=True).astype(jnp.int32)
+    sorted_a = assignment[order]
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n, dtype=jnp.int32) - starts[jnp.minimum(sorted_a, c - 1)]
+    flat_slot = jnp.where(
+        sorted_a < c, sorted_a * lp + used[jnp.minimum(sorted_a, c - 1)] + rank,
+        c * lp,  # batch padding -> out of range, dropped by mode="drop"
+    )
+    new_gids = bank.next_gid + order
+    return dataclasses.replace(
+        bank,
+        gids=bank.gids.reshape(-1)
+        .at[flat_slot]
+        .set(new_gids, mode="drop")
+        .reshape(c, lp),
+        embs=bank.embs.reshape(c * lp, -1)
+        .at[flat_slot]
+        .set(new_embs[order].astype(bank.embs.dtype), mode="drop")
+        .reshape(c, lp, -1),
+        sizes=bank.sizes + counts,
+        next_gid=bank.next_gid + jnp.sum(assignment < c, dtype=jnp.int32),
+    )
+
+
+def upsert(
+    params: LiderParams,
+    new_embs: jnp.ndarray,
+    *,
+    pad_multiple: int = 8,
+    route: str = "exact",
+    n_probe_route: int = 1,
+) -> tuple[LiderParams, UpdateStats]:
+    """Add ``new_embs`` (n, d) to the index; refit only the touched clusters.
+
+    ``route="exact"`` assigns by nearest centroid (Stage-1 rule — keeps the
+    rebuild-parity guarantee); ``route="learned"`` asks the centroids
+    retriever for the top-1 cluster. Layer 1 (centroids + retriever) is never
+    refit — the paper's centroid geometry drifts only with distribution shift,
+    which calls for a full rebuild anyway.
+
+    Returns the updated params and stats; ``stats.capacity_grew`` tells the
+    serving layer whether compiled search functions must be re-traced.
+    """
+    bank = params.bank
+    c = bank.n_clusters
+    new_embs = jnp.asarray(new_embs)
+    if route == "exact":
+        assignment, _ = clustering.assign_chunked(new_embs, params.centroids)
+    elif route == "learned":
+        routed = route_queries(params, new_embs, n_probe=n_probe_route)
+        assignment = routed.ids[:, 0].astype(jnp.int32)
+    else:
+        raise ValueError(f"route must be 'exact' or 'learned', got {route!r}")
+
+    counts = jnp.bincount(assignment, length=c).astype(jnp.int32)
+    needed = int(jax.device_get(jnp.max(bank.sizes + bank.tombstones + counts)))
+    grew = needed > bank.capacity
+    if grew:
+        bank = bank_lib.grow_bank(
+            bank, padded_capacity(needed, None, pad_multiple)
+        )
+
+    # Pad the batch to a power of two (sentinel cluster c) so repeated
+    # variable-size upserts reuse a bounded set of compiled appends.
+    n = int(new_embs.shape[0])
+    m = _pad_pow2(n)
+    embs_p = jnp.zeros((m, new_embs.shape[1]), new_embs.dtype).at[:n].set(new_embs)
+    assign_p = jnp.full((m,), c, jnp.int32).at[:n].set(assignment)
+    bank = _append_rows(bank, embs_p, assign_p)
+
+    dirty = np.unique(np.asarray(jax.device_get(assignment)))
+    dirty = dirty[(dirty >= 0) & (dirty < c)]
+    n_dirty = int(dirty.shape[0])
+    bank = _refit_clusters(bank, _pad_ids(dirty))
+
+    stats = UpdateStats(
+        n_added=n,
+        n_refit=n_dirty,
+        capacity=bank.capacity,
+        capacity_grew=grew,
+    )
+    return dataclasses.replace(params, bank=bank), stats
+
+
+@jax.jit
+def _tombstone(bank: ClusterBank, dead_gids: jnp.ndarray):
+    """Mark global ids dead: clear ``gids`` rows and the ``sorted_pos``
+    entries that point at them. Returns (bank, newly-dead count per cluster)."""
+    c, h, lp = bank.sorted_pos.shape
+    # Membership via sort + searchsorted: O(c·Lp·log g), not the (c, Lp, g)
+    # broadcast compare. The -1 batch-pad sentinels sort first and are
+    # excluded by the gids >= 0 guard.
+    sorted_dead = jnp.sort(dead_gids)
+    at = jnp.minimum(
+        jnp.searchsorted(sorted_dead, bank.gids), sorted_dead.shape[0] - 1
+    )
+    dead = (sorted_dead[at] == bank.gids) & (bank.gids >= 0)  # (c, Lp)
+    n_dead = dead.sum(-1).astype(jnp.int32)
+    sp = bank.sorted_pos.reshape(c, h * lp)
+    dead_at = jax.vmap(lambda sd, s: sd[jnp.maximum(s, 0)])(dead, sp) & (sp >= 0)
+    bank = dataclasses.replace(
+        bank,
+        gids=jnp.where(dead, -1, bank.gids),
+        sorted_pos=jnp.where(dead_at, -1, sp).reshape(c, h, lp),
+        sizes=bank.sizes - n_dead,
+        tombstones=bank.tombstones + n_dead,
+    )
+    return bank, n_dead
+
+
+@jax.jit
+def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
+    """Repack live rows of clusters ``cids`` to the slot prefix and refit.
+
+    Live rows keep their relative order (stable sort), so a compacted cluster
+    is row-for-row what a fresh pack of its surviving points would produce."""
+    safe = jnp.maximum(cids, 0)
+    gid_rows = bank.gids[safe]  # (m, Lp)
+    live = gid_rows >= 0
+    order = jnp.argsort(~live, axis=-1, stable=True)
+    gid_p = jnp.take_along_axis(gid_rows, order, axis=-1)
+    live_p = gid_p >= 0
+    emb_p = (
+        jnp.take_along_axis(bank.embs[safe], order[..., None], axis=1)
+        * live_p[..., None]
+    )
+    sk, sp, resc, rmi = jax.vmap(
+        partial(bank_lib.refit_cluster, bank.lsh, n_leaves=bank.rmi.n_leaves)
+    )(emb_p, live_p)
+    tgt = jnp.where(cids >= 0, cids, bank.n_clusters)
+    put = lambda old, new: old.at[tgt].set(new, mode="drop")
+    bank = _scatter_fit(bank, tgt, sk, sp, resc, rmi)
+    return dataclasses.replace(
+        bank,
+        embs=put(bank.embs, emb_p),
+        gids=put(bank.gids, gid_p),
+        tombstones=bank.tombstones.at[tgt].set(0, mode="drop"),
+    )
+
+
+def delete(
+    params: LiderParams,
+    gids: jnp.ndarray,
+    *,
+    refit_threshold: float = 0.25,
+) -> tuple[LiderParams, UpdateStats]:
+    """Tombstone global ids ``gids`` ((g,) int32); lazily compact + refit.
+
+    Tombstoned ids can never be surfaced (their candidates carry ``out_id =
+    -1`` — kernel-level padding). Clusters whose dead fraction exceeds
+    ``refit_threshold`` are compacted immediately; pass ``0.0`` to force
+    eager compaction, ``1.0`` to defer indefinitely. Capacity never changes.
+    """
+    bank, n_dead = _tombstone(params.bank, _pad_ids(gids))
+    n_deleted = int(jax.device_get(n_dead.sum()))
+
+    frac = tombstone_fraction(bank)
+    to_compact = np.nonzero(
+        np.asarray(jax.device_get((frac > refit_threshold) & (bank.tombstones > 0)))
+    )[0]
+    n_compact = int(to_compact.shape[0])
+    if n_compact:
+        bank = _compact_clusters(bank, _pad_ids(to_compact))
+
+    stats = UpdateStats(
+        n_deleted=n_deleted,
+        n_refit=n_compact,
+        capacity=bank.capacity,
+        capacity_grew=False,
+    )
+    return dataclasses.replace(params, bank=bank), stats

@@ -1,7 +1,16 @@
-"""Serving launcher: build a LIDER (or baseline) index over a corpus and
-serve batched queries.
+"""Serving launcher: build (or load) a LIDER/baseline index over a corpus and
+serve batched queries, optionally with mixed update/search traffic.
 
 ``python -m repro.launch.serve --backend lider --corpus-size 100000 --queries 1024``
+
+Index lifecycle (LIDER only — DESIGN.md §Index lifecycle):
+
+- ``--load-index DIR`` serves a checkpointed index instead of building;
+- ``--save-index DIR`` persists the served index (post-updates) on exit;
+- ``--update-fraction F`` holds out an F fraction of the corpus, builds on
+  the rest, serves half the queries, upserts the holdout between batches via
+  ``RetrievalEngine.apply_updates`` (recompiling only if capacity grew), then
+  serves the remaining queries — the online-corpus scenario.
 
 Reports AQT (the paper's efficiency metric) and recall@k vs the Flat exact
 search — the end-to-end serving driver for the paper's system.
@@ -15,10 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from ..core import lider as lider_lib
+from ..core import update as update_lib
 from ..core.baselines import build_ivfpq, build_mplsh, build_pq, build_sklsh, flat_search
 from ..core.utils import recall_at_k
 from ..data import synthetic
 from ..serving import RetrievalEngine, make_backend
+from ..training import checkpoint
 
 
 def main() -> None:
@@ -45,14 +56,35 @@ def main() -> None:
         "§Verification-kernel)",
     )
     ap.add_argument("--embeddings", default=None, help=".npy drop-in corpus")
+    ap.add_argument(
+        "--save-index", default=None, metavar="DIR",
+        help="persist the (post-update) LIDER index before exit",
+    )
+    ap.add_argument(
+        "--load-index", default=None, metavar="DIR",
+        help="serve a checkpointed LIDER index instead of building",
+    )
+    ap.add_argument(
+        "--update-fraction", type=float, default=0.0,
+        help="hold out this corpus fraction and upsert it mid-traffic "
+        "(LIDER only; exercises RetrievalEngine.apply_updates)",
+    )
     args = ap.parse_args()
     use_fused = {"auto": None, "on": True, "off": False}[args.use_fused]
+    lifecycle = args.save_index or args.load_index or args.update_fraction > 0
+    if lifecycle and args.backend != "lider":
+        raise SystemExit("--save-index/--load-index/--update-fraction need --backend lider")
+    if not 0.0 <= args.update_fraction < 1.0:
+        raise SystemExit("--update-fraction must be in [0, 1)")
 
     if args.embeddings:
         embs = synthetic.load_embeddings(args.embeddings)
     else:
         embs = synthetic.retrieval_corpus(0, args.corpus_size, args.dim)
     queries, _ = synthetic.retrieval_queries(1, embs, args.queries)
+
+    n_held = int(embs.shape[0] * args.update_fraction)
+    base_embs, held_embs = (embs[:-n_held], embs[-n_held:]) if n_held else (embs, None)
 
     t0 = time.time()
     index = None
@@ -63,7 +95,10 @@ def main() -> None:
             refine=args.refine,
             use_fused=use_fused,
         )
-        index = lider_lib.build_lider(jax.random.PRNGKey(0), embs, cfg)
+        if args.load_index:
+            index = checkpoint.load_index(args.load_index)
+        else:
+            index = lider_lib.build_lider(jax.random.PRNGKey(0), base_embs, cfg)
         # Config is the single source for the search-time knobs below
         # (same convention as n_probe/refine).
         use_fused = cfg.use_fused
@@ -76,27 +111,60 @@ def main() -> None:
     elif args.backend == "mplsh":
         index = build_mplsh(jax.random.PRNGKey(0), embs)
     build_s = time.time() - t0
-    print(f"[serve] backend={args.backend} build={build_s:.1f}s")
+    built_how = "loaded" if args.load_index else "built"
+    print(f"[serve] backend={args.backend} {built_how} in {build_s:.1f}s")
 
-    search = make_backend(
-        args.backend,
-        index,
-        embs,
-        n_probe=args.n_probe,
-        refine=args.refine,
-        use_fused=use_fused,
-    )
-    engine = RetrievalEngine(
-        search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1]
-    )
+    backend_kw = {
+        "lider": dict(
+            n_probe=args.n_probe, refine=args.refine, use_fused=use_fused
+        ),
+        "ivfpq": dict(n_probe=args.n_probe),
+        "mplsh": dict(n_probe=args.n_probe),
+    }.get(args.backend, {})
+    if args.backend == "lider":
+        search = make_backend("lider", None, updatable=True, **backend_kw)
+        engine = RetrievalEngine(
+            search, batch_size=args.batch_size, k=args.k,
+            dim=embs.shape[1], params=index,
+        )
+    else:
+        search = make_backend(args.backend, index, embs, **backend_kw)
+        engine = RetrievalEngine(
+            search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1]
+        )
     engine.warmup()
-    rids = [engine.submit(q) for q in jax.device_get(queries)]
-    engine.drain()
+
+    qs = jax.device_get(queries)
+    if held_embs is not None:
+        # Mixed traffic: serve half, upsert the holdout, serve the rest.
+        half = len(qs) // 2
+        rids = [engine.submit(q) for q in qs[:half]]
+        engine.drain()
+        t0 = time.time()
+        grew = engine.apply_updates(
+            lambda p: update_lib.upsert(p, held_embs)
+        )
+        dt = time.time() - t0
+        print(
+            f"[serve] upserted {n_held} passages in {dt:.3f}s "
+            f"({n_held / max(dt, 1e-9):.0f}/s), generation="
+            f"{engine.generation}, capacity_grew={grew} "
+            f"(recompiles={engine.recompiles})"
+        )
+        rids += [engine.submit(q) for q in qs[half:]]
+        engine.drain()
+    else:
+        rids = [engine.submit(q) for q in qs]
+        engine.drain()
     print(
         f"[serve] {engine.stats.n_queries} queries in "
         f"{engine.stats.total_time_s:.3f}s -> AQT={engine.stats.aqt*1e3:.3f} ms "
         f"(padding {engine.stats.padding_fraction:.1%})"
     )
+
+    if args.save_index:
+        path = checkpoint.save_index(args.save_index, engine.params)
+        print(f"[serve] index saved -> {path}")
 
     gt = flat_search(embs, queries, k=args.k)
     got = jnp.stack([engine.result(r)[0] for r in rids])

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchSpec, ShapeSpec
+from ..core import bank as bank_lib
 from ..core import distributed as dist
 from ..core import lider as lider_lib
 from ..core import lsh as lsh_lib
@@ -549,16 +550,20 @@ def lider_param_structs(rcfg, emb_dtype=jnp.float32) -> lider_lib.LiderParams:
     return lider_lib.LiderParams(
         centroid_cm=centroid_cm,
         centroids=SDS((c, d), jnp.float32),
-        in_lsh=lsh_lib.LSHParams(
-            projections=SDS((d, h * m), jnp.float32), n_arrays=h, key_len=m
+        bank=bank_lib.ClusterBank(
+            lsh=lsh_lib.LSHParams(
+                projections=SDS((d, h * m), jnp.float32), n_arrays=h, key_len=m
+            ),
+            rescale=resc_s((c, h)),
+            rmi=rmi_s((c, h), w),
+            sorted_keys=SDS((c, h, lp), jnp.uint32),
+            sorted_pos=SDS((c, h, lp), jnp.int32),
+            embs=SDS((c, lp, d), emb_dtype),
+            gids=SDS((c, lp), jnp.int32),
+            sizes=SDS((c,), jnp.int32),
+            tombstones=SDS((c,), jnp.int32),
+            next_gid=SDS((), jnp.int32),
         ),
-        in_rescale=resc_s((c, h)),
-        in_rmi=rmi_s((c, h), w),
-        sorted_keys=SDS((c, h, lp), jnp.uint32),
-        sorted_pos=SDS((c, h, lp), jnp.int32),
-        cluster_embs=SDS((c, lp, d), emb_dtype),
-        cluster_gids=SDS((c, lp), jnp.int32),
-        cluster_sizes=SDS((c,), jnp.int32),
     )
 
 

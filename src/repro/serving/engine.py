@@ -5,10 +5,14 @@ Wraps an index backend (LIDER or any baseline) behind one API:
 executes — the latency-vs-throughput batching knob real serving stacks tune.
 AQT (average query time, the paper's efficiency metric) is measured here.
 
-Backends share the signature ``search(queries (B, d), k) -> TopK``.
+Backends share the signature ``search(queries (B, d), k) -> TopK``; an
+*updatable* LIDER backend takes ``search(params, queries, k)`` and the engine
+owns the served params so ``apply_updates`` can swap them between batches
+(checkpointed serving + online upsert/delete — DESIGN.md §Index lifecycle).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable
@@ -45,12 +49,52 @@ class EngineStats:
         return self.n_padded / max(self.n_queries + self.n_padded, 1)
 
 
-def make_backend(kind: str, index, embs: jnp.ndarray | None = None, **kw) -> Callable:
-    """Uniform search closure over any index type."""
+# Searchable knobs each backend accepts; anything else in **kw is a typo and
+# raises instead of being silently ignored. All probing backends take the
+# same ``n_probe`` spelling (mplsh's search fn calls it n_probes internally).
+_BACKEND_KWARGS: dict[str, frozenset[str]] = {
+    "lider": frozenset({"n_probe", "r0", "refine", "use_fused"}),
+    "flat": frozenset(),
+    "pq": frozenset(),
+    "ivfpq": frozenset({"n_probe"}),
+    "sklsh": frozenset(),
+    "mplsh": frozenset({"n_probe"}),
+}
+
+
+def make_backend(
+    kind: str,
+    index,
+    embs: jnp.ndarray | None = None,
+    *,
+    updatable: bool = False,
+    **kw,
+) -> Callable:
+    """Uniform search closure over any index type.
+
+    ``updatable=True`` (LIDER only) returns ``search(params, q, k)`` instead
+    of closing over the index — pass the params to ``RetrievalEngine`` so
+    ``apply_updates`` can swap them between batches.
+    """
+    if kind not in _BACKEND_KWARGS:
+        raise ValueError(
+            f"unknown backend {kind!r}; expected one of "
+            f"{sorted(_BACKEND_KWARGS)}"
+        )
+    unknown = set(kw) - _BACKEND_KWARGS[kind]
+    if unknown:
+        allowed = sorted(_BACKEND_KWARGS[kind]) or "none"
+        raise TypeError(
+            f"backend {kind!r} got unexpected kwargs {sorted(unknown)}; "
+            f"allowed: {allowed}"
+        )
+    if updatable and kind != "lider":
+        raise ValueError(f"updatable backends require kind='lider', got {kind!r}")
+
     if kind == "lider":
-        def search(q, k):
+        def lider_search(params, q, k):
             return lider_lib.search_lider(
-                index,
+                params,
                 q,
                 k=k,
                 n_probe=kw.get("n_probe", 20),
@@ -58,6 +102,12 @@ def make_backend(kind: str, index, embs: jnp.ndarray | None = None, **kw) -> Cal
                 refine=kw.get("refine", False),
                 use_fused=kw.get("use_fused"),
             )
+
+        if updatable:
+            return lider_search
+
+        def search(q, k):
+            return lider_search(index, q, k)
     elif kind == "flat":
         def search(q, k):
             return flat_search(embs, q, k=k)
@@ -70,23 +120,39 @@ def make_backend(kind: str, index, embs: jnp.ndarray | None = None, **kw) -> Cal
     elif kind == "sklsh":
         def search(q, k):
             return sklsh_search(index, embs, q, k=k)
-    elif kind == "mplsh":
+    else:  # mplsh
         def search(q, k):
-            return mplsh_search(index, embs, q, k=k, n_probes=kw.get("n_probes", 8))
-    else:
-        raise ValueError(f"unknown backend {kind}")
+            return mplsh_search(index, embs, q, k=k, n_probes=kw.get("n_probe", 8))
     return search
 
 
 class RetrievalEngine:
-    """Fixed-batch serving with request queueing and AQT accounting."""
+    """Fixed-batch serving with request queueing and AQT accounting.
 
-    def __init__(self, search_fn: Callable, *, batch_size: int, k: int, dim: int):
+    With ``params`` set, ``search_fn`` must take ``(params, q, k)`` and the
+    engine serves whatever params it currently holds — ``apply_updates``
+    swaps them atomically between batches, tracking a generation counter and
+    recompiling (re-warming) only when an update grew array shapes (capacity
+    growth); same-shape updates reuse the compiled search.
+    """
+
+    def __init__(
+        self,
+        search_fn: Callable,
+        *,
+        batch_size: int,
+        k: int,
+        dim: int,
+        params=None,
+    ):
         self.search_fn = search_fn
         self.batch_size = batch_size
         self.k = k
         self.dim = dim
-        self.queue: list[tuple[int, np.ndarray]] = []
+        self.params = params
+        self.generation = 0  # bumped on every apply_updates
+        self.recompiles = 0  # bumped only when shapes changed
+        self.queue: collections.deque[tuple[int, np.ndarray]] = collections.deque()
         self.results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self.stats = EngineStats()
         self._next_id = 0
@@ -94,9 +160,14 @@ class RetrievalEngine:
         # of allocating (batch, dim) floats per batch.
         self._batch_buf = np.zeros((batch_size, dim), np.float32)
 
+    def _search(self, q: jnp.ndarray) -> TopK:
+        if self.params is not None:
+            return self.search_fn(self.params, q, self.k)
+        return self.search_fn(q, self.k)
+
     def warmup(self):
         q = jnp.zeros((self.batch_size, self.dim), jnp.float32)
-        jax.block_until_ready(self.search_fn(q, self.k).ids)
+        jax.block_until_ready(self._search(q).ids)
 
     def submit(self, query: np.ndarray) -> int:
         rid = self._next_id
@@ -104,19 +175,43 @@ class RetrievalEngine:
         self.queue.append((rid, np.asarray(query, np.float32)))
         return rid
 
+    def apply_updates(self, update_fn: Callable) -> bool:
+        """Swap served params to ``update_fn(params)`` between batches.
+
+        ``update_fn`` returns either new params or ``(new_params, stats)``
+        (the ``core.update`` convention). Returns True when leaf shapes
+        changed (capacity growth) — the one case the compiled search must
+        re-trace; the engine eats that recompile here, off the query path.
+        """
+        if self.params is None:
+            raise ValueError(
+                "engine was not built with params (make_backend(..., "
+                "updatable=True) + RetrievalEngine(..., params=...))"
+            )
+        out = update_fn(self.params)
+        new_params = out[0] if isinstance(out, tuple) else out
+        old_shapes = [jnp.shape(l) for l in jax.tree_util.tree_leaves(self.params)]
+        new_shapes = [jnp.shape(l) for l in jax.tree_util.tree_leaves(new_params)]
+        grew = old_shapes != new_shapes
+        self.params = new_params
+        self.generation += 1
+        if grew:
+            self.recompiles += 1
+            self.warmup()
+        return grew
+
     def drain(self) -> None:
         """Execute queued requests in fixed-size (padded) batches."""
         while self.queue:
-            chunk = self.queue[: self.batch_size]
-            self.queue = self.queue[self.batch_size:]
-            n = len(chunk)
+            n = min(len(self.queue), self.batch_size)
+            chunk = [self.queue.popleft() for _ in range(n)]
             q = self._batch_buf
             for i, (_, vec) in enumerate(chunk):
                 q[i] = vec
             if n < self.batch_size:  # zero stale rows from the last batch
                 q[n:] = 0.0
             t0 = time.perf_counter()
-            out: TopK = self.search_fn(jnp.asarray(q), self.k)
+            out: TopK = self._search(jnp.asarray(q))
             # Block on BOTH outputs so AQT covers all device time — blocking
             # on ids alone under-counts when scores finish later.
             ids = np.asarray(jax.block_until_ready(out.ids))

@@ -95,6 +95,130 @@ def restore(directory: str, step: int, like: Any, shardings: Any | None = None) 
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# ---------------------------------------------------------------------------
+# Index checkpointing (serving lifecycle: build once, serve anywhere)
+# ---------------------------------------------------------------------------
+#
+# ``save``/``restore`` above need a ``like`` template for the treedef; a
+# serving process that *loads* an index has nothing to template from, so the
+# index format also records the static (meta) fields and ``load_index``
+# reassembles the LiderParams dataclasses explicitly. Same atomic-write
+# discipline and one .npy per leaf (named by key path, no ordinal prefix —
+# load addresses leaves by path, not position).
+
+_INDEX_DIRNAME = "index"
+_INDEX_META = "index_meta.json"
+
+
+def save_index(directory: str, params: Any) -> str:
+    """Atomically persist a ``LiderParams`` index under ``directory/index``.
+
+    An existing index is renamed aside (``index.old``) before the new one is
+    renamed in, so no crash window ever leaves zero copies on disk — a kill
+    mid-save leaves either the old index in place or, at worst, the finished
+    new index plus a recoverable ``index.old``.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, _INDEX_DIRNAME)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_index_")
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, _leaf_name(path) + ".npy"), arr)
+    meta = {
+        "format": "lider_index_v1",
+        "in_lsh": {
+            "n_arrays": params.bank.lsh.n_arrays,
+            "key_len": params.bank.lsh.key_len,
+        },
+        "in_rmi_n_leaves": params.bank.rmi.n_leaves,
+        "centroid_lsh": {
+            "n_arrays": params.centroid_cm.lsh.n_arrays,
+            "key_len": params.centroid_cm.lsh.key_len,
+        },
+        "centroid_rmi_n_leaves": params.centroid_cm.rmi.n_leaves,
+    }
+    with open(os.path.join(tmp, _INDEX_META), "w") as f:
+        json.dump(meta, f)
+    old = final + ".old"
+    if os.path.exists(final):
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(final, old)
+    os.rename(tmp, final)
+    if os.path.exists(old):
+        shutil.rmtree(old)
+    return final
+
+
+def load_index(directory: str) -> Any:
+    """Load a ``LiderParams`` index saved by :func:`save_index`."""
+    from ..core.bank import ClusterBank
+    from ..core.core_model import CoreModelParams
+    from ..core.lider import LiderParams
+    from ..core.lsh import LSHParams
+    from ..core.rescale import RescaleParams
+    from ..core.rmi import RMIParams
+
+    d = os.path.join(directory, _INDEX_DIRNAME)
+    if not os.path.isdir(d):
+        d = directory  # accept the index dir itself
+    with open(os.path.join(d, _INDEX_META)) as f:
+        meta = json.load(f)
+    if meta.get("format") != "lider_index_v1":
+        raise ValueError(f"not a lider index checkpoint: {d}")
+
+    def leaf(*path: str) -> jnp.ndarray:
+        return jnp.asarray(np.load(os.path.join(d, "__".join(path) + ".npy")))
+
+    def rescale_of(prefix) -> RescaleParams:
+        return RescaleParams(
+            key_min=leaf(*prefix, "key_min"),
+            key_max=leaf(*prefix, "key_max"),
+            length=leaf(*prefix, "length"),
+        )
+
+    def rmi_of(prefix, n_leaves: int) -> RMIParams:
+        return RMIParams(
+            root_w=leaf(*prefix, "root_w"),
+            root_b=leaf(*prefix, "root_b"),
+            leaf_w=leaf(*prefix, "leaf_w"),
+            leaf_b=leaf(*prefix, "leaf_b"),
+            length=leaf(*prefix, "length"),
+            max_err=leaf(*prefix, "max_err"),
+            n_leaves=n_leaves,
+        )
+
+    def lsh_of(prefix, cfg) -> LSHParams:
+        return LSHParams(
+            projections=leaf(*prefix, "projections"),
+            n_arrays=cfg["n_arrays"],
+            key_len=cfg["key_len"],
+        )
+
+    centroid_cm = CoreModelParams(
+        lsh=lsh_of(("centroid_cm", "lsh"), meta["centroid_lsh"]),
+        rescale=rescale_of(("centroid_cm", "rescale")),
+        rmi=rmi_of(("centroid_cm", "rmi"), meta["centroid_rmi_n_leaves"]),
+        sorted_keys=leaf("centroid_cm", "sorted_keys"),
+        sorted_ids=leaf("centroid_cm", "sorted_ids"),
+    )
+    bank = ClusterBank(
+        lsh=lsh_of(("bank", "lsh"), meta["in_lsh"]),
+        rescale=rescale_of(("bank", "rescale")),
+        rmi=rmi_of(("bank", "rmi"), meta["in_rmi_n_leaves"]),
+        sorted_keys=leaf("bank", "sorted_keys"),
+        sorted_pos=leaf("bank", "sorted_pos"),
+        embs=leaf("bank", "embs"),
+        gids=leaf("bank", "gids"),
+        sizes=leaf("bank", "sizes"),
+        tombstones=leaf("bank", "tombstones"),
+        next_gid=leaf("bank", "next_gid"),
+    )
+    return LiderParams(
+        centroid_cm=centroid_cm, centroids=leaf("centroids"), bank=bank
+    )
+
+
 class CheckpointManager:
     """Keep-last-N manager with preemption-safe atomic saves."""
 

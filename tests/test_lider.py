@@ -22,14 +22,16 @@ def built(corpus):
 def test_build_integrity(built):
     x, _, _, p = built
     n = x.shape[0]
-    gids = np.asarray(p.cluster_gids)
+    gids = np.asarray(p.bank.gids)
     valid = gids[gids >= 0]
     # every point indexed exactly once (no capacity drops at default Lp)
     assert len(valid) == n
     assert len(set(valid.tolist())) == n
+    assert int(p.bank.next_gid) == n
+    assert (np.asarray(p.bank.tombstones) == 0).all()
     # cluster embeddings match the corpus rows
     c, lp = gids.shape
-    embs = np.asarray(p.cluster_embs)
+    embs = np.asarray(p.bank.embs)
     xs = np.asarray(x)
     for ci in range(0, c, 13):
         for li in range(0, lp, 17):
@@ -37,10 +39,10 @@ def test_build_integrity(built):
             if g >= 0:
                 np.testing.assert_allclose(embs[ci, li], xs[g], rtol=1e-6)
     # sorted arrays are sorted with pads at the end
-    keys = np.asarray(p.sorted_keys)
-    pos = np.asarray(p.sorted_pos)
+    keys = np.asarray(p.bank.sorted_keys)
+    pos = np.asarray(p.bank.sorted_pos)
     assert (np.diff(keys.astype(np.int64), axis=-1) >= 0).all()
-    sizes = np.asarray(p.cluster_sizes)
+    sizes = np.asarray(p.bank.sizes)
     for ci in range(c):
         row_pos = pos[ci]  # (H, Lp)
         assert ((row_pos >= 0).sum(axis=-1) == sizes[ci]).all()
@@ -83,12 +85,12 @@ def test_capacity_overflow_drops_are_counted(corpus):
         n_clusters=16, n_probe=4, n_arrays=2, n_leaves=2, kmeans_iters=5, capacity=64
     )
     p = lider.build_lider(jax.random.PRNGKey(3), x, cfg)
-    gids = np.asarray(p.cluster_gids)
+    gids = np.asarray(p.bank.gids)
     kept = (gids >= 0).sum()
     assert kept <= x.shape[0]
     assert p.capacity == 64
     # sizes clamped to capacity
-    assert (np.asarray(p.cluster_sizes) <= 64).all()
+    assert (np.asarray(p.bank.sizes) <= 64).all()
 
 
 def test_route_then_incluster_equals_search(built):

@@ -25,7 +25,10 @@ def test_bf16_index_recall_close_to_f32(corpus):
         lider.search_lider(params, q, k=10, n_probe=12, r0=8).ids, gt
     )
     p16 = dataclasses.replace(
-        params, cluster_embs=params.cluster_embs.astype(jnp.bfloat16)
+        params,
+        bank=dataclasses.replace(
+            params.bank, embs=params.bank.embs.astype(jnp.bfloat16)
+        ),
     )
     got = recall_at_k(lider.search_lider(p16, q, k=10, n_probe=12, r0=8).ids, gt)
     assert float(got) >= float(base) - 0.03  # A1 quality guard

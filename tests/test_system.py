@@ -100,7 +100,7 @@ def test_lider_msmarco_bundle_dims():
 
     arch = get_arch("lider-msmarco")
     s = lider_param_structs(arch.config)
-    assert s.cluster_embs.shape == (1024, 12288, 768)
-    assert s.sorted_keys.shape == (1024, 10, 12288)
+    assert s.bank.embs.shape == (1024, 12288, 768)
+    assert s.bank.sorted_keys.shape == (1024, 10, 12288)
     # corpus fits the padded grid
     assert arch.config.corpus_size <= 1024 * 12288
