@@ -19,15 +19,8 @@ def make_task(n: int, dim: int = 64, n_queries: int = 200, seed: int = 0):
     return corpus, queries, seed_ids, gt
 
 
-def mrr_at_10(pred_ids: jnp.ndarray, relevant: jnp.ndarray) -> float:
-    """Mean reciprocal rank of the known-relevant id within the top 10."""
-    pred = np.asarray(pred_ids)[:, :10]
-    rel = np.asarray(relevant)
-    rr = []
-    for row, r in zip(pred, rel):
-        pos = np.nonzero(row == r)[0]
-        rr.append(1.0 / (pos[0] + 1) if len(pos) else 0.0)
-    return float(np.mean(rr))
+# Single metric definition shared with the autotuner (repro.core.utils).
+from repro.core.utils import mrr_at_10  # noqa: E402,F401
 
 
 def recall_vs_flat(pred_ids, gt_ids, k: int = 10) -> float:

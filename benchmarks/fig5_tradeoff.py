@@ -1,6 +1,11 @@
 """Paper Fig. 5/6: speed-quality trade-off curves (AQT vs MRR@10) obtained by
-sweeping each method's knob — LIDER (n_probe), IVFPQ (n_probe), MP-LSH
-(n_probes), SK-LSH (n_candidates)."""
+sweeping each method's knob — LIDER (n_probe, plus adaptive prune_margin
+points), IVFPQ (n_probe), MP-LSH (n_probes), SK-LSH (n_candidates).
+
+The fixed-knob sweep here is the paper's offline table; the *runtime*
+trade-off (adaptive margin + Pareto operating-point selection, with
+device-accurate AQT accounting) lives in ``repro.tuning.pareto`` /
+``BENCH_tradeoff.json`` (DESIGN.md §Adaptive speed-quality control plane)."""
 from __future__ import annotations
 
 import jax
@@ -26,6 +31,19 @@ def run(n: int = 30_000, k: int = 100, verbose: bool = True):
         fn = lambda q, p=p: lider.search_lider(idx, q, k=k, n_probe=p, r0=4)
         lines.append(csv_line(
             f"fig5/lider/probe{p}", time_search(fn, queries) * 1e6,
+            f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
+        if verbose:
+            print(lines[-1])
+
+    # Adaptive points: a wide probe budget whose low-confidence probes the
+    # margin rule masks per query (wall savings need the block-skipping
+    # kernel, i.e. TPU — on CPU these rows show the quality axis only).
+    for p, m in ((20, 0.05), (40, 0.05), (40, 0.1)):
+        fn = lambda q, p=p, m=m: lider.search_lider(
+            idx, q, k=k, n_probe=p, r0=4, prune_margin=m)
+        lines.append(csv_line(
+            f"fig5/lider/probe{p}-margin{m:g}",
+            time_search(fn, queries) * 1e6,
             f"mrr10={mrr_at_10(fn(queries).ids, rel):.4f}"))
         if verbose:
             print(lines[-1])

@@ -51,9 +51,16 @@ def main():
         engine = RetrievalEngine(fn, batch_size=args.batch_size, k=args.k,
                                  dim=args.dim)
         engine.warmup()
-        rids = [engine.submit(v) for v in np.asarray(queries)]
-        engine.drain()
-        got = np.stack([engine.result(r)[0] for r in rids])
+        # Submit/drain/collect in windows: result() pops and the results map
+        # is bounded, so collecting right after each drain keeps the engine's
+        # memory flat however large --queries is.
+        rows, qarr = [], np.asarray(queries)
+        window = min(4096, engine.max_results)
+        for start in range(0, len(qarr), window):
+            rids = [engine.submit(v) for v in qarr[start:start + window]]
+            engine.drain()
+            rows.extend(engine.result(r)[0] for r in rids)
+        got = np.stack(rows)
         rec = float(recall_at_k(got[:, :10], gt.ids[:, :10]))
         print(f"{name:8s} {engine.stats.aqt*1e3:9.3f} {rec:10.4f} "
               f"{engine.stats.n_batches:8d}")

@@ -144,6 +144,24 @@ def gather_cluster_rows(embs: jnp.ndarray, gids: jnp.ndarray) -> jnp.ndarray:
     return embs[jnp.maximum(gids, 0)] * valid[..., None]
 
 
+class CapacityOverflowError(ValueError):
+    """A pack dropped passages because ``capacity`` < max cluster size.
+
+    Dropped passages never get a slot, so they are permanently unretrievable
+    — silent data loss unless the caller explicitly opted in
+    (``allow_drops=True``). ``n_dropped`` carries the count.
+    """
+
+    def __init__(self, n_dropped: int, capacity: int):
+        self.n_dropped = n_dropped
+        self.capacity = capacity
+        super().__init__(
+            f"capacity={capacity} drops {n_dropped} overflow passages "
+            "(they become permanently unretrievable); raise capacity or "
+            "pass allow_drops=True to accept the recall loss"
+        )
+
+
 def build_bank(
     rng: jax.Array,
     embs: jnp.ndarray,
@@ -154,20 +172,32 @@ def build_bank(
     n_arrays: int,
     key_len: int,
     n_leaves: int,
-) -> ClusterBank:
+    allow_drops: bool = False,
+) -> tuple[ClusterBank, int]:
     """Stage-3 build: pack -> hash/sort -> fit, all clusters at once.
 
     ``assignment`` is the Stage-1 point->cluster map; the fit itself is
     ``vmap(refit_cluster)``, so an incremental refit of a single cluster
     (``core.update``) runs byte-identical math.
+
+    Returns ``(bank, n_dropped)``. Packing into ``capacity`` slots drops
+    per-cluster overflow; a lossy pack raises :class:`CapacityOverflowError`
+    unless ``allow_drops=True`` (the count is always returned so callers can
+    surface it either way).
     """
+    raw_sizes = jnp.bincount(assignment, length=n_clusters)
+    n_dropped = int(
+        jax.device_get(jnp.sum(jnp.maximum(raw_sizes - capacity, 0)))
+    )
+    if n_dropped and not allow_drops:
+        raise CapacityOverflowError(n_dropped, capacity)
     gids, sizes = clustering.group_by_cluster(assignment, n_clusters, capacity)
     row_embs = gather_cluster_rows(embs, gids)
     lsh = lsh_lib.make_lsh(rng, embs.shape[-1], n_arrays, key_len)
     sorted_keys, sorted_pos, resc, r = _fit_all_clusters(
         lsh, row_embs, gids >= 0, n_leaves=n_leaves
     )
-    return ClusterBank(
+    bank = ClusterBank(
         lsh=lsh,
         rescale=resc,
         rmi=r,
@@ -179,6 +209,7 @@ def build_bank(
         tombstones=jnp.zeros((n_clusters,), jnp.int32),
         next_gid=jnp.int32(embs.shape[0]),
     )
+    return bank, n_dropped
 
 
 def grow_bank(bank: ClusterBank, new_capacity: int) -> ClusterBank:

@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .bank import replicated_field_names
 from .clustering import update_centroids
 from .core_model import TopK, search_core_model
-from .lider import LiderParams, incluster_search
+from .lider import LiderParams, incluster_search, prune_probes
 from .utils import dedup_topk
 
 
@@ -94,6 +94,7 @@ def make_sharded_search(
     query_axes: Sequence[str] = ("model",),
     refine: bool = False,
     use_fused: bool | None = None,
+    prune_margin: float | None = None,
 ):
     """Build the jitted multi-device search fn: (params, queries) -> (TopK, drops).
 
@@ -105,6 +106,12 @@ def make_sharded_search(
     (None -> fused Pallas kernel on TPU, materialized reference elsewhere;
     DESIGN.md §Verification-kernel). Both the per-pair in-cluster search and
     the replicated centroid routing honor it.
+
+    ``prune_margin`` applies the adaptive margin rule (DESIGN.md §Adaptive)
+    to the routed probes *before* capacity dispatch: pruned pairs never enter
+    a shard's pair budget, so pruning additionally shrinks dispatch pressure
+    — fewer live pairs means fewer capacity-overflow drops at a given
+    ``capacity_factor``.
     """
     caxes = tuple(cluster_axes)
     qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
@@ -129,7 +136,9 @@ def make_sharded_search(
             r0=r0_centroid,
             use_fused=use_fused,
         )
-        cids = routed.ids  # (B_loc, n_probe) global cluster ids
+        # Adaptive probe pruning before dispatch: a pruned pair is -1, i.e.
+        # never "mine" on any shard, so it consumes no capacity slot.
+        cids = prune_probes(routed.ids, routed.scores, prune_margin)
         b_loc, p = cids.shape
         n_pairs = b_loc * p
         flat_cids = cids.reshape(-1)

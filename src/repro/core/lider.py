@@ -56,6 +56,15 @@ class LiderConfig:
     # Like n_probe/refine, search entry points take this as a kwarg and
     # launchers feed it from the config (DESIGN.md §Verification-kernel).
     use_fused: bool | None = None
+    # Adaptive probe pruning (DESIGN.md §Adaptive speed-quality control
+    # plane): probes whose layer-1 centroid score falls more than this
+    # margin below the per-query best are masked to -1 before layer 2.
+    # None disables pruning (bit-identical to the fixed-n_probe search).
+    prune_margin: float | None = None
+    # Capacity overflow policy: when ``capacity`` is below the max cluster
+    # size, overflow passages are silently unretrievable unless this is set
+    # (bank.build_bank raises CapacityOverflowError otherwise).
+    allow_drops: bool = False
 
 
 @pytree_dataclass
@@ -109,13 +118,23 @@ def assign_points(
     return clustering.KMeansResult(centroids=centroids, assignment=assignment)
 
 
+@dataclasses.dataclass(frozen=True)
+class BuildStats:
+    """Host-side accounting for one offline build."""
+
+    n_indexed: int  # passages that got a slot
+    n_dropped: int  # capacity-overflow drops (0 unless allow_drops=True)
+    capacity: int  # padded per-cluster slot count Lp
+
+
 def build_lider(
     rng: jax.Array,
     embs: jnp.ndarray,
     config: LiderConfig,
     *,
     centroids: jnp.ndarray | None = None,
-) -> LiderParams:
+    return_stats: bool = False,
+) -> LiderParams | tuple[LiderParams, BuildStats]:
     n, dim = embs.shape
     c = config.n_clusters
     rng_km, rng_cen, rng_in = jax.random.split(rng, 3)
@@ -127,7 +146,9 @@ def build_lider(
     cap = padded_capacity(max_size, config.capacity, config.pad_multiple)
 
     # Stage 3: pack -> hash/sort -> fit (vmap of the single-cluster refit).
-    bank = bank_lib.build_bank(
+    # Packing counts capacity-overflow drops; unless the config opts in via
+    # allow_drops, a lossy pack raises instead of silently losing passages.
+    bank, n_dropped = bank_lib.build_bank(
         rng_in,
         embs,
         km.assignment,
@@ -136,6 +157,7 @@ def build_lider(
         n_arrays=config.n_arrays,
         key_len=config.key_len or lsh_lib.suggest_key_len(cap),
         n_leaves=config.n_leaves,
+        allow_drops=config.allow_drops,
     )
 
     # Stage 2: centroids retriever.
@@ -147,12 +169,39 @@ def build_lider(
         n_leaves=config.n_leaves_centroid,
     )
 
-    return LiderParams(centroid_cm=centroid_cm, centroids=km.centroids, bank=bank)
+    params = LiderParams(centroid_cm=centroid_cm, centroids=km.centroids, bank=bank)
+    if return_stats:
+        return params, BuildStats(
+            n_indexed=n - n_dropped, n_dropped=n_dropped, capacity=cap
+        )
+    return params
 
 
 # ---------------------------------------------------------------------------
 # Search
 # ---------------------------------------------------------------------------
+
+
+def prune_probes(
+    cids: jnp.ndarray, scores: jnp.ndarray, prune_margin: float | None
+) -> jnp.ndarray:
+    """Margin rule of the adaptive control plane (DESIGN.md §Adaptive).
+
+    ``cids``/``scores``: (B, P) layer-1 routing output. Probes whose centroid
+    score falls more than ``prune_margin`` below the per-query best are
+    masked to -1 — shapes stay static (no recompiles per margin value; the
+    margin itself is traced), downstream layers treat -1 as an unused probe
+    slot. ``None`` returns ``cids`` untouched (bit-identical fixed-probe
+    search).
+    """
+    if prune_margin is None:
+        return cids
+    valid = cids >= 0
+    best = jnp.max(
+        jnp.where(valid, scores, -jnp.inf), axis=-1, keepdims=True
+    )  # (B, 1)
+    keep = scores >= best - prune_margin
+    return jnp.where(valid & keep, cids, -1)
 
 
 def route_queries(
@@ -162,11 +211,23 @@ def route_queries(
     n_probe: int,
     r0: int = 4,
     use_fused: bool | None = None,
+    prune_margin: float | None = None,
 ) -> TopK:
-    """Layer-1: centroids retriever -> (B, n_probe) cluster ids + scores."""
-    return search_core_model(
+    """Layer-1: centroids retriever -> (B, n_probe) cluster ids + scores.
+
+    With ``prune_margin`` set, low-confidence probes come back masked to
+    (-1, -inf) — the slot count stays ``n_probe`` so downstream shapes are
+    static.
+    """
+    routed = search_core_model(
         params.centroid_cm, params.centroids, queries, k=n_probe, r0=r0,
         use_fused=use_fused,
+    )
+    if prune_margin is None:
+        return routed
+    cids = prune_probes(routed.ids, routed.scores, prune_margin)
+    return TopK(
+        ids=cids, scores=jnp.where(cids >= 0, routed.scores, -jnp.inf)
     )
 
 
@@ -180,18 +241,27 @@ def incluster_search(
     refine: bool = False,
     merge: bool = True,
     use_fused: bool | None = None,
+    cid_scores: jnp.ndarray | None = None,
+    prune_margin: float | None = None,
 ) -> TopK:
     """Layer-2: search the probed clusters for each query.
 
     ``queries``: (B, d); ``cids``: (B, P) cluster ids (-1 = unused probe slot).
     With ``merge=False`` returns the per-pair top-k (B, P, k) — the shape the
     distributed capacity-dispatch path scatters back before merging.
+    With ``cid_scores`` (the layer-1 routing scores) and ``prune_margin``
+    both set, probes outside the margin are masked to -1 here instead of by
+    the caller — either spelling yields the same candidate mask.
 
     Verification goes through ``verify_topk_op`` (``use_fused`` as in
     ``LiderConfig``): the fused kernel streams the gathered rows through VMEM
     and emits only the (B, k) result, instead of materializing the
     (B, P, H, R, d) candidate tensor in HBM before the einsum.
     """
+    if prune_margin is not None:
+        if cid_scores is None:
+            raise ValueError("prune_margin needs cid_scores (layer-1 scores)")
+        cids = prune_probes(cids, cid_scores, prune_margin)
     bank = params.bank
     c, h, lp = bank.sorted_keys.shape
     b, p = cids.shape
@@ -266,7 +336,9 @@ def incluster_search(
 
 @partial(
     jax.jit,
-    static_argnames=("k", "n_probe", "r0", "r0_centroid", "refine", "use_fused"),
+    static_argnames=(
+        "k", "n_probe", "r0", "r0_centroid", "refine", "use_fused", "with_stats"
+    ),
 )
 def search_lider(
     params: LiderParams,
@@ -278,12 +350,26 @@ def search_lider(
     r0_centroid: int = 4,
     refine: bool = False,
     use_fused: bool | None = None,
-) -> TopK:
-    """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device."""
+    prune_margin: float | None = None,
+    with_stats: bool = False,
+) -> TopK | tuple[TopK, jnp.ndarray]:
+    """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device.
+
+    ``prune_margin`` enables adaptive probe pruning (see :func:`prune_probes`;
+    traced, so sweeping margins does not recompile; ``None`` is bit-identical
+    to the fixed-probe search). ``with_stats=True`` additionally returns the
+    (B, n_probe) bool mask of probes that were routed but pruned — serving
+    aggregates it into the per-batch pruned-probe fraction.
+    """
     routed = route_queries(
         params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused
     )
-    return incluster_search(
-        params, queries, routed.ids, k=k, r0=r0, refine=refine,
+    cids = prune_probes(routed.ids, routed.scores, prune_margin)
+    out = incluster_search(
+        params, queries, cids, k=k, r0=r0, refine=refine,
         use_fused=use_fused,
     )
+    if with_stats:
+        pruned = (routed.ids >= 0) & (cids < 0)
+        return out, pruned
+    return out

@@ -66,3 +66,20 @@ def recall_at_k(pred_ids: jnp.ndarray, true_ids: jnp.ndarray) -> jnp.ndarray:
         (true_ids >= 0).sum(axis=-1), 1
     )
     return per_row.mean()
+
+
+def mrr_at_10(pred_ids, relevant) -> float:
+    """Mean reciprocal rank of the known-relevant id within the top 10.
+
+    Host-side (numpy) — the single definition shared by the offline
+    benchmarks (``benchmarks.common``) and the Pareto autotuner, so the
+    paper's headline quality metric cannot drift between reports.
+    """
+    import numpy as np
+
+    pred = np.asarray(pred_ids)[:, :10]
+    rr = []
+    for row, r in zip(pred, np.asarray(relevant)):
+        pos = np.nonzero(row == r)[0]
+        rr.append(1.0 / (pos[0] + 1) if len(pos) else 0.0)
+    return float(np.mean(rr))

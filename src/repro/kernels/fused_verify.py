@@ -29,6 +29,12 @@ nor the score matrix exists in HBM.
 ids to *report and dedup by* (defaults to ``row_ids``). LIDER passes flat
 ``(cluster, slot)`` rows as ``row_ids`` and global passage ids as
 ``out_ids``. ``out_ids < 0`` marks padding (scored ``-inf``).
+
+A second scalar-prefetch array carries per-(row, block) valid-candidate
+counts so fully-dead blocks (all probes pruned by the adaptive margin rule,
+or pure padding) skip their DMA issue/wait and MXU pass under ``pl.when`` —
+the mechanism that turns probe pruning into wall-clock savings (DESIGN.md
+§Adaptive speed-quality control plane).
 """
 from __future__ import annotations
 
@@ -47,6 +53,7 @@ NEG_INF = float("-inf")  # python float: jnp scalars would init the backend
 def _fused_verify_kernel(
     # scalar prefetch
     row_ids_s,
+    blk_live_s,
     # inputs
     q_ref,
     oid_ref,
@@ -69,6 +76,15 @@ def _fused_verify_kernel(
     slot = jax.lax.rem(cj, 2)
     nslot = jax.lax.rem(cj + 1, 2)
 
+    # Block-skip contract (DESIGN.md §Adaptive): ``blk_live_s[bi, j]`` is the
+    # number of valid (out_id >= 0) candidates in block j of query row bi,
+    # known before the kernel runs (scalar prefetch). A dead block — every
+    # candidate pruned or padding — would only contribute -inf scores, so we
+    # skip its DMA issue/wait and its MXU pass entirely; the accumulator
+    # simply carries over. Probe pruning therefore saves wall-clock, not just
+    # emits -inf.
+    live = blk_live_s[bi, cj] > 0
+
     def row_dma(blk, s, i):
         row = row_ids_s[bi, blk * block_c + i]
         return pltpu.make_async_copy(emb_hbm.at[row], cand.at[s, i], sem.at[s])
@@ -82,63 +98,74 @@ def _fused_verify_kernel(
 
     @pl.when(cj == 0)
     def _():
-        # New query row: reset the accumulator, warm up the first block.
+        # New query row: reset the accumulator.
         acc_sc[...] = jnp.full_like(acc_sc, NEG_INF)
         acc_ids[...] = jnp.full_like(acc_ids, -1)
-        start_block(0, slot)
 
-    # Double buffering: block cj+1 goes in flight before we block on cj. The
-    # nslot buffer was consumed at step cj-1, so the overwrite is safe.
-    @pl.when(cj + 1 < n_blocks)
+    @pl.when((cj == 0) & live)
+    def _():
+        start_block(0, slot)  # warm up the first live block
+
+    # Double buffering: block cj+1 goes in flight before we block on cj (dead
+    # blocks issue nothing). The nslot buffer's last DMA — from the previous
+    # live block on that slot — was waited at that block's own step, so the
+    # overwrite is safe.
+    nxt = jnp.minimum(cj + 1, n_blocks - 1)  # clamp: SMEM read is unguarded
+    @pl.when((cj + 1 < n_blocks) & (blk_live_s[bi, nxt] > 0))
     def _():
         start_block(cj + 1, nslot)
 
-    def wait_body(i, _):
-        row_dma(cj, slot, i).wait()
-        return 0
+    @pl.when(live)
+    def _():
+        def wait_body(i, _):
+            row_dma(cj, slot, i).wait()
+            return 0
 
-    jax.lax.fori_loop(0, block_c, wait_body, 0)
+        jax.lax.fori_loop(0, block_c, wait_body, 0)
 
-    # Score the resident block: storage-dtype MXU inputs, fp32 accumulation.
-    q = q_ref[...].astype(cand.dtype)  # (1, d)
-    scores = jax.lax.dot_general(
-        q,
-        cand[slot],
-        (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )  # (1, block_c)
-    oid = oid_ref[...]  # (1, block_c)
-    scores = jnp.where(oid >= 0, scores, NEG_INF)
+        # Score the resident block: storage-dtype MXU inputs, fp32 accum.
+        q = q_ref[...].astype(cand.dtype)  # (1, d)
+        scores = jax.lax.dot_general(
+            q,
+            cand[slot],
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (1, block_c)
+        oid = oid_ref[...]  # (1, block_c)
+        scores = jnp.where(oid >= 0, scores, NEG_INF)
 
-    # Streaming top-k merge with duplicate suppression: select the max k
-    # times from [accumulator ++ block]; each selection kills every copy of
-    # the selected id (duplicates carry equal scores, so this is exact).
-    # Score ties between distinct ids break toward the smallest id — the
-    # order ``dedup_topk`` produces (stable top_k over id-sorted candidates).
-    csc0 = jnp.concatenate([acc_sc[...], scores], axis=1)  # (1, L)
-    cid = jnp.concatenate([acc_ids[...], oid], axis=1)  # (1, L)
-    iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+        # Streaming top-k merge with duplicate suppression: select the max k
+        # times from [accumulator ++ block]; each selection kills every copy
+        # of the selected id (duplicates carry equal scores, so this is
+        # exact). Score ties between distinct ids break toward the smallest
+        # id — the order ``dedup_topk`` produces (stable top_k over id-sorted
+        # candidates).
+        csc0 = jnp.concatenate([acc_sc[...], scores], axis=1)  # (1, L)
+        cid = jnp.concatenate([acc_ids[...], oid], axis=1)  # (1, L)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
 
-    def sel_body(i, carry):
-        csc, asc, aid = carry
-        m = jnp.max(csc)
-        tie = csc == m  # all copies of the winner are ties (equal scores)
-        sid = jnp.min(jnp.where(tie, cid, jnp.int32(2**31 - 1)))
-        sid = jnp.where(jnp.isneginf(m), jnp.int32(-1), sid).astype(jnp.int32)
-        kill = (cid == sid) & (sid >= 0)
-        csc = jnp.where(kill, NEG_INF, csc)
-        asc = jnp.where(iota_k == i, m, asc)
-        aid = jnp.where(iota_k == i, sid, aid)
-        return csc, asc, aid
+        def sel_body(i, carry):
+            csc, asc, aid = carry
+            m = jnp.max(csc)
+            tie = csc == m  # all copies of the winner are ties (equal scores)
+            sid = jnp.min(jnp.where(tie, cid, jnp.int32(2**31 - 1)))
+            sid = jnp.where(
+                jnp.isneginf(m), jnp.int32(-1), sid
+            ).astype(jnp.int32)
+            kill = (cid == sid) & (sid >= 0)
+            csc = jnp.where(kill, NEG_INF, csc)
+            asc = jnp.where(iota_k == i, m, asc)
+            aid = jnp.where(iota_k == i, sid, aid)
+            return csc, asc, aid
 
-    init = (
-        csc0,
-        jnp.full((1, k), NEG_INF, jnp.float32),
-        jnp.full((1, k), -1, jnp.int32),
-    )
-    _, asc, aid = jax.lax.fori_loop(0, k, sel_body, init)
-    acc_sc[...] = asc
-    acc_ids[...] = aid
+        init = (
+            csc0,
+            jnp.full((1, k), NEG_INF, jnp.float32),
+            jnp.full((1, k), -1, jnp.int32),
+        )
+        _, asc, aid = jax.lax.fori_loop(0, k, sel_body, init)
+        acc_sc[...] = asc
+        acc_ids[...] = aid
 
     @pl.when(cj == n_blocks - 1)
     def _():
@@ -162,6 +189,13 @@ def fused_verify(
     Returns the deduplicated top-k by ``out_ids`` (default ``row_ids``),
     scores descending, padded with (-1, -inf) when fewer than ``k`` unique
     valid candidates exist. ``out_ids < 0`` marks invalid slots.
+
+    Blocks whose candidates are *all* invalid — e.g. every probe feeding them
+    was pruned by the adaptive margin rule, or they are pure C-padding — are
+    skipped entirely (no DMA, no MXU pass): a per-block valid count rides the
+    scalar prefetch so the kernel knows a block is dead before touching it.
+    Output is bit-identical with or without skipping (dead candidates score
+    -inf either way); an all-invalid row returns all (-1, -inf).
     """
     interpret = resolve_interpret(interpret)
     if out_ids is None:
@@ -175,18 +209,23 @@ def fused_verify(
         out_ids = jnp.pad(out_ids, ((0, 0), (0, pad)), constant_values=-1)
     n_blocks = (c + pad) // bc
     safe_rows = jnp.clip(row_ids, 0, n - 1).astype(jnp.int32)
+    out_ids = out_ids.astype(jnp.int32)
+    # Per-(row, block) valid-candidate counts for the block-skip path.
+    blk_live = jnp.sum(
+        (out_ids >= 0).reshape(b, n_blocks, bc), axis=-1, dtype=jnp.int32
+    )
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(b, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, d), lambda bi, cj, ids: (bi, 0)),
-            pl.BlockSpec((1, bc), lambda bi, cj, ids: (bi, cj)),
+            pl.BlockSpec((1, d), lambda bi, cj, ids, live: (bi, 0)),
+            pl.BlockSpec((1, bc), lambda bi, cj, ids, live: (bi, cj)),
             pl.BlockSpec(memory_space=pltpu.ANY),  # embs stay in HBM
         ],
         out_specs=[
-            pl.BlockSpec((1, k), lambda bi, cj, ids: (bi, 0)),
-            pl.BlockSpec((1, k), lambda bi, cj, ids: (bi, 0)),
+            pl.BlockSpec((1, k), lambda bi, cj, ids, live: (bi, 0)),
+            pl.BlockSpec((1, k), lambda bi, cj, ids, live: (bi, 0)),
         ],
         scratch_shapes=[
             pltpu.VMEM((2, bc, d), embs.dtype),  # double-buffered rows
@@ -205,5 +244,5 @@ def fused_verify(
             jax.ShapeDtypeStruct((b, k), jnp.float32),
         ],
         interpret=interpret,
-    )(safe_rows, queries, out_ids.astype(jnp.int32), embs)
+    )(safe_rows, blk_live, queries, out_ids, embs)
     return ids, scores

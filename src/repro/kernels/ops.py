@@ -54,10 +54,12 @@ def verify_topk_op(
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Candidate verification -> deduplicated top-k, (B, k) ids + scores.
 
-    Pallas: single VMEM-resident gather-score-reduce pass (``fused_verify``).
-    Reference: materialize-then-einsum (``ref.verify_topk_ref``). Both share
-    exact semantics — dedup by ``out_ids`` (< 0 == padding), descending
-    scores, (-1, -inf) fill past the unique-valid count.
+    Pallas: single VMEM-resident gather-score-reduce pass (``fused_verify``),
+    which additionally *skips* blocks whose candidates are all invalid —
+    pruned probes cost no DMA or MXU time (DESIGN.md §Adaptive). Reference:
+    materialize-then-einsum (``ref.verify_topk_ref``). Both share exact
+    semantics — dedup by ``out_ids`` (< 0 == padding), descending scores,
+    (-1, -inf) fill past the unique-valid count.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()

@@ -51,6 +51,11 @@ def verify_topk_ref(
     dedup-top-ks by ``out_ids`` (default ``row_ids``; < 0 marks padding).
     This is exactly the HBM-materialized path the fused kernel replaces, so
     it doubles as the unfused baseline in benchmarks/kernel_verify.py.
+
+    Block-skip semantics mirror: the fused kernel skips blocks whose
+    candidates are all invalid (adaptive probe pruning); here they are
+    simply scored -inf — the outputs are bit-identical, including the
+    all-candidates-invalid row, which returns all (-1, -inf).
     """
     from ..core.utils import NEG_INF, dedup_topk
 

@@ -48,6 +48,17 @@ def main() -> None:
     ap.add_argument("--n-probe", type=int, default=8)
     ap.add_argument("--refine", action="store_true")
     ap.add_argument(
+        "--prune-margin", type=float, default=None,
+        help="adaptive probe pruning: mask probes scoring more than this "
+        "margin below the per-query best (LIDER only; DESIGN.md §Adaptive)",
+    )
+    ap.add_argument(
+        "--recall-target", type=float, default=None,
+        help="autotune (n_probe, prune_margin) on held-out queries and serve "
+        "the cheapest operating point meeting this recall@k (LIDER only; "
+        "overrides --n-probe/--prune-margin)",
+    )
+    ap.add_argument(
         "--use-fused",
         choices=["auto", "on", "off"],
         default="auto",
@@ -74,6 +85,9 @@ def main() -> None:
     lifecycle = args.save_index or args.load_index or args.update_fraction > 0
     if lifecycle and args.backend != "lider":
         raise SystemExit("--save-index/--load-index/--update-fraction need --backend lider")
+    adaptive = args.prune_margin is not None or args.recall_target is not None
+    if adaptive and args.backend != "lider":
+        raise SystemExit("--prune-margin/--recall-target need --backend lider")
     if not 0.0 <= args.update_fraction < 1.0:
         raise SystemExit("--update-fraction must be in [0, 1)")
 
@@ -98,7 +112,14 @@ def main() -> None:
         if args.load_index:
             index = checkpoint.load_index(args.load_index)
         else:
-            index = lider_lib.build_lider(jax.random.PRNGKey(0), base_embs, cfg)
+            index, build_stats = lider_lib.build_lider(
+                jax.random.PRNGKey(0), base_embs, cfg, return_stats=True
+            )
+            if build_stats.n_dropped:
+                print(
+                    f"[serve] WARNING: capacity overflow dropped "
+                    f"{build_stats.n_dropped} passages at build"
+                )
         # Config is the single source for the search-time knobs below
         # (same convention as n_probe/refine).
         use_fused = cfg.use_fused
@@ -114,9 +135,38 @@ def main() -> None:
     built_how = "loaded" if args.load_index else "built"
     print(f"[serve] backend={args.backend} {built_how} in {build_s:.1f}s")
 
+    # Operating point: explicit knobs, or autotuned for a recall target on a
+    # held-out query set (DESIGN.md §Adaptive speed-quality control plane).
+    n_probe, prune_margin = args.n_probe, args.prune_margin
+    if args.recall_target is not None:
+        from ..tuning import pareto as pareto_lib
+
+        held_q, _ = synthetic.retrieval_queries(2, base_embs, 128)
+        held_gt = flat_search(base_embs, held_q, k=args.k)
+        grid = pareto_lib.default_grid(
+            n_probes=tuple(
+                p for p in (2, 4, 8, 16, 32) if p <= args.n_clusters
+            ),
+            refine=args.refine,
+        )
+        t0 = time.time()
+        results = pareto_lib.sweep(
+            index, held_q, held_gt.ids, grid, k=args.k, repeats=2,
+            use_fused=use_fused,
+        )
+        sel = pareto_lib.select_operating_point(results, args.recall_target)
+        n_probe, prune_margin = sel.point.n_probe, sel.point.prune_margin
+        print(
+            f"[serve] autotuned operating point for recall@{args.k}>="
+            f"{args.recall_target}: {sel.point.label()} "
+            f"(held-out recall={sel.recall:.4f}, aqt={sel.aqt_s * 1e6:.1f}us, "
+            f"{time.time() - t0:.1f}s sweep)"
+        )
+
     backend_kw = {
         "lider": dict(
-            n_probe=args.n_probe, refine=args.refine, use_fused=use_fused
+            n_probe=n_probe, refine=args.refine, use_fused=use_fused,
+            prune_margin=prune_margin,
         ),
         "ivfpq": dict(n_probe=args.n_probe),
         "mplsh": dict(n_probe=args.n_probe),
@@ -135,11 +185,24 @@ def main() -> None:
     engine.warmup()
 
     qs = jax.device_get(queries)
+    got_rows = []
+
+    # Submit/drain/collect in windows sized under the engine's results
+    # bound: result() pops, and the results map is a bounded FIFO — queueing
+    # a whole large --queries run before collecting would evict the oldest
+    # answers mid-drain.
+    window = min(4096, engine.max_results)
+
+    def serve_chunk(chunk) -> None:
+        for start in range(0, len(chunk), window):
+            rids = [engine.submit(q) for q in chunk[start:start + window]]
+            engine.drain()
+            got_rows.extend(engine.result(r)[0] for r in rids)
+
     if held_embs is not None:
         # Mixed traffic: serve half, upsert the holdout, serve the rest.
         half = len(qs) // 2
-        rids = [engine.submit(q) for q in qs[:half]]
-        engine.drain()
+        serve_chunk(qs[:half])
         t0 = time.time()
         grew = engine.apply_updates(
             lambda p: update_lib.upsert(p, held_embs)
@@ -151,15 +214,24 @@ def main() -> None:
             f"{engine.generation}, capacity_grew={grew} "
             f"(recompiles={engine.recompiles})"
         )
-        rids += [engine.submit(q) for q in qs[half:]]
-        engine.drain()
+        serve_chunk(qs[half:])
     else:
-        rids = [engine.submit(q) for q in qs]
-        engine.drain()
+        serve_chunk(qs)
+    pruned_note = ""
+    if engine.stats.n_probes_total:
+        per_batch = ", ".join(
+            f"{f:.0%}" for f in list(engine.stats.batch_pruned_fraction)[:8]
+        )
+        pruned_note = (
+            f", pruned probes {engine.stats.pruned_probe_fraction:.1%} "
+            f"(per batch: {per_batch}"
+            + (", ..." if engine.stats.n_batches > 8 else "")
+            + ")"
+        )
     print(
         f"[serve] {engine.stats.n_queries} queries in "
         f"{engine.stats.total_time_s:.3f}s -> AQT={engine.stats.aqt*1e3:.3f} ms "
-        f"(padding {engine.stats.padding_fraction:.1%})"
+        f"(padding {engine.stats.padding_fraction:.1%}{pruned_note})"
     )
 
     if args.save_index:
@@ -167,7 +239,7 @@ def main() -> None:
         print(f"[serve] index saved -> {path}")
 
     gt = flat_search(embs, queries, k=args.k)
-    got = jnp.stack([engine.result(r)[0] for r in rids])
+    got = jnp.stack(got_rows)
     rec = recall_at_k(got, gt.ids)
     print(f"[serve] recall@{args.k} vs Flat = {float(rec):.4f}")
 

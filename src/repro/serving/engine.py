@@ -38,6 +38,17 @@ class EngineStats:
     n_batches: int = 0
     total_time_s: float = 0.0
     n_padded: int = 0  # pad slots executed for partial batches
+    # Adaptive probe pruning (DESIGN.md §Adaptive speed-quality control
+    # plane): probes routed by layer 1 but masked by the margin rule. The
+    # per-batch trace is a bounded deque (newest batches) — a long-running
+    # server must not grow per-batch state without bound; the lifetime
+    # aggregate lives in the two counters.
+    n_probes_total: int = 0
+    n_probes_pruned: int = 0
+    batch_pruned_fraction: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=256)
+    )
+    n_results_evicted: int = 0  # results dropped by the bounded results map
 
     @property
     def aqt(self) -> float:
@@ -48,12 +59,17 @@ class EngineStats:
         """Fraction of executed batch slots that were padding (wasted work)."""
         return self.n_padded / max(self.n_queries + self.n_padded, 1)
 
+    @property
+    def pruned_probe_fraction(self) -> float:
+        """Fraction of routed probes the margin rule pruned (all batches)."""
+        return self.n_probes_pruned / max(self.n_probes_total, 1)
+
 
 # Searchable knobs each backend accepts; anything else in **kw is a typo and
 # raises instead of being silently ignored. All probing backends take the
 # same ``n_probe`` spelling (mplsh's search fn calls it n_probes internally).
 _BACKEND_KWARGS: dict[str, frozenset[str]] = {
-    "lider": frozenset({"n_probe", "r0", "refine", "use_fused"}),
+    "lider": frozenset({"n_probe", "r0", "refine", "use_fused", "prune_margin"}),
     "flat": frozenset(),
     "pq": frozenset(),
     "ivfpq": frozenset({"n_probe"}),
@@ -92,7 +108,12 @@ def make_backend(
         raise ValueError(f"updatable backends require kind='lider', got {kind!r}")
 
     if kind == "lider":
+        prune_margin = kw.get("prune_margin")
+
         def lider_search(params, q, k):
+            # With pruning on, the search also returns the (B, P) bool mask
+            # of routed-but-pruned probes; the engine folds it into
+            # EngineStats (per-batch pruned-probe fraction).
             return lider_lib.search_lider(
                 params,
                 q,
@@ -101,6 +122,8 @@ def make_backend(
                 r0=kw.get("r0", 4),
                 refine=kw.get("refine", False),
                 use_fused=kw.get("use_fused"),
+                prune_margin=prune_margin,
+                with_stats=prune_margin is not None,
             )
 
         if updatable:
@@ -144,6 +167,7 @@ class RetrievalEngine:
         k: int,
         dim: int,
         params=None,
+        max_results: int = 65536,
     ):
         self.search_fn = search_fn
         self.batch_size = batch_size
@@ -153,21 +177,41 @@ class RetrievalEngine:
         self.generation = 0  # bumped on every apply_updates
         self.recompiles = 0  # bumped only when shapes changed
         self.queue: collections.deque[tuple[int, np.ndarray]] = collections.deque()
-        self.results: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        # Bounded FIFO of answered (ids, scores) pairs. ``result()`` pops by
+        # default, so a well-behaved client keeps this near-empty; the bound
+        # is the backstop for clients that never collect (a long-running
+        # server must not leak every answer it has ever produced).
+        if max_results < batch_size:
+            raise ValueError(
+                f"max_results={max_results} must hold at least one batch "
+                f"({batch_size})"
+            )
+        self.max_results = max_results
+        self.results: collections.OrderedDict[
+            int, tuple[np.ndarray, np.ndarray]
+        ] = collections.OrderedDict()
         self.stats = EngineStats()
         self._next_id = 0
         # Preallocated padded batch buffer: drain fills it in place instead
         # of allocating (batch, dim) floats per batch.
         self._batch_buf = np.zeros((batch_size, dim), np.float32)
 
-    def _search(self, q: jnp.ndarray) -> TopK:
+    def _search(self, q: jnp.ndarray):
         if self.params is not None:
             return self.search_fn(self.params, q, self.k)
         return self.search_fn(q, self.k)
 
+    @staticmethod
+    def _split_out(out) -> tuple[TopK, jnp.ndarray | None]:
+        """Backends return TopK or (TopK, pruned-probe mask)."""
+        if isinstance(out, tuple) and not isinstance(out, TopK):
+            return out[0], out[1]
+        return out, None
+
     def warmup(self):
         q = jnp.zeros((self.batch_size, self.dim), jnp.float32)
-        jax.block_until_ready(self._search(q).ids)
+        out, _ = self._split_out(self._search(q))
+        jax.block_until_ready(out.ids)
 
     def submit(self, query: np.ndarray) -> int:
         rid = self._next_id
@@ -211,18 +255,42 @@ class RetrievalEngine:
             if n < self.batch_size:  # zero stale rows from the last batch
                 q[n:] = 0.0
             t0 = time.perf_counter()
-            out: TopK = self._search(jnp.asarray(q))
+            out, pruned = self._split_out(self._search(jnp.asarray(q)))
             # Block on BOTH outputs so AQT covers all device time — blocking
-            # on ids alone under-counts when scores finish later.
-            ids = np.asarray(jax.block_until_ready(out.ids))
-            scores = np.asarray(jax.block_until_ready(out.scores))
+            # on ids alone under-counts when scores finish later. The AQT
+            # window closes HERE: D2H conversion (np.asarray) is host-side
+            # transfer the paper's efficiency metric must not include.
+            jax.block_until_ready((out.ids, out.scores))
             dt = time.perf_counter() - t0
+            ids = np.asarray(out.ids)
+            scores = np.asarray(out.scores)
             self.stats.n_queries += n
             self.stats.n_batches += 1
             self.stats.n_padded += self.batch_size - n
             self.stats.total_time_s += dt
+            if pruned is not None:
+                # Count only the n real queries — padded rows route too, but
+                # their probes are not served traffic.
+                pmask = np.asarray(pruned)[:n]
+                self.stats.n_probes_total += int(pmask.size)
+                self.stats.n_probes_pruned += int(pmask.sum())
+                self.stats.batch_pruned_fraction.append(
+                    float(pmask.sum()) / max(pmask.size, 1)
+                )
             for i, (rid, _) in enumerate(chunk):
                 self.results[rid] = (ids[i], scores[i])
+            while len(self.results) > self.max_results:
+                self.results.popitem(last=False)  # evict oldest un-collected
+                self.stats.n_results_evicted += 1
 
-    def result(self, rid: int):
-        return self.results.get(rid)
+    def result(self, rid: int, *, keep: bool = False):
+        """Fetch (and by default release) the answer for ``rid``.
+
+        Popping on read is what keeps a long-running server's memory flat;
+        ``keep=True`` leaves the entry in the map (it then stays until
+        re-read or evicted by the ``max_results`` bound). Returns None for
+        unknown/already-collected/evicted ids.
+        """
+        if keep:
+            return self.results.get(rid)
+        return self.results.pop(rid, None)

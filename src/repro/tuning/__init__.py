@@ -1,0 +1,26 @@
+"""Offline autotuning for the serving control plane.
+
+``tuning.pareto`` sweeps the speed-quality knobs (n_probe, r0, prune_margin,
+refine) on held-out queries, maps the Pareto frontier (AQT vs recall@k /
+MRR@10), and selects an operating point for a target recall — the bridge
+between the paper's offline trade-off tables (benchmarks/fig5_tradeoff.py)
+and a runtime operating point for ``launch.serve`` (DESIGN.md §Adaptive
+speed-quality control plane).
+"""
+from .pareto import (
+    OperatingPoint,
+    SweepResult,
+    default_grid,
+    pareto_frontier,
+    select_operating_point,
+    sweep,
+)
+
+__all__ = [
+    "OperatingPoint",
+    "SweepResult",
+    "default_grid",
+    "pareto_frontier",
+    "select_operating_point",
+    "sweep",
+]

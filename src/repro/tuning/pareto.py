@@ -1,0 +1,412 @@
+"""Pareto autotuner: sweep the speed-quality knobs, pick an operating point.
+
+LIDER's headline claim is a better speed-quality trade-off, but a fixed
+``n_probe`` pays the worst-case candidate cost for every query. The adaptive
+control plane (DESIGN.md §Adaptive speed-quality control plane) adds a
+``prune_margin`` whose block-skipping verification kernel turns per-query
+routing confidence into wall-clock savings. This module closes the loop:
+
+1. **sweep** ``(n_probe, r0, prune_margin, refine)`` on held-out queries over
+   a built index, measuring AQT, recall@k, MRR@10, and the pruned-probe
+   fraction per operating point;
+2. **pareto_frontier** keeps the non-dominated points (min AQT, max recall);
+3. **select_operating_point** returns the cheapest point meeting a recall
+   target — what ``launch.serve --recall-target`` feeds into the engine.
+
+The CLI emits ``BENCH_tradeoff.json`` and exits non-zero when the frontier
+contains a point strictly dominated by a fixed-``n_probe`` baseline (CI runs
+``--smoke``) — the regression guard that adaptivity keeps paying for itself.
+
+AQT accounting: on TPU the fused block-skip kernel realizes pruning savings
+directly, so ``aqt_s`` is the measured wall AQT. On CPU/GPU the materialized
+reference path cannot skip statically-shaped work, so ``aqt_s`` is the
+device-cost model ``route + (full - route) * live_fraction`` built from two
+measured walls (routing-only and full unpruned search at the same
+``n_probe``) — the savings the kernel contract guarantees on the target
+hardware. Both walls and the model inputs land in the JSON (``aqt_metric``
+says which convention a run used), so nothing is silently extrapolated.
+
+Usage:
+    PYTHONPATH=src python -m repro.tuning.pareto [--smoke]
+        [--out BENCH_tradeoff.json] [--recall-target 0.95] ...
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import lider as lider_lib
+from ..core.utils import mrr_at_10, recall_at_k
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One point of the speed-quality control plane."""
+
+    n_probe: int
+    r0: int = 4
+    prune_margin: float | None = None
+    refine: bool = False
+
+    @property
+    def adaptive(self) -> bool:
+        return self.prune_margin is not None
+
+    def search_kwargs(self) -> dict:
+        return dict(
+            n_probe=self.n_probe,
+            r0=self.r0,
+            refine=self.refine,
+            prune_margin=self.prune_margin,
+        )
+
+    def label(self) -> str:
+        tag = f"probe{self.n_probe}/r{self.r0}"
+        if self.refine:
+            tag += "/refine"
+        if self.adaptive:
+            tag += f"/margin{self.prune_margin:g}"
+        return tag
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    point: OperatingPoint
+    aqt_s: float  # frontier metric (measured on TPU, modeled on CPU/GPU)
+    wall_aqt_s: float  # wall AQT measured on this host, pruning applied
+    wall_route_s: float  # routing-only wall AQT (model input)
+    wall_full_s: float  # unpruned wall AQT at the same n_probe (model input)
+    recall: float
+    mrr10: float
+    pruned_fraction: float
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(d.pop("point"))
+        d["adaptive"] = self.point.adaptive
+        return d
+
+
+def default_grid(
+    n_probes: Sequence[int] = (2, 5, 10, 20, 40),
+    margins: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
+    r0: int = 4,
+    refine: bool = False,
+) -> list[OperatingPoint]:
+    """Fixed baselines (margin=None) plus adaptive variants per n_probe."""
+    fixed = [OperatingPoint(p, r0, None, refine) for p in n_probes]
+    adaptive = [
+        OperatingPoint(p, r0, m, refine)
+        for p in n_probes
+        if p > 1  # pruning a single probe can only be a no-op
+        for m in margins
+    ]
+    return fixed + adaptive
+
+
+def _time_fn(fn, queries, repeats: int) -> float:
+    """Wall seconds per query of a jitted callable (compile excluded).
+
+    ``fn`` must return every device output it is accountable for —
+    ``block_until_ready`` walks the whole pytree, and timing a search by its
+    ids alone under-counts when scores finish later (the same bug the
+    serving engine's AQT window guards against).
+    """
+    jax.block_until_ready(fn(queries))
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(queries)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / (repeats * queries.shape[0])
+
+
+def sweep(
+    params,
+    queries: jnp.ndarray,
+    gt_ids: jnp.ndarray,
+    grid: Sequence[OperatingPoint],
+    *,
+    k: int,
+    relevant: jnp.ndarray | None = None,
+    repeats: int = 3,
+    use_fused: bool | None = None,
+) -> list[SweepResult]:
+    """Measure every operating point on the held-out ``queries``.
+
+    ``gt_ids``: exact top-k ids (Flat search) for recall@k; ``relevant``:
+    optional (B,) known-relevant ids for MRR@10. Routing-only and unpruned
+    walls are measured once per (n_probe, r0, refine) combo and shared by
+    that combo's margin variants.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    base_walls: dict[tuple, tuple[float, float]] = {}
+    results = []
+    for point in grid:
+        base_key = (point.n_probe, point.r0, point.refine)
+        if base_key not in base_walls:
+            route = jax.jit(
+                lambda q, p=point: lider_lib.route_queries(
+                    params, q, n_probe=p.n_probe, use_fused=use_fused
+                )
+            )
+            full = lambda q, p=point: lider_lib.search_lider(
+                params, q, k=k, n_probe=p.n_probe, r0=p.r0, refine=p.refine,
+                use_fused=use_fused,
+            )
+            base_walls[base_key] = (
+                _time_fn(route, queries, repeats),
+                _time_fn(full, queries, repeats),
+            )
+        wall_route, wall_full = base_walls[base_key]
+
+        def run(q, p=point):
+            return lider_lib.search_lider(
+                params, q, k=k, use_fused=use_fused, with_stats=True,
+                **p.search_kwargs(),
+            )
+        out, pruned = run(queries)
+        pruned_frac = float(np.asarray(pruned).mean())
+        # A fixed point's pruned search IS the base full search (margin=None
+        # masks nothing) — reuse its wall instead of timing it twice.
+        wall = (
+            _time_fn(lambda q: run(q)[0], queries, repeats)
+            if point.adaptive
+            else wall_full
+        )
+        if on_tpu:
+            aqt = wall  # block-skip kernel realizes the savings in silicon
+        else:
+            live = 1.0 - pruned_frac
+            aqt = wall_route + max(wall_full - wall_route, 0.0) * live
+        ids = np.asarray(out.ids)
+        results.append(
+            SweepResult(
+                point=point,
+                aqt_s=aqt,
+                wall_aqt_s=wall,
+                wall_route_s=wall_route,
+                wall_full_s=wall_full,
+                recall=float(recall_at_k(out.ids, jnp.asarray(gt_ids))),
+                mrr10=mrr_at_10(ids, relevant) if relevant is not None else -1.0,
+                pruned_fraction=pruned_frac,
+            )
+        )
+    return results
+
+
+def _dominates(a: SweepResult, b: SweepResult) -> bool:
+    """a weakly better on both axes, strictly better on at least one."""
+    ge = a.recall >= b.recall and a.aqt_s <= b.aqt_s
+    return ge and (a.recall > b.recall or a.aqt_s < b.aqt_s)
+
+
+def pareto_frontier(results: Sequence[SweepResult]) -> list[SweepResult]:
+    """Non-dominated subset (min AQT, max recall), sorted by AQT.
+
+    Computed over ALL swept points — fixed baselines included — so a frontier
+    point can never be strictly dominated by a fixed-``n_probe`` config; the
+    CLI re-checks that invariant explicitly as a regression guard.
+    """
+    front = [
+        r
+        for r in results
+        if not any(_dominates(o, r) for o in results if o is not r)
+    ]
+    return sorted(front, key=lambda r: r.aqt_s)
+
+
+def select_operating_point(
+    results: Sequence[SweepResult], recall_target: float
+) -> SweepResult:
+    """Cheapest point meeting the target; highest-recall point if none does."""
+    meeting = [r for r in results if r.recall >= recall_target]
+    if meeting:
+        return min(meeting, key=lambda r: r.aqt_s)
+    return max(results, key=lambda r: (r.recall, -r.aqt_s))
+
+
+def dominated_frontier_points(
+    frontier: Sequence[SweepResult], results: Sequence[SweepResult]
+) -> list[tuple[SweepResult, SweepResult]]:
+    """(frontier point, fixed baseline that strictly dominates it) pairs.
+
+    Non-empty means the adaptive machinery made the trade-off *worse*
+    somewhere — the CI failure condition.
+    """
+    fixed = [r for r in results if not r.point.adaptive]
+    bad = []
+    for p in frontier:
+        for f in fixed:
+            if f.recall >= p.recall and f.aqt_s < p.aqt_s:
+                bad.append((p, f))
+                break
+    return bad
+
+
+def adaptive_beats_fixed(results: Sequence[SweepResult]) -> bool:
+    """Is there an adaptive point cheaper than every fixed config of
+    equal-or-better recall? (The PR's acceptance condition.)"""
+    fixed = [r for r in results if not r.point.adaptive]
+    for a in results:
+        if not a.point.adaptive:
+            continue
+        rivals = [f for f in fixed if f.recall >= a.recall]
+        if all(a.aqt_s < f.aqt_s for f in rivals):
+            return True
+    return False
+
+
+def tune(
+    params,
+    queries,
+    gt_ids,
+    *,
+    k: int,
+    grid: Sequence[OperatingPoint] | None = None,
+    recall_target: float | None = None,
+    relevant=None,
+    repeats: int = 3,
+    use_fused: bool | None = None,
+) -> dict:
+    """Sweep + frontier + selection, as one JSON-ready report dict."""
+    grid = list(grid) if grid is not None else default_grid()
+    results = sweep(
+        params, queries, gt_ids, grid, k=k, relevant=relevant,
+        repeats=repeats, use_fused=use_fused,
+    )
+    frontier = pareto_frontier(results)
+    frontier_set = {id(r) for r in frontier}
+    report = {
+        "backend": jax.default_backend(),
+        "aqt_metric": (
+            "measured_wall"
+            if jax.default_backend() == "tpu"
+            else "modeled_from_measured_walls"
+        ),
+        "k": k,
+        "n_queries": int(queries.shape[0]),
+        "points": [
+            {**r.to_json(), "on_frontier": id(r) in frontier_set}
+            for r in results
+        ],
+        "frontier": [r.to_json() for r in frontier],
+        "checks": {
+            "frontier_not_dominated_by_fixed": not dominated_frontier_points(
+                frontier, results
+            ),
+            "adaptive_beats_fixed_at_equal_or_better_recall":
+                adaptive_beats_fixed(results),
+        },
+    }
+    if recall_target is not None:
+        sel = select_operating_point(results, recall_target)
+        report["recall_target"] = recall_target
+        report["selected"] = {
+            **sel.to_json(),
+            "meets_target": sel.recall >= recall_target,
+        }
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus + coarse grid (CI)")
+    ap.add_argument("--out", default="BENCH_tradeoff.json")
+    ap.add_argument("--corpus-size", type=int, default=100_000)
+    ap.add_argument("--dim", type=int, default=128)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--n-clusters", type=int, default=None,
+                    help="default: corpus_size // 1000 (>= 16)")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--recall-target", type=float, default=0.9)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--n-probes", type=int, nargs="+", default=None)
+    ap.add_argument("--margins", type=float, nargs="+", default=None)
+    ap.add_argument("--no-check", action="store_true",
+                    help="report only; do not exit non-zero when a check "
+                    "fails (dominated frontier, or no adaptive point beating "
+                    "the fixed baselines)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.corpus_size = min(args.corpus_size, 8_000)
+        args.dim = min(args.dim, 32)
+        args.queries = min(args.queries, 64)
+        args.repeats = min(args.repeats, 2)
+
+    from ..core.baselines import flat_search
+    from ..data import synthetic
+
+    corpus = synthetic.retrieval_corpus(0, args.corpus_size, args.dim)
+    queries, relevant = synthetic.retrieval_queries(1, corpus, args.queries)
+    gt = flat_search(corpus, queries, k=args.k)
+
+    n_clusters = args.n_clusters or max(16, args.corpus_size // 1000)
+    cfg = lider_lib.LiderConfig(
+        n_clusters=n_clusters, n_arrays=4, n_leaves=4, kmeans_iters=10
+    )
+    t0 = time.time()
+    params = lider_lib.build_lider(jax.random.PRNGKey(0), corpus, cfg)
+    print(f"[pareto] built n={args.corpus_size} c={n_clusters} "
+          f"in {time.time() - t0:.1f}s")
+
+    n_probes = tuple(args.n_probes) if args.n_probes else (
+        (2, 4, 8, 16) if args.smoke else (2, 5, 10, 20, 40)
+    )
+    n_probes = tuple(p for p in n_probes if p <= n_clusters)
+    margins = tuple(args.margins) if args.margins else (
+        (0.05, 0.1, 0.2) if args.smoke else (0.02, 0.05, 0.1, 0.2)
+    )
+    grid = default_grid(n_probes=n_probes, margins=margins)
+
+    report = tune(
+        params, queries, gt.ids, k=args.k, grid=grid,
+        recall_target=args.recall_target, relevant=relevant,
+        repeats=args.repeats,
+    )
+    report["build"] = {
+        "corpus_size": args.corpus_size, "dim": args.dim,
+        "n_clusters": n_clusters,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    for p in report["points"]:
+        star = "*" if p["on_frontier"] else " "
+        kind = "adapt" if p["adaptive"] else "fixed"
+        print(
+            f"[pareto]{star} {kind} probe={p['n_probe']:3d} "
+            f"margin={p['prune_margin'] if p['prune_margin'] is not None else '-':>5} "
+            f"aqt={p['aqt_s'] * 1e6:9.1f}us recall@{args.k}={p['recall']:.4f} "
+            f"mrr10={p['mrr10']:.4f} pruned={p['pruned_fraction']:.2%}"
+        )
+    sel = report.get("selected")
+    if sel:
+        print(
+            f"[pareto] operating point for recall>={args.recall_target}: "
+            f"{OperatingPoint(sel['n_probe'], sel['r0'], sel['prune_margin'], sel['refine']).label()} "
+            f"(aqt={sel['aqt_s'] * 1e6:.1f}us recall={sel['recall']:.4f}, "
+            f"meets_target={sel['meets_target']})"
+        )
+    checks = report["checks"]
+    print(f"[pareto] checks: {checks} -> {args.out}")
+    # Both checks gate CI. The frontier-domination check is a structural
+    # invariant of pareto_frontier (it can only fail if the frontier code
+    # regresses); the adaptive-beats-fixed check is the payoff condition —
+    # without it, adaptivity regressing to "never cheaper than a fixed
+    # n_probe" would still pass.
+    failed = [name for name, ok in checks.items() if not ok]
+    if failed and not args.no_check:
+        raise SystemExit(f"speed-quality regression, failed checks: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,18 +79,48 @@ def test_refine_variant(built):
     assert float(recall_at_k(out.ids, gt)) > 0.9
 
 
-def test_capacity_overflow_drops_are_counted(corpus):
+def test_capacity_overflow_raises_without_allow_drops(corpus):
+    """Silent data loss guard: a lossy pack must raise unless the caller
+    explicitly opts in — dropped passages are permanently unretrievable."""
+    from repro.core.bank import CapacityOverflowError
+
     x, _, _ = corpus
     cfg = lider.LiderConfig(
         n_clusters=16, n_probe=4, n_arrays=2, n_leaves=2, kmeans_iters=5, capacity=64
     )
-    p = lider.build_lider(jax.random.PRNGKey(3), x, cfg)
+    with pytest.raises(CapacityOverflowError) as ei:
+        lider.build_lider(jax.random.PRNGKey(3), x, cfg)
+    assert ei.value.n_dropped > 0
+    assert ei.value.capacity == 64
+
+
+def test_capacity_overflow_drops_are_counted(corpus):
+    x, _, _ = corpus
+    cfg = lider.LiderConfig(
+        n_clusters=16, n_probe=4, n_arrays=2, n_leaves=2, kmeans_iters=5,
+        capacity=64, allow_drops=True,
+    )
+    p, stats = lider.build_lider(jax.random.PRNGKey(3), x, cfg, return_stats=True)
     gids = np.asarray(p.bank.gids)
     kept = (gids >= 0).sum()
     assert kept <= x.shape[0]
     assert p.capacity == 64
     # sizes clamped to capacity
     assert (np.asarray(p.bank.sizes) <= 64).all()
+    # drop accounting: every corpus point is either packed or counted dropped
+    assert stats.n_dropped == x.shape[0] - kept
+    assert stats.n_indexed == kept
+    assert stats.n_dropped > 0  # this config genuinely overflows
+
+
+def test_no_overflow_build_reports_zero_drops(corpus):
+    x, _, _ = corpus
+    p, stats = lider.build_lider(
+        jax.random.PRNGKey(2), x, CFG, return_stats=True
+    )
+    assert stats.n_dropped == 0
+    assert stats.n_indexed == x.shape[0]
+    assert stats.capacity == p.capacity
 
 
 def test_route_then_incluster_equals_search(built):

@@ -1,10 +1,13 @@
 """Serving engine: batching, padding, result routing, AQT accounting."""
+import time
+
 import jax
 import numpy as np
 import pytest
 
 from repro.core import lider
 from repro.core.baselines import flat_search
+from repro.core.core_model import TopK
 from repro.serving import RetrievalEngine, make_backend
 
 
@@ -52,3 +55,134 @@ def test_engine_lider_backend(corpus):
         ids, _ = engine.result(rid)
         hits += len(set(ids.tolist()) & set(np.asarray(gt)[i].tolist()))
     assert hits / (32 * 10) > 0.8
+    # no pruning configured -> no probe stats accumulated
+    assert engine.stats.n_probes_total == 0
+    assert len(engine.stats.batch_pruned_fraction) == 0
+
+
+def test_engine_lider_backend_reports_pruned_probes(corpus):
+    x, q, _ = corpus
+    cfg = lider.LiderConfig(n_clusters=32, n_probe=8, n_arrays=4, n_leaves=4, kmeans_iters=8)
+    index = lider.build_lider(jax.random.PRNGKey(0), x, cfg)
+    search = make_backend(
+        "lider", index, n_probe=8, r0=8, use_fused=False, prune_margin=0.1
+    )
+    engine = RetrievalEngine(search, batch_size=16, k=10, dim=x.shape[1])
+    rids = [engine.submit(v) for v in np.asarray(q)[:40]]  # padded last batch
+    engine.drain()
+    s = engine.stats
+    # only real queries count: 40 x 8 probes, not 48 x 8
+    assert s.n_probes_total == 40 * 8
+    assert 0 < s.n_probes_pruned < s.n_probes_total
+    assert len(s.batch_pruned_fraction) == s.n_batches == 3
+    assert s.pruned_probe_fraction == pytest.approx(
+        s.n_probes_pruned / s.n_probes_total
+    )
+    for rid in rids:
+        assert engine.result(rid) is not None
+
+
+# ---------------------------------------------------------------------------
+# Regression: results-map memory leak (results grew without bound)
+# ---------------------------------------------------------------------------
+
+
+def test_results_map_does_not_grow_across_drains(corpus):
+    """A long-running engine whose clients collect answers must hold zero
+    retained results between rounds — result() pops by default."""
+    x, q, _ = corpus
+    search = make_backend("flat", None, x)
+    engine = RetrievalEngine(search, batch_size=16, k=5, dim=x.shape[1])
+    engine.warmup()
+    qs = np.asarray(q)[:16]
+    sizes = []
+    for _ in range(4):
+        rids = [engine.submit(v) for v in qs]
+        engine.drain()
+        for rid in rids:
+            assert engine.result(rid) is not None
+        sizes.append(len(engine.results))
+    assert sizes == [0, 0, 0, 0]
+    # popped once -> gone (no second copy retained anywhere)
+    assert engine.result(rids[0]) is None
+
+
+def test_result_keep_leaves_entry_in_map(corpus):
+    x, q, _ = corpus
+    search = make_backend("flat", None, x)
+    engine = RetrievalEngine(search, batch_size=8, k=5, dim=x.shape[1])
+    rid = engine.submit(np.asarray(q)[0])
+    engine.drain()
+    assert engine.result(rid, keep=True) is not None
+    assert len(engine.results) == 1  # still there
+    assert engine.result(rid) is not None  # pop
+    assert len(engine.results) == 0
+
+
+def test_results_map_bounded_when_never_collected(corpus):
+    """Clients that never call result() must not leak: the map is bounded
+    and evicts oldest-first."""
+    x, q, _ = corpus
+    search = make_backend("flat", None, x)
+    engine = RetrievalEngine(
+        search, batch_size=16, k=5, dim=x.shape[1], max_results=32
+    )
+    rids = []
+    for _ in range(4):  # 64 answered, bound is 32
+        rids += [engine.submit(v) for v in np.asarray(q)[:16]]
+        engine.drain()
+    assert len(engine.results) == 32
+    assert engine.stats.n_results_evicted == 32
+    for rid in rids[:32]:  # oldest evicted
+        assert engine.result(rid) is None
+    for rid in rids[32:]:  # newest retained
+        assert engine.result(rid) is not None
+
+
+def test_max_results_must_fit_a_batch(corpus):
+    x, _, _ = corpus
+    search = make_backend("flat", None, x)
+    with pytest.raises(ValueError):
+        RetrievalEngine(search, batch_size=16, k=5, dim=x.shape[1], max_results=8)
+
+
+# ---------------------------------------------------------------------------
+# Regression: AQT window must cover device time only (no D2H conversion)
+# ---------------------------------------------------------------------------
+
+
+class _SlowHostArray:
+    """Device-complete result whose host conversion is expensive — models a
+    large (B, k) transfer. block_until_ready is instant; np.asarray sleeps."""
+
+    def __init__(self, arr, delay_s):
+        self._arr = arr
+        self._delay_s = delay_s
+
+    def block_until_ready(self):
+        return self
+
+    def __array__(self, dtype=None, copy=None):
+        time.sleep(self._delay_s)
+        return self._arr
+
+
+def test_aqt_window_excludes_host_copies():
+    b, k, dim, delay = 4, 3, 8, 0.15
+
+    def search(q, kk):
+        ids = np.tile(np.arange(k, dtype=np.int32), (b, 1))
+        scores = np.zeros((b, k), np.float32)
+        return TopK(
+            ids=_SlowHostArray(ids, delay), scores=_SlowHostArray(scores, delay)
+        )
+
+    engine = RetrievalEngine(search, batch_size=b, k=k, dim=dim)
+    rids = [engine.submit(np.zeros(dim, np.float32)) for _ in range(b)]
+    t0 = time.perf_counter()
+    engine.drain()
+    wall = time.perf_counter() - t0
+    assert wall >= 2 * delay  # both conversions really happened...
+    assert engine.stats.total_time_s < delay  # ...outside the AQT window
+    ids, scores = engine.result(rids[0])
+    np.testing.assert_array_equal(ids, np.arange(k, dtype=np.int32))
