@@ -1,28 +1,38 @@
-"""Verification-kernel benchmark: fused vs materialized einsum, bytes + time.
+"""Verification-kernel benchmark: fused vs materialized, bytes + time, per
+storage dtype.
 
 Emits ``BENCH_verify.json`` so the perf trajectory of the LIDER hot path is
-recorded per commit (CI runs ``--smoke``). Two measurements:
+recorded per commit (CI runs ``--smoke``). Three measurements:
 
 1. **HBM traffic model** (analytic, paper-default shapes B=32, P=20, H=10,
    R=400, d=768 unless overridden) — the byte model from DESIGN.md
-   §Verification-kernel, split into:
+   §Verification-kernel, evaluated for every storage dtype
+   (f32 / bf16 / int8+rescore), split into:
 
    - ``emitted_bytes``: HBM write+read traffic the verification stage *emits*
-     — intermediates (candidate tensor, score matrix, dedup/sort scratch)
-     plus the final top-k. This is the traffic fusion eliminates: the fused
-     kernel keeps every intermediate in VMEM and emits only the (B, k)
-     result. The headline ratio in this report.
+     — intermediates (candidate tensor, score matrix, dedup/sort scratch,
+     and on int8 the gathered scale array + provisional top-k') plus the
+     final top-k. This is the traffic fusion eliminates.
    - ``total_bytes``: emitted + the compulsory traffic both paths share
-     (candidate-row reads, id reads, query reads).
+     (candidate-row reads at the storage width — the term quantization
+     shrinks — plus id/query reads and, on int8, the exact-rescore gather).
 
 2. **Wall time + parity** (measured, smoke shapes) — fused kernel (interpret
-   on CPU, compiled on TPU) vs the materialized reference, with an exact
-   top-k id equality check.
+   on CPU, compiled on TPU) vs the materialized reference at every storage
+   dtype, with an exact top-k id equality check, plus the measured rescore
+   overhead of the int8 second stage.
+
+3. **Recall floor** (measured, smoke shapes) — recall@k of the int8+rescore
+   two-stage verification against exact f32 over the same candidates, and
+   the same for bf16. CI fails when any parity check is false or when
+   int8+rescore recall drops below bf16 recall − eps (the acceptance
+   criterion's regression guard).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.kernel_verify [--smoke]
         [--out BENCH_verify.json] [--b 32] [--p 20] [--h-arrays 10]
-        [--r 400] [--d 768] [--k 100] [--dtype float32|bfloat16]
+        [--r 400] [--d 768] [--k 100] [--rescore-factor 4]
+        [--dtypes float32 bfloat16 int8]
 """
 from __future__ import annotations
 
@@ -31,37 +41,57 @@ import json
 import sys
 import time
 
+STORAGE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
+RECALL_EPS = 0.02  # int8+rescore may trail bf16 recall by at most this
+
 
 def traffic_model(
-    b: int, c: int, d: int, k: int, elem_bytes: int
+    b: int, c: int, d: int, k: int, storage_dtype: str, rescore_factor: int = 4
 ) -> dict[str, dict[str, float]]:
     """HBM bytes per batch for both verification paths (DESIGN.md model).
 
-    ``c`` is candidates per query (P*H*R), ``elem_bytes`` the embedding
-    storage dtype width. Id/score words are 4 B; top-k rows are 8 B (id +
-    score). ``DEDUP_PASSES`` approximates the argsort + take_along_axis +
-    top_k round-trips dedup_topk makes over the (B, C) id/score arrays.
+    ``c`` is candidates per query (P*H*R). Id/score words are 4 B; top-k
+    rows are 8 B (id + score). ``DEDUP_PASSES`` approximates the argsort +
+    take_along_axis + top_k round-trips dedup_topk makes over the (B, C)
+    id/score arrays. For int8 the model adds the per-candidate scale array
+    (one gather read + one write + one kernel read), the provisional top-k'
+    round-trip, and the exact-rescore gather of k' full-precision rows —
+    k'/C (~1% at paper shape) of the first-pass row traffic.
     """
     DEDUP_PASSES = 10  # argsort r/w + 3x take_along_axis r/w + top_k read
+    s = STORAGE_BYTES[storage_dtype]
     bc = b * c
     bcd = b * c * d
 
-    gather_read = bcd * elem_bytes  # candidate rows HBM->chip (both paths)
+    gather_read = bcd * s  # candidate rows HBM->chip (both paths)
     ids_read = bc * 4
-    query_read = b * d * elem_bytes
+    query_read = b * d * s
     topk_write = b * k * 8
 
-    cand_write = bcd * elem_bytes  # (B, C, d) materialization ...
-    cand_read = bcd * elem_bytes  # ... re-read by the einsum
+    quant_extra_emitted = 0.0
+    quant_extra_shared = 0.0
+    if storage_dtype == "int8":
+        kp = min(rescore_factor * k, c)
+        # gathered (B, C) f32 combined-scale array: scale-table read + write
+        # + kernel read
+        quant_extra_emitted += 3 * bc * 4
+        # provisional (B, k') top-k write + read between the passes
+        quant_extra_emitted += 2 * b * kp * 8
+        # exact-rescore gather: k' full-precision rows + their ids
+        quant_extra_shared += b * kp * (d * 4 + 4)
+
+    cand_write = bcd * s  # (B, C, d) materialization ...
+    cand_read = bcd * s  # ... re-read by the einsum
     score_write = bc * 4  # (B, C) score matrix ...
     score_read = bc * 4  # ... re-read by dedup/top-k
     dedup_bytes = DEDUP_PASSES * bc * 4
 
     unfused_emitted = (
-        cand_write + cand_read + score_write + score_read + dedup_bytes + topk_write
+        cand_write + cand_read + score_write + score_read + dedup_bytes
+        + topk_write + quant_extra_emitted
     )
-    fused_emitted = topk_write  # everything else stays in VMEM
-    shared = gather_read + ids_read + query_read
+    fused_emitted = topk_write + quant_extra_emitted
+    shared = gather_read + ids_read + query_read + quant_extra_shared
     return {
         "unfused": {
             "emitted_bytes": unfused_emitted,
@@ -74,39 +104,117 @@ def traffic_model(
     }
 
 
-def _measure(b, c, n, d, k, dtype_name, block_c, iters=3):
+def _time(fn, iters=3):
+    import jax
+
+    out = jax.block_until_ready(fn())  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
+    """Fused-vs-oracle wall + parity for one storage dtype (+ the int8
+    rescore stage's overhead, measured as its own fused pass)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.kernels import fused_verify, ref
+    from repro.kernels.quant import quantize_rows
 
-    dtype = jnp.bfloat16 if dtype_name == "bfloat16" else jnp.float32
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
-    embs = jax.random.normal(k1, (n, d), dtype)
+    embs_f = jax.random.normal(k1, (n, d))
     ids = jax.random.randint(k2, (b, c), -1, n)
-    q = jax.random.normal(k3, (b, d), dtype)
+    q = jax.random.normal(k3, (b, d))
+
+    scales = None
+    if dtype_name == "int8":
+        table, scales = quantize_rows(embs_f)
+    else:
+        table = embs_f.astype(jnp.dtype(dtype_name))
 
     def run_fused():
-        return fused_verify(embs, ids, q, k=k, block_c=block_c)
+        return fused_verify(table, ids, q, k=k, scales=scales, block_c=block_c)
 
     def run_unfused():
-        return ref.verify_topk_ref(embs, ids, q, k=k)
+        return ref.verify_topk_ref(table, ids, q, k=k, scales=scales)
 
     out = {}
     ids_by_path = {}
     for name, fn in (("fused", run_fused), ("unfused", run_unfused)):
-        top_ids, top_sc = jax.block_until_ready(fn())  # compile/warm
-        t0 = time.perf_counter()
-        for _ in range(iters):
-            top_ids, top_sc = fn()
-        jax.block_until_ready((top_ids, top_sc))
-        out[f"wall_s_{name}"] = (time.perf_counter() - t0) / iters
-        ids_by_path[name] = np.asarray(top_ids)
+        out[f"wall_s_{name}"] = _time(fn, iters)
+        ids_by_path[name] = np.asarray(fn()[0])
     out["ids_match"] = bool(
         (ids_by_path["fused"] == ids_by_path["unfused"]).all()
     )
+    if dtype_name == "int8":
+        # The exact second stage: rescore the provisional top-k' rows from
+        # the full-precision table (k'/c the gather of the first pass). The
+        # provisional set comes from a k'-deep first pass — the pipeline
+        # lider._verify_bank_rows actually runs — not from truncating the
+        # k-deep parity run above.
+        kp = min(rescore_factor * k, c)
+
+        def run_first_kp():
+            return fused_verify(table, ids, q, k=kp, scales=scales,
+                                block_c=block_c)
+
+        prov = run_first_kp()[0]
+
+        def run_rescore():
+            return fused_verify(
+                embs_f, jnp.maximum(prov, 0), q, k=k, out_ids=prov,
+                block_c=block_c,
+            )
+
+        # Overhead relative to the k'-deep first pass the real pipeline
+        # (lider._verify_bank_rows) runs — not the k-deep parity run above,
+        # whose smaller top-k accumulator would inflate the fraction.
+        wall_first = _time(run_first_kp, iters)
+        wall = _time(run_rescore, iters)
+        out["wall_s_fused_kp"] = wall_first
+        out["wall_s_rescore"] = wall
+        out["rescore_overhead_frac"] = wall / max(wall_first, 1e-12)
     out["shape"] = {"B": b, "C": c, "N": n, "d": d, "k": k, "dtype": dtype_name}
+    return out
+
+
+def _recall_floor(n, d, b, k, rescore_factor):
+    """Recall@k vs exact f32 of one-shot verification over the same
+    candidate set, per storage dtype (the quality side of the sweep)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.utils import l2_normalize, recall_at_k
+    from repro.kernels.ops import verify_topk_op
+    from repro.kernels.quant import quantize_rows
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1), 2)
+    x = l2_normalize(jax.random.normal(k1, (n, d)))
+    q = l2_normalize(x[:b] + 0.05 * jax.random.normal(k2, (b, d)))
+    cand = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (b, n))
+    gt_ids, _ = verify_topk_op(x, cand, q, k=k, use_pallas=False)
+
+    out = {}
+    for dtype_name in ("bfloat16", "int8"):
+        if dtype_name == "int8":
+            codes, scales = quantize_rows(x)
+            kp = min(rescore_factor * k, n)
+            prov, _ = verify_topk_op(
+                codes, cand, q, k=kp, scales=scales, use_pallas=False
+            )
+            ids, _ = verify_topk_op(
+                x, jnp.maximum(prov, 0), q, k=k, out_ids=prov, use_pallas=False
+            )
+        else:
+            ids, _ = verify_topk_op(
+                x.astype(jnp.bfloat16), cand, q, k=k, use_pallas=False
+            )
+        out[dtype_name] = float(np.asarray(recall_at_k(ids, gt_ids)))
     return out
 
 
@@ -121,16 +229,30 @@ def main() -> None:
     ap.add_argument("--r", type=int, default=400)
     ap.add_argument("--d", type=int, default=768)
     ap.add_argument("--k", type=int, default=100)
-    ap.add_argument("--dtype", default="float32", choices=["float32", "bfloat16"])
+    ap.add_argument("--rescore-factor", type=int, default=4)
+    ap.add_argument("--dtypes", nargs="+",
+                    default=["float32", "bfloat16", "int8"],
+                    choices=list(STORAGE_BYTES))
     args = ap.parse_args()
 
-    elem = 2 if args.dtype == "bfloat16" else 4
     c = args.p * args.h_arrays * args.r
-    model = traffic_model(args.b, c, args.d, args.k, elem)
-    emitted_ratio = (
-        model["unfused"]["emitted_bytes"] / model["fused"]["emitted_bytes"]
-    )
-    total_ratio = model["unfused"]["total_bytes"] / model["fused"]["total_bytes"]
+    model = {
+        sd: traffic_model(args.b, c, args.d, args.k, sd, args.rescore_factor)
+        for sd in args.dtypes
+    }
+    f32_model = traffic_model(args.b, c, args.d, args.k, "float32",
+                              args.rescore_factor)
+    ratios = {
+        sd: {
+            "emitted_vs_unfused": m["unfused"]["emitted_bytes"]
+            / m["fused"]["emitted_bytes"],
+            "total_vs_unfused": m["unfused"]["total_bytes"]
+            / m["fused"]["total_bytes"],
+            "fused_total_vs_f32_fused": f32_model["fused"]["total_bytes"]
+            / m["fused"]["total_bytes"],
+        }
+        for sd, m in model.items()
+    }
 
     import jax
 
@@ -142,43 +264,70 @@ def main() -> None:
             "smoke shapes instead — the traffic model above is unaffected",
             file=sys.stderr,
         )
-    if full_measure:
-        measured = _measure(b=args.b, c=c, n=200_000, d=args.d, k=args.k,
-                            dtype_name=args.dtype, block_c=256)
-    else:
-        measured = _measure(b=4, c=608, n=4096, d=64, k=10,
-                            dtype_name=args.dtype, block_c=128)
+    measured = {}
+    for sd in args.dtypes:
+        if full_measure:
+            measured[sd] = _measure(
+                b=args.b, c=c, n=200_000, d=args.d, k=args.k, dtype_name=sd,
+                block_c=256, rescore_factor=args.rescore_factor,
+            )
+        else:
+            measured[sd] = _measure(
+                b=4, c=608, n=4096, d=64, k=10, dtype_name=sd, block_c=128,
+                rescore_factor=args.rescore_factor,
+            )
+    recall = _recall_floor(
+        n=4096, d=64, b=32, k=10, rescore_factor=args.rescore_factor
+    )
+
+    checks = {
+        f"parity_{sd}": measured[sd]["ids_match"] for sd in args.dtypes
+    }
+    if "int8" in args.dtypes and "bfloat16" in args.dtypes:
+        checks["int8_rescore_recall_floor"] = (
+            recall["int8"] >= recall["bfloat16"] - RECALL_EPS
+        )
+    if "int8" in args.dtypes:
+        checks["int8_total_traffic_at_least_2x_below_f32"] = (
+            ratios["int8"]["fused_total_vs_f32_fused"] >= 2.0
+        )
 
     report = {
         "paper_shape": {
             "B": args.b, "P": args.p, "H": args.h_arrays, "R": args.r,
-            "C": c, "d": args.d, "k": args.k, "dtype": args.dtype,
+            "C": c, "d": args.d, "k": args.k,
+            "rescore_factor": args.rescore_factor,
         },
         "traffic_model": model,
-        "hbm_bytes_ratio_emitted": emitted_ratio,
-        "hbm_bytes_ratio_total": total_ratio,
+        "traffic_ratios": ratios,
         "measured": measured,
+        "recall_vs_exact": recall,
+        "recall_eps": RECALL_EPS,
+        "checks": checks,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
 
-    u, fu = model["unfused"], model["fused"]
-    print(
-        f"verification @ B={args.b} C={c} d={args.d} k={args.k} ({args.dtype})\n"
-        f"  unfused emits {u['emitted_bytes']/2**30:8.2f} GiB "
-        f"(total {u['total_bytes']/2**30:.2f} GiB)\n"
-        f"  fused   emits {fu['emitted_bytes']/2**30:8.2f} GiB "
-        f"(total {fu['total_bytes']/2**30:.2f} GiB)\n"
-        f"  fused moves {emitted_ratio:,.0f}x fewer emitted HBM bytes "
-        f"({total_ratio:.2f}x total)\n"
-        f"  measured {measured['shape']}: "
-        f"fused {measured['wall_s_fused']*1e3:.2f} ms, "
-        f"unfused {measured['wall_s_unfused']*1e3:.2f} ms, "
-        f"ids_match={measured['ids_match']}\n"
-        f"-> {args.out}"
-    )
-    if not measured["ids_match"]:
-        raise SystemExit("fused/unfused top-k ids diverged")
+    for sd in args.dtypes:
+        m, r = model[sd], ratios[sd]
+        extra = ""
+        if sd == "int8":
+            extra = (
+                f" rescore_overhead={measured[sd]['rescore_overhead_frac']:.1%}"
+                f" recall={recall['int8']:.4f}"
+            )
+        print(
+            f"[verify] {sd:>8}: fused total {m['fused']['total_bytes']/2**30:7.2f} GiB "
+            f"({r['fused_total_vs_f32_fused']:.2f}x below f32), emits "
+            f"{m['fused']['emitted_bytes']/2**20:8.2f} MiB "
+            f"({r['emitted_vs_unfused']:,.0f}x less than unfused); "
+            f"measured fused {measured[sd]['wall_s_fused']*1e3:.2f} ms, "
+            f"ids_match={measured[sd]['ids_match']}{extra}"
+        )
+    print(f"[verify] checks: {checks} -> {args.out}")
+    failed = [name for name, ok in checks.items() if not ok]
+    if failed:
+        raise SystemExit(f"verification regression, failed checks: {failed}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,84 @@
+"""JAX version-compatibility shims (single home for API drift).
+
+The repo targets current jax, but must also run on older 0.4.x releases
+(the pinned accelerator images lag upstream). Every call site that touched a
+moved/renamed jax API goes through this module instead of sniffing versions
+locally, so a future cleanup is one file:
+
+- ``shard_map``: ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old), and the replication-check
+  kwarg rename (``check_vma`` vs ``check_rep``) — we always disable it.
+- ``get_abstract_mesh``: ``jax.sharding.get_abstract_mesh`` (new) vs the
+  thread-resources physical mesh set by the ``with mesh:`` context (old).
+  Either way the return value supports ``.empty``, ``.axis_names``,
+  ``.shape`` and can be handed to :func:`shard_map`.
+- ``set_mesh``: ``jax.sharding.set_mesh(mesh)`` (new) vs entering the mesh
+  itself as a context manager (old).
+- ``make_mesh`` / ``mesh_from_devices``: construct a Mesh with
+  ``AxisType.Auto`` axis types where the kwarg exists, without it otherwise
+  (old jax has no AxisType and treats every axis as auto).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import numpy as np
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def _auto_axis_kwargs(n_axes: int) -> dict:
+    if _HAS_AXIS_TYPE:
+        return {"axis_types": (jax.sharding.AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with auto axis types where supported."""
+    try:
+        return jax.make_mesh(tuple(shape), tuple(axes), **_auto_axis_kwargs(len(axes)))
+    except TypeError:  # old jax.make_mesh: no axis_types kwarg
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def mesh_from_devices(devices, axes: Sequence[str]) -> jax.sharding.Mesh:
+    """Mesh over an explicit (already reshaped) device array."""
+    return jax.sharding.Mesh(
+        np.asarray(devices), tuple(axes), **_auto_axis_kwargs(len(axes))
+    )
+
+
+def shard_map(body, *, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking disabled."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when there is none (old jax outside
+    ``with mesh:``). Callers must handle both None and ``mesh.empty``."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    try:  # old jax: the `with mesh:` context sets the thread-resource env
+        from jax.interpreters.pxla import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        return None if mesh.empty else mesh
+    except Exception:  # noqa: BLE001 — no ambient-mesh concept at all
+        return None
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for sharding resolution."""
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh  # old jax: Mesh is itself the context manager

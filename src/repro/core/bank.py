@@ -39,15 +39,23 @@ import jax
 import jax.numpy as jnp
 
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
+from ..kernels.quant import dequantize_rows, quantize_rows
 from .types import pytree_dataclass
 
 # dataclasses.field metadata key: leading cluster axis (int) or None for
 # replicated leaves. core.distributed reads this to build PartitionSpecs.
 CLUSTER_AXIS = "cluster_axis"
 
+# Supported embedding storage dtypes (LiderConfig.storage_dtype). "int8"
+# additionally populates ``emb_scales`` + ``rescore_embs`` (DESIGN.md
+# §Quantized bank).
+STORAGE_DTYPES = ("float32", "bfloat16", "int8")
 
-def _f(cluster_axis: int | None):
-    return dataclasses.field(metadata={CLUSTER_AXIS: cluster_axis})
+
+def _f(cluster_axis: int | None, default=dataclasses.MISSING):
+    return dataclasses.field(
+        metadata={CLUSTER_AXIS: cluster_axis}, default=default
+    )
 
 
 @pytree_dataclass
@@ -57,11 +65,16 @@ class ClusterBank:
     rmi: rmi_lib.RMIParams = _f(0)  # leaves (c, H) / (c, H, W)
     sorted_keys: jnp.ndarray = _f(0)  # (c, H, Lp) uint32
     sorted_pos: jnp.ndarray = _f(0)  # (c, H, Lp) int32
-    embs: jnp.ndarray = _f(0)  # (c, Lp, d)
+    embs: jnp.ndarray = _f(0)  # (c, Lp, d) — storage dtype (f32/bf16/int8)
     gids: jnp.ndarray = _f(0)  # (c, Lp) int32
     sizes: jnp.ndarray = _f(0)  # (c,) int32 — live rows
     tombstones: jnp.ndarray = _f(0)  # (c,) int32 — dead rows awaiting compaction
     next_gid: jnp.ndarray = _f(None)  # () int32 — bank metadata, replicated
+    # int8 storage only (None otherwise): per-row symmetric scales and the
+    # full-precision side table the exact-rescore pass gathers its top-k'
+    # rows from (DESIGN.md §Quantized bank).
+    emb_scales: jnp.ndarray | None = _f(0, default=None)  # (c, Lp) f32
+    rescore_embs: jnp.ndarray | None = _f(0, default=None)  # (c, Lp, d)
 
     @property
     def n_clusters(self) -> int:
@@ -74,6 +87,25 @@ class ClusterBank:
     @property
     def dim(self) -> int:
         return self.embs.shape[-1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.emb_scales is not None
+
+    @property
+    def storage_dtype(self) -> str:
+        return "int8" if self.quantized else str(self.embs.dtype)
+
+    def float_rows(self) -> jnp.ndarray:
+        """(c, Lp, d) rows as first-pass verification scores them —
+        dequantized codes for int8 storage, the stored rows otherwise.
+        Convenience accessor for consumers/tests; the fit paths apply the
+        same ``dequantize_rows`` to their gathered sub-banks (build_bank,
+        update._refit_clusters, update._compact_clusters) rather than
+        materializing the whole bank through here."""
+        if self.quantized:
+            return dequantize_rows(self.embs, self.emb_scales)
+        return self.embs
 
 
 def replicated_field_names() -> tuple[str, ...]:
@@ -144,6 +176,29 @@ def gather_cluster_rows(embs: jnp.ndarray, gids: jnp.ndarray) -> jnp.ndarray:
     return embs[jnp.maximum(gids, 0)] * valid[..., None]
 
 
+def store_rows(
+    raw_rows: jnp.ndarray, storage_dtype: str
+) -> tuple[jnp.ndarray, jnp.ndarray | None, jnp.ndarray | None]:
+    """Raw packed float rows -> ``(embs, emb_scales, rescore_embs)``.
+
+    The single conversion point from float rows to bank storage, shared by
+    the offline build and the upsert append (so both quantize identically —
+    the scheme is row-local, which is what keeps upsert slot-identical to a
+    rebuild). For int8 the raw rows are also kept as the full-precision
+    rescore side table; zero (padded) rows quantize to exact zeros.
+    """
+    if storage_dtype == "int8":
+        codes, scales = quantize_rows(raw_rows)
+        return codes, scales, raw_rows
+    if storage_dtype == "bfloat16":
+        return raw_rows.astype(jnp.bfloat16), None, None
+    if storage_dtype == "float32":
+        return raw_rows.astype(jnp.float32), None, None
+    raise ValueError(
+        f"storage_dtype must be one of {STORAGE_DTYPES}, got {storage_dtype!r}"
+    )
+
+
 class CapacityOverflowError(ValueError):
     """A pack dropped passages because ``capacity`` < max cluster size.
 
@@ -173,12 +228,18 @@ def build_bank(
     key_len: int,
     n_leaves: int,
     allow_drops: bool = False,
+    storage_dtype: str = "float32",
 ) -> tuple[ClusterBank, int]:
-    """Stage-3 build: pack -> hash/sort -> fit, all clusters at once.
+    """Stage-3 build: pack -> store -> hash/sort -> fit, all clusters at once.
 
     ``assignment`` is the Stage-1 point->cluster map; the fit itself is
     ``vmap(refit_cluster)``, so an incremental refit of a single cluster
     (``core.update``) runs byte-identical math.
+
+    ``storage_dtype`` selects the embedding storage representation; the fit
+    runs on the *storage-effective* rows (``ClusterBank.float_rows`` — e.g.
+    dequantized int8), so an online refit reading rows back from the bank
+    reproduces the offline fit bit-for-bit.
 
     Returns ``(bank, n_dropped)``. Packing into ``capacity`` slots drops
     per-cluster overflow; a lossy pack raises :class:`CapacityOverflowError`
@@ -192,10 +253,14 @@ def build_bank(
     if n_dropped and not allow_drops:
         raise CapacityOverflowError(n_dropped, capacity)
     gids, sizes = clustering.group_by_cluster(assignment, n_clusters, capacity)
-    row_embs = gather_cluster_rows(embs, gids)
+    raw_rows = gather_cluster_rows(embs, gids)
+    stored, emb_scales, rescore_embs = store_rows(raw_rows, storage_dtype)
     lsh = lsh_lib.make_lsh(rng, embs.shape[-1], n_arrays, key_len)
+    fit_rows = (
+        dequantize_rows(stored, emb_scales) if emb_scales is not None else stored
+    )
     sorted_keys, sorted_pos, resc, r = _fit_all_clusters(
-        lsh, row_embs, gids >= 0, n_leaves=n_leaves
+        lsh, fit_rows, gids >= 0, n_leaves=n_leaves
     )
     bank = ClusterBank(
         lsh=lsh,
@@ -203,11 +268,13 @@ def build_bank(
         rmi=r,
         sorted_keys=sorted_keys,
         sorted_pos=sorted_pos,
-        embs=row_embs,
+        embs=stored,
         gids=gids,
         sizes=sizes,
         tombstones=jnp.zeros((n_clusters,), jnp.int32),
         next_gid=jnp.int32(embs.shape[0]),
+        emb_scales=emb_scales,
+        rescore_embs=rescore_embs,
     )
     return bank, n_dropped
 
@@ -239,4 +306,18 @@ def grow_bank(bank: ClusterBank, new_capacity: int) -> ClusterBank:
         ),
         embs=jnp.pad(bank.embs, ((0, 0), (0, extra), (0, 0))),
         gids=jnp.pad(bank.gids, ((0, 0), (0, extra)), constant_values=-1),
+        # Pad scale 1.0, the all-zero-row convention, so grown slots
+        # dequantize to exact zeros (same as a fresh pack's padding).
+        emb_scales=(
+            None
+            if bank.emb_scales is None
+            else jnp.pad(
+                bank.emb_scales, ((0, 0), (0, extra)), constant_values=1.0
+            )
+        ),
+        rescore_embs=(
+            None
+            if bank.rescore_embs is None
+            else jnp.pad(bank.rescore_embs, ((0, 0), (0, extra), (0, 0)))
+        ),
     )

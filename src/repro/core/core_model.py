@@ -117,15 +117,48 @@ def search_core_model(
     r0: int = 4,
     refine: bool = False,
     use_fused: bool | None = None,
+    block_c: int | None = None,
+    scales: jnp.ndarray | None = None,
+    rescore_embs: jnp.ndarray | None = None,
+    rescore_factor: int = 4,
 ) -> TopK:
     """Full paper search path on a single core model.
 
     Verification (gather candidate rows -> exact scores -> dedup top-k) runs
     through ``verify_topk_op``: a single fused VMEM-resident Pallas pass on
     TPU, the materialized reference elsewhere (``use_fused`` overrides;
-    DESIGN.md §Verification-kernel).
+    DESIGN.md §Verification-kernel). ``block_c`` tunes the kernel's
+    candidate block size.
+
+    With ``scales`` set, ``embs`` is an int8 code table (per-row symmetric,
+    ``kernels.quant``): the first pass scores in the compressed domain and
+    the provisional top-``rescore_factor * k`` is exactly rescored from
+    ``rescore_embs`` (the full-precision table) — the standalone-model
+    spelling of the quantized ClusterBank search (DESIGN.md §Quantized
+    bank). Candidate ids here *are* corpus row ids, so no row/id mapping is
+    needed between the passes.
     """
     positions = predict_positions(cm, queries, refine=refine)
     cand_ids = candidate_windows(cm, positions, width=r0 * k)
-    ids, sc = verify_topk_op(embs, cand_ids, queries, k=k, use_pallas=use_fused)
+    if scales is not None:
+        if rescore_embs is None:
+            raise ValueError("quantized search needs rescore_embs")
+        kp = min(max(rescore_factor, 1) * k, cand_ids.shape[-1])
+        prov, _ = verify_topk_op(
+            embs, cand_ids, queries, k=kp, scales=scales, block_c=block_c,
+            use_pallas=use_fused,
+        )
+        ids, sc = verify_topk_op(
+            rescore_embs,
+            jnp.maximum(prov, 0),
+            queries,
+            k=k,
+            out_ids=prov,
+            block_c=block_c,
+            use_pallas=use_fused,
+        )
+        return TopK(ids=ids, scores=sc)
+    ids, sc = verify_topk_op(
+        embs, cand_ids, queries, k=k, block_c=block_c, use_pallas=use_fused
+    )
     return TopK(ids=ids, scores=sc)

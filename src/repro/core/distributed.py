@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from .. import compat
 from .bank import replicated_field_names
 from .clustering import update_centroids
 from .core_model import TopK, search_core_model
@@ -95,6 +96,8 @@ def make_sharded_search(
     refine: bool = False,
     use_fused: bool | None = None,
     prune_margin: float | None = None,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
 ):
     """Build the jitted multi-device search fn: (params, queries) -> (TopK, drops).
 
@@ -112,6 +115,13 @@ def make_sharded_search(
     a shard's pair budget, so pruning additionally shrinks dispatch pressure
     — fewer live pairs means fewer capacity-overflow drops at a given
     ``capacity_factor``.
+
+    Quantized banks (int8 ``embs`` + ``emb_scales``/``rescore_embs``) work
+    unchanged: the new bank fields carry ``cluster_axis`` metadata, so their
+    PartitionSpecs derive automatically, and the per-pair in-cluster search
+    runs the compressed-domain + exact-rescore pass shard-locally
+    (``rescore_factor``/``block_c`` tune it) — provisional rows always live
+    in the shard that found them, so no extra collective appears.
     """
     caxes = tuple(cluster_axes)
     qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
@@ -135,6 +145,7 @@ def make_sharded_search(
             k=n_probe,
             r0=r0_centroid,
             use_fused=use_fused,
+            block_c=block_c,
         )
         # Adaptive probe pruning before dispatch: a pruned pair is -1, i.e.
         # never "mine" on any shard, so it consumes no capacity slot.
@@ -166,6 +177,8 @@ def make_sharded_search(
             r0=r0,
             refine=refine,
             use_fused=use_fused,
+            rescore_factor=rescore_factor,
+            block_c=block_c,
         )  # (cap, k)
 
         # Scatter per-pair results back to their (query, probe-slot) rows.
@@ -196,12 +209,11 @@ def make_sharded_search(
         return ids, sc, dropped
 
     qspec = P(qaxes, None) if qaxes else P(None, None)
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(param_specs, qspec),
         out_specs=(qspec, qspec, P()),
-        check_vma=False,
     )
 
     @jax.jit
@@ -240,11 +252,10 @@ def make_sharded_kmeans_step(
         return update_centroids(centroids, sums, counts)
 
     return jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             body,
             mesh=mesh,
             in_specs=(P(daxes, None), P()),
             out_specs=P(),
-            check_vma=False,
         )
     )

@@ -56,6 +56,15 @@ class LiderConfig:
     # Like n_probe/refine, search entry points take this as a kwarg and
     # launchers feed it from the config (DESIGN.md §Verification-kernel).
     use_fused: bool | None = None
+    # Embedding storage dtype (DESIGN.md §Quantized bank): "float32",
+    # "bfloat16", or "int8". int8 cuts the compulsory candidate-row gather
+    # 4x vs f32 and adds an exact rescore pass over the provisional
+    # top-(rescore_factor * k) from the full-precision side table.
+    storage_dtype: str = "float32"
+    rescore_factor: int = 4  # k' = rescore_factor * k (int8 storage only)
+    # Verification-kernel candidate block size; None -> kernel default (256).
+    # Swept by the Pareto autotuner alongside the quantization knobs.
+    block_c: int | None = None
     # Adaptive probe pruning (DESIGN.md §Adaptive speed-quality control
     # plane): probes whose layer-1 centroid score falls more than this
     # margin below the per-query best are masked to -1 before layer 2.
@@ -158,6 +167,7 @@ def build_lider(
         key_len=config.key_len or lsh_lib.suggest_key_len(cap),
         n_leaves=config.n_leaves,
         allow_drops=config.allow_drops,
+        storage_dtype=config.storage_dtype,
     )
 
     # Stage 2: centroids retriever.
@@ -212,16 +222,19 @@ def route_queries(
     r0: int = 4,
     use_fused: bool | None = None,
     prune_margin: float | None = None,
+    block_c: int | None = None,
 ) -> TopK:
     """Layer-1: centroids retriever -> (B, n_probe) cluster ids + scores.
 
     With ``prune_margin`` set, low-confidence probes come back masked to
     (-1, -inf) — the slot count stays ``n_probe`` so downstream shapes are
-    static.
+    static. The centroid table itself always stays full precision (it is
+    KB–MB sized; quantizing it would risk routing quality for no traffic
+    win).
     """
     routed = search_core_model(
         params.centroid_cm, params.centroids, queries, k=n_probe, r0=r0,
-        use_fused=use_fused,
+        use_fused=use_fused, block_c=block_c,
     )
     if prune_margin is None:
         return routed
@@ -229,6 +242,72 @@ def route_queries(
     return TopK(
         ids=cids, scores=jnp.where(cids >= 0, routed.scores, -jnp.inf)
     )
+
+
+def _verify_bank_rows(
+    bank: ClusterBank,
+    flat_rows: jnp.ndarray,
+    out_gids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    rescore_factor: int,
+    block_c: int | None,
+    use_pallas: bool | None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Verify ``(Bq, C)`` flat bank rows -> gid-space top-k ids + scores.
+
+    The single verification funnel for both ``incluster_search`` shapes
+    (merged and per-pair). On a float bank this is one ``verify_topk_op``
+    call deduped by global id. On a quantized bank it is the two-stage pass
+    (DESIGN.md §Quantized bank):
+
+    1. int8 first pass over the code table, deduped by *flat row* — exact
+       within the bank, since a passage occupies exactly one (cluster, slot)
+       — keeping the provisional top-``k' = rescore_factor*k``;
+    2. exact rescore of those k' rows from the full-precision side table
+       (a gather k'/C the size of the first pass), reusing the same fused
+       kernel; final rows map back to global ids through ``bank.gids``.
+
+    Score ties between distinct passages break by smallest flat row on the
+    quantized path (vs smallest gid on the float path) — both deterministic.
+    """
+    c, lp = bank.gids.shape
+    flat_table = bank.embs.reshape(c * lp, -1)
+    if not bank.quantized:
+        return verify_topk_op(
+            flat_table,
+            flat_rows,
+            queries,
+            k=k,
+            out_ids=out_gids,
+            block_c=block_c,
+            use_pallas=use_pallas,
+        )
+    out_rows = jnp.where(out_gids >= 0, flat_rows, -1)
+    kp = min(max(rescore_factor, 1) * k, out_rows.shape[-1])
+    prov_rows, _ = verify_topk_op(
+        flat_table,
+        flat_rows,
+        queries,
+        k=kp,
+        out_ids=out_rows,
+        scales=bank.emb_scales.reshape(-1),
+        block_c=block_c,
+        use_pallas=use_pallas,
+    )
+    rescore_table = bank.rescore_embs.reshape(c * lp, -1)
+    rows, scores = verify_topk_op(
+        rescore_table,
+        jnp.maximum(prov_rows, 0),
+        queries,
+        k=k,
+        out_ids=prov_rows,
+        block_c=block_c,
+        use_pallas=use_pallas,
+    )
+    ids = jnp.where(rows >= 0, bank.gids.reshape(-1)[jnp.maximum(rows, 0)], -1)
+    return ids, scores
 
 
 def incluster_search(
@@ -243,6 +322,8 @@ def incluster_search(
     use_fused: bool | None = None,
     cid_scores: jnp.ndarray | None = None,
     prune_margin: float | None = None,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
 ) -> TopK:
     """Layer-2: search the probed clusters for each query.
 
@@ -256,7 +337,11 @@ def incluster_search(
     Verification goes through ``verify_topk_op`` (``use_fused`` as in
     ``LiderConfig``): the fused kernel streams the gathered rows through VMEM
     and emits only the (B, k) result, instead of materializing the
-    (B, P, H, R, d) candidate tensor in HBM before the einsum.
+    (B, P, H, R, d) candidate tensor in HBM before the einsum. On an int8
+    bank the pass runs in the compressed domain and is followed by an exact
+    rescore of the provisional top-``rescore_factor * k`` rows
+    (:func:`_verify_bank_rows`); ``block_c`` tunes the kernel's candidate
+    block size.
     """
     if prune_margin is not None:
         if cid_scores is None:
@@ -308,27 +393,31 @@ def incluster_search(
     # flat_emb), dedup/report by global passage id (out_ids = gids, -1 where
     # invalid — tombstoned rows carry gid -1 and are suppressed here).
     # Scoring happens in the embedding storage dtype (bf16 stays bf16 on the
-    # MXU) with fp32 accumulation for a stable top-k ordering.
-    flat_table = bank.embs.reshape(c * lp, -1)
+    # MXU, int8 runs int8xint8->int32 + exact rescore) with fp32 accumulation
+    # for a stable top-k ordering.
     if merge:
-        ids, sc = verify_topk_op(
-            flat_table,
+        ids, sc = _verify_bank_rows(
+            bank,
             flat_emb.reshape(b, -1),
+            gids.reshape(b, -1),
             queries,
             k=k,
-            out_ids=gids.reshape(b, -1),
+            rescore_factor=rescore_factor,
+            block_c=block_c,
             use_pallas=use_fused,
         )
         return TopK(ids=ids, scores=sc)
     # Per-pair top-k: flatten (query, probe) pairs into the batch axis so the
     # same kernel covers the shape the distributed path scatters back.
     pair_q = jnp.broadcast_to(queries[:, None, :], (b, p, queries.shape[-1]))
-    ids, sc = verify_topk_op(
-        flat_table,
+    ids, sc = _verify_bank_rows(
+        bank,
         flat_emb.reshape(b * p, -1),
+        gids.reshape(b * p, -1),
         pair_q.reshape(b * p, -1),
         k=k,
-        out_ids=gids.reshape(b * p, -1),
+        rescore_factor=rescore_factor,
+        block_c=block_c,
         use_pallas=use_fused,
     )
     return TopK(ids=ids.reshape(b, p, k), scores=sc.reshape(b, p, k))
@@ -337,7 +426,8 @@ def incluster_search(
 @partial(
     jax.jit,
     static_argnames=(
-        "k", "n_probe", "r0", "r0_centroid", "refine", "use_fused", "with_stats"
+        "k", "n_probe", "r0", "r0_centroid", "refine", "use_fused",
+        "with_stats", "rescore_factor", "block_c",
     ),
 )
 def search_lider(
@@ -352,6 +442,8 @@ def search_lider(
     use_fused: bool | None = None,
     prune_margin: float | None = None,
     with_stats: bool = False,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
 ) -> TopK | tuple[TopK, jnp.ndarray]:
     """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device.
 
@@ -360,14 +452,20 @@ def search_lider(
     to the fixed-probe search). ``with_stats=True`` additionally returns the
     (B, n_probe) bool mask of probes that were routed but pruned — serving
     aggregates it into the per-batch pruned-probe fraction.
+
+    On an int8 bank (``LiderConfig.storage_dtype="int8"``) layer-2
+    verification runs compressed-domain first, then exactly rescores the
+    provisional top-``rescore_factor * k``; the knobs are static so each
+    (rescore_factor, block_c) pair is one compile.
     """
     routed = route_queries(
-        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused
+        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused,
+        block_c=block_c,
     )
     cids = prune_probes(routed.ids, routed.scores, prune_margin)
     out = incluster_search(
         params, queries, cids, k=k, r0=r0, refine=refine,
-        use_fused=use_fused,
+        use_fused=use_fused, rescore_factor=rescore_factor, block_c=block_c,
     )
     if with_stats:
         pruned = (routed.ids >= 0) & (cids < 0)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.quant import dequantize_rows
 from . import bank as bank_lib
 from . import clustering
 from .bank import ClusterBank
@@ -91,6 +92,11 @@ def _refit_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
     """Re-run the build-unit refit on clusters ``cids`` ((m,) int32, -1 pad)."""
     safe = jnp.maximum(cids, 0)
     rows = bank.embs[safe]
+    if bank.quantized:
+        # Fit on what verification scores: the dequantized stored rows —
+        # identical to the rows the offline build fit (DESIGN.md §Quantized
+        # bank), so online and offline fits cannot drift.
+        rows = dequantize_rows(rows, bank.emb_scales[safe])
     valid = bank.gids[safe] >= 0
     sk, sp, resc, rmi = jax.vmap(
         partial(bank_lib.refit_cluster, bank.lsh, n_leaves=bank.rmi.n_leaves)
@@ -126,6 +132,24 @@ def _append_rows(
         c * lp,  # batch padding -> out of range, dropped by mode="drop"
     )
     new_gids = bank.next_gid + order
+    ordered = new_embs[order]
+    # bank.store_rows is the single float-rows-to-storage conversion point
+    # (same call the offline pack makes), so an upserted slot is
+    # bit-identical to the slot a full rebuild over the combined corpus
+    # would produce.
+    stored, scl, res = bank_lib.store_rows(ordered, bank.storage_dtype)
+    extra = {}
+    if bank.quantized:
+        extra = dict(
+            emb_scales=bank.emb_scales.reshape(-1)
+            .at[flat_slot]
+            .set(scl, mode="drop")
+            .reshape(c, lp),
+            rescore_embs=bank.rescore_embs.reshape(c * lp, -1)
+            .at[flat_slot]
+            .set(res.astype(bank.rescore_embs.dtype), mode="drop")
+            .reshape(c, lp, -1),
+        )
     return dataclasses.replace(
         bank,
         gids=bank.gids.reshape(-1)
@@ -134,10 +158,11 @@ def _append_rows(
         .reshape(c, lp),
         embs=bank.embs.reshape(c * lp, -1)
         .at[flat_slot]
-        .set(new_embs[order].astype(bank.embs.dtype), mode="drop")
+        .set(stored, mode="drop")
         .reshape(c, lp, -1),
         sizes=bank.sizes + counts,
         next_gid=bank.next_gid + jnp.sum(assignment < c, dtype=jnp.int32),
+        **extra,
     )
 
 
@@ -239,21 +264,47 @@ def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
     order = jnp.argsort(~live, axis=-1, stable=True)
     gid_p = jnp.take_along_axis(gid_rows, order, axis=-1)
     live_p = gid_p >= 0
-    emb_p = (
-        jnp.take_along_axis(bank.embs[safe], order[..., None], axis=1)
-        * live_p[..., None]
-    )
+    # Permute the *stored* representation (codes stay codes — quantization
+    # is row-local, so moving a row never re-rounds it; a compacted cluster
+    # is byte-for-byte what a fresh pack of its survivors would store).
+    emb_p = jnp.where(
+        live_p[..., None],
+        jnp.take_along_axis(bank.embs[safe], order[..., None], axis=1),
+        0,
+    ).astype(bank.embs.dtype)
+    extra = {}
+    if bank.quantized:
+        scl_p = jnp.where(
+            live_p,
+            jnp.take_along_axis(bank.emb_scales[safe], order, axis=-1),
+            1.0,  # the all-zero-row convention (matches a fresh pack's pads)
+        )
+        res_p = jnp.where(
+            live_p[..., None],
+            jnp.take_along_axis(bank.rescore_embs[safe], order[..., None], axis=1),
+            0,
+        ).astype(bank.rescore_embs.dtype)
+        fit_rows = dequantize_rows(emb_p, scl_p)
+    else:
+        scl_p = res_p = None
+        fit_rows = emb_p
     sk, sp, resc, rmi = jax.vmap(
         partial(bank_lib.refit_cluster, bank.lsh, n_leaves=bank.rmi.n_leaves)
-    )(emb_p, live_p)
+    )(fit_rows, live_p)
     tgt = jnp.where(cids >= 0, cids, bank.n_clusters)
     put = lambda old, new: old.at[tgt].set(new, mode="drop")
     bank = _scatter_fit(bank, tgt, sk, sp, resc, rmi)
+    if bank.quantized:
+        extra = dict(
+            emb_scales=put(bank.emb_scales, scl_p),
+            rescore_embs=put(bank.rescore_embs, res_p),
+        )
     return dataclasses.replace(
         bank,
         embs=put(bank.embs, emb_p),
         gids=put(bank.gids, gid_p),
         tombstones=bank.tombstones.at[tgt].set(0, mode="drop"),
+        **extra,
     )
 
 

@@ -15,8 +15,10 @@ This kernel makes verification a single VMEM-resident pass per query:
 - each grid step streams ``block_c`` embedding rows HBM->VMEM with
   **double-buffered async copies** (``pltpu.make_async_copy``): block ``j+1``
   is in flight while block ``j`` is scored;
-- scoring runs on the MXU in the embedding storage dtype (bf16 stays bf16)
-  with **fp32 accumulation**;
+- scoring runs on the MXU in the embedding storage dtype (bf16 stays bf16;
+  int8 code tables run **int8×int8→int32** with the per-candidate combined
+  scale folded in afterwards — DESIGN.md §Quantized bank) with full-width
+  accumulation;
 - a masked **streaming top-k accumulator** lives in VMEM and merges each
   block with duplicate suppression (same semantics as
   ``core.utils.dedup_topk``: duplicates of one id carry equal scores, so
@@ -54,23 +56,23 @@ def _fused_verify_kernel(
     # scalar prefetch
     row_ids_s,
     blk_live_s,
-    # inputs
+    # inputs: q_ref, oid_ref, [scl_ref if quantized], emb_hbm
     q_ref,
     oid_ref,
-    emb_hbm,
-    # outputs
-    ids_out,
-    sc_out,
-    # scratch
-    cand,
-    acc_ids,
-    acc_sc,
-    sem,
-    *,
+    *rest,
     block_c: int,
     k: int,
     n_blocks: int,
+    quantized: bool,
 ):
+    # Quantized banks carry one extra blocked input: the (1, block_c)
+    # combined per-candidate scale (row scale × query scale) folded into the
+    # int32 scores just before the top-k merge.
+    if quantized:
+        scl_ref, emb_hbm, ids_out, sc_out, cand, acc_ids, acc_sc, sem = rest
+    else:
+        scl_ref = None
+        emb_hbm, ids_out, sc_out, cand, acc_ids, acc_sc, sem = rest
     bi = pl.program_id(0)
     cj = pl.program_id(1)
     slot = jax.lax.rem(cj, 2)
@@ -123,14 +125,19 @@ def _fused_verify_kernel(
 
         jax.lax.fori_loop(0, block_c, wait_body, 0)
 
-        # Score the resident block: storage-dtype MXU inputs, fp32 accum.
+        # Score the resident block: storage-dtype MXU inputs — int8×int8
+        # with int32 accumulation on a quantized bank (the per-candidate
+        # scale is folded in after, one f32 multiply per score), fp32
+        # accumulation otherwise.
         q = q_ref[...].astype(cand.dtype)  # (1, d)
         scores = jax.lax.dot_general(
             q,
             cand[slot],
             (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
+            preferred_element_type=jnp.int32 if quantized else jnp.float32,
         )  # (1, block_c)
+        if quantized:
+            scores = scores.astype(jnp.float32) * scl_ref[...]
         oid = oid_ref[...]  # (1, block_c)
         scores = jnp.where(oid >= 0, scores, NEG_INF)
 
@@ -181,6 +188,7 @@ def fused_verify(
     *,
     k: int,
     out_ids: jnp.ndarray | None = None,
+    scales: jnp.ndarray | None = None,
     block_c: int = 256,
     interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -190,6 +198,14 @@ def fused_verify(
     scores descending, padded with (-1, -inf) when fewer than ``k`` unique
     valid candidates exist. ``out_ids < 0`` marks invalid slots.
 
+    With ``scales`` ((N,) f32) set, ``embs`` is an int8 code table
+    (DESIGN.md §Quantized bank): queries are quantized per row with the same
+    symmetric scheme (``quant.quantize_rows``), the MXU pass runs
+    int8×int8→int32, and the combined per-candidate scale (row × query)
+    rides a third blocked input so folding it in costs one f32 multiply per
+    score inside the merge — candidate row traffic drops to 1 byte/elem
+    while dedup/top-k semantics are unchanged.
+
     Blocks whose candidates are *all* invalid — e.g. every probe feeding them
     was pruned by the adaptive margin rule, or they are pure C-padding — are
     skipped entirely (no DMA, no MXU pass): a per-block valid count rides the
@@ -197,9 +213,12 @@ def fused_verify(
     Output is bit-identical with or without skipping (dead candidates score
     -inf either way); an all-invalid row returns all (-1, -inf).
     """
+    from .quant import quantize_rows
+
     interpret = resolve_interpret(interpret)
     if out_ids is None:
         out_ids = row_ids
+    quantized = scales is not None
     b, c = row_ids.shape
     n, d = embs.shape
     bc = min(block_c, c)
@@ -215,17 +234,32 @@ def fused_verify(
         (out_ids >= 0).reshape(b, n_blocks, bc), axis=-1, dtype=jnp.int32
     )
 
+    idx_q = lambda bi, cj, ids, live: (bi, 0)
+    idx_blk = lambda bi, cj, ids, live: (bi, cj)
+    in_specs = [
+        pl.BlockSpec((1, d), idx_q),
+        pl.BlockSpec((1, bc), idx_blk),
+    ]
+    inputs = [queries, out_ids]
+    if quantized:
+        q_codes, q_scales = quantize_rows(queries)
+        inputs[0] = q_codes
+        # Combined per-candidate scale, gathered outside the kernel: O(B·C)
+        # f32 against the O(B·C·d) row bytes the int8 path saves. Invalid
+        # slots gather row 0's scale — harmless, their score is masked -inf.
+        comb = scales[safe_rows].astype(jnp.float32) * q_scales[:, None]
+        in_specs.append(pl.BlockSpec((1, bc), idx_blk))
+        inputs.append(comb)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))  # embs stay in HBM
+    inputs.append(embs)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, n_blocks),
-        in_specs=[
-            pl.BlockSpec((1, d), lambda bi, cj, ids, live: (bi, 0)),
-            pl.BlockSpec((1, bc), lambda bi, cj, ids, live: (bi, cj)),
-            pl.BlockSpec(memory_space=pltpu.ANY),  # embs stay in HBM
-        ],
+        in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((1, k), lambda bi, cj, ids, live: (bi, 0)),
-            pl.BlockSpec((1, k), lambda bi, cj, ids, live: (bi, 0)),
+            pl.BlockSpec((1, k), idx_q),
+            pl.BlockSpec((1, k), idx_q),
         ],
         scratch_shapes=[
             pltpu.VMEM((2, bc, d), embs.dtype),  # double-buffered rows
@@ -236,7 +270,11 @@ def fused_verify(
     )
     ids, scores = pl.pallas_call(
         functools.partial(
-            _fused_verify_kernel, block_c=bc, k=k, n_blocks=n_blocks
+            _fused_verify_kernel,
+            block_c=bc,
+            k=k,
+            n_blocks=n_blocks,
+            quantized=quantized,
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -244,5 +282,5 @@ def fused_verify(
             jax.ShapeDtypeStruct((b, k), jnp.float32),
         ],
         interpret=interpret,
-    )(safe_rows, blk_live, queries, out_ids, embs)
+    )(safe_rows, blk_live, *inputs)
     return ids, scores

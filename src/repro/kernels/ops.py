@@ -49,7 +49,8 @@ def verify_topk_op(
     *,
     k: int,
     out_ids: jnp.ndarray | None = None,
-    block_c: int = 256,
+    scales: jnp.ndarray | None = None,
+    block_c: int | None = None,
     use_pallas: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Candidate verification -> deduplicated top-k, (B, k) ids + scores.
@@ -60,6 +61,12 @@ def verify_topk_op(
     materialize-then-einsum (``ref.verify_topk_ref``). Both share exact
     semantics — dedup by ``out_ids`` (< 0 == padding), descending scores,
     (-1, -inf) fill past the unique-valid count.
+
+    ``scales`` ((N,) f32) marks ``embs`` as an int8 code table with per-row
+    symmetric scales; both paths then score int8×int8→int32 with the
+    combined scale folded in afterwards (DESIGN.md §Quantized bank).
+    ``block_c`` is the kernel's candidate-block size (None -> the kernel
+    default) — a tunable the Pareto autotuner sweeps.
     """
     if use_pallas is None:
         use_pallas = _on_tpu()
@@ -70,7 +77,10 @@ def verify_topk_op(
             queries,
             k=k,
             out_ids=out_ids,
-            block_c=block_c,
+            scales=scales,
+            block_c=block_c if block_c is not None else 256,
             interpret=not _on_tpu(),
         )
-    return ref.verify_topk_ref(embs, row_ids, queries, k=k, out_ids=out_ids)
+    return ref.verify_topk_ref(
+        embs, row_ids, queries, k=k, out_ids=out_ids, scales=scales
+    )

@@ -1,0 +1,53 @@
+"""Per-row symmetric int8 quantization (the bank storage scheme).
+
+One scheme, one home: the quantized :class:`~repro.core.bank.ClusterBank`
+representation, the fused kernel's query-side quantization, and the CPU
+oracle (`ref.verify_topk_ref`) all call these helpers, so the stored codes
+and the scores computed from them can never drift between layers
+(DESIGN.md §Quantized bank).
+
+Scheme: for each row ``x`` (an embedding or a query),
+
+    scale = max(|x|) / 127        (1.0 for all-zero rows, so pads stay 0)
+    code  = round(x / scale)  ∈ [-127, 127]   (int8; -128 is never produced)
+
+and a dot product of two quantized rows is exact int arithmetic:
+
+    <xq, yq> ≈ <x, y> / (scale_x · scale_y)   with int8×int8→int32 accum.
+
+The scheme is *stateless per row* — no global calibration — which is what
+makes incremental upsert exactly equivalent to a full rebuild: quantizing a
+row depends on nothing but the row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def quantize_rows(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(..., d)`` float -> (codes ``(..., d)`` int8, scales ``(...,)`` f32).
+
+    Symmetric per-row scaling to ±127. All-zero rows get scale 1.0 so their
+    codes are exactly 0 and dequantization returns exact zeros (padded bank
+    slots stay padding).
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    # Multiply by the pre-rounded reciprocal instead of dividing by 127:
+    # XLA strength-reduces constant divisions differently inside and outside
+    # fused jits (1-ulp drift), and bank scales must be bit-identical
+    # between the eager offline build and the jit'd upsert append.
+    scales = jnp.where(
+        amax > 0, amax * jnp.float32(1.0 / INT8_MAX), 1.0
+    ).astype(jnp.float32)
+    codes = jnp.clip(
+        jnp.round(x / scales[..., None]), -INT8_MAX, INT8_MAX
+    ).astype(jnp.int8)
+    return codes, scales
+
+
+def dequantize_rows(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_rows` (up to rounding): f32 rows."""
+    return codes.astype(jnp.float32) * scales[..., None].astype(jnp.float32)

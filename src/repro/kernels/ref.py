@@ -43,6 +43,7 @@ def verify_topk_ref(
     *,
     k: int,
     out_ids: jnp.ndarray | None = None,
+    scales: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Materialize-then-einsum verification: the oracle for ``fused_verify``.
 
@@ -52,22 +53,38 @@ def verify_topk_ref(
     This is exactly the HBM-materialized path the fused kernel replaces, so
     it doubles as the unfused baseline in benchmarks/kernel_verify.py.
 
+    With ``scales`` set, ``embs`` is an int8 code table with per-row
+    symmetric scales (DESIGN.md §Quantized bank): queries are quantized with
+    the same ``quant.quantize_rows`` scheme the kernel wrapper uses, scoring
+    is exact int8×int8→int32, and the combined per-candidate scale
+    (row × query) is folded in as a single f32 multiply — the identical op
+    sequence to the fused kernel's quantized path, so ids match exactly.
+
     Block-skip semantics mirror: the fused kernel skips blocks whose
     candidates are all invalid (adaptive probe pruning); here they are
     simply scored -inf — the outputs are bit-identical, including the
     all-candidates-invalid row, which returns all (-1, -inf).
     """
     from ..core.utils import NEG_INF, dedup_topk
+    from .quant import quantize_rows
 
     if out_ids is None:
         out_ids = row_ids
     safe = jnp.maximum(row_ids, 0)
     cand = embs[safe]  # (B, C, d) — the materialization being eliminated
-    scores = jnp.einsum(
-        "bcd,bd->bc",
-        cand,
-        queries.astype(cand.dtype),
-        preferred_element_type=jnp.float32,
-    )
+    if scales is None:
+        scores = jnp.einsum(
+            "bcd,bd->bc",
+            cand,
+            queries.astype(cand.dtype),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        q_codes, q_scales = quantize_rows(queries)
+        int_scores = jnp.einsum(
+            "bcd,bd->bc", cand, q_codes, preferred_element_type=jnp.int32
+        )
+        comb = scales[safe].astype(jnp.float32) * q_scales[:, None]
+        scores = int_scores.astype(jnp.float32) * comb
     scores = jnp.where(out_ids < 0, NEG_INF, scores)
     return dedup_topk(out_ids, scores, k)

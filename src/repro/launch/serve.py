@@ -59,6 +59,24 @@ def main() -> None:
         "overrides --n-probe/--prune-margin)",
     )
     ap.add_argument(
+        "--storage-dtype",
+        choices=["float32", "bfloat16", "int8"],
+        default="float32",
+        help="embedding storage dtype for the LIDER bank (DESIGN.md "
+        "§Quantized bank); int8 adds an exact rescore of the provisional "
+        "top-(rescore_factor*k)",
+    )
+    ap.add_argument(
+        "--rescore-factor", type=int, default=4,
+        help="k' = rescore_factor * k provisional candidates exactly "
+        "rescored on int8 banks (LIDER only)",
+    )
+    ap.add_argument(
+        "--block-c", type=int, default=None,
+        help="verification-kernel candidate block size (default: kernel "
+        "default, 256)",
+    )
+    ap.add_argument(
         "--use-fused",
         choices=["auto", "on", "off"],
         default="auto",
@@ -108,6 +126,9 @@ def main() -> None:
             n_probe=args.n_probe,
             refine=args.refine,
             use_fused=use_fused,
+            storage_dtype=args.storage_dtype,
+            rescore_factor=args.rescore_factor,
+            block_c=args.block_c,
         )
         if args.load_index:
             index = checkpoint.load_index(args.load_index)
@@ -143,11 +164,16 @@ def main() -> None:
 
         held_q, _ = synthetic.retrieval_queries(2, base_embs, 128)
         held_gt = flat_search(base_embs, held_q, k=args.k)
+        # Sweep with the same rescore/block knobs the engine will serve —
+        # otherwise an int8 bank would be validated at one quality setting
+        # and served at another.
         grid = pareto_lib.default_grid(
             n_probes=tuple(
                 p for p in (2, 4, 8, 16, 32) if p <= args.n_clusters
             ),
             refine=args.refine,
+            rescore_factors=(args.rescore_factor,),
+            block_cs=(args.block_c,),
         )
         t0 = time.time()
         results = pareto_lib.sweep(
@@ -166,7 +192,8 @@ def main() -> None:
     backend_kw = {
         "lider": dict(
             n_probe=n_probe, refine=args.refine, use_fused=use_fused,
-            prune_margin=prune_margin,
+            prune_margin=prune_margin, rescore_factor=args.rescore_factor,
+            block_c=args.block_c,
         ),
         "ivfpq": dict(n_probe=args.n_probe),
         "mplsh": dict(n_probe=args.n_probe),

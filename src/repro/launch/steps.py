@@ -512,9 +512,18 @@ def make_recsys_bundle(arch: ArchSpec, shape: ShapeSpec, mesh) -> StepBundle:
 # ---------------------------------------------------------------------------
 
 
-def lider_param_structs(rcfg, emb_dtype=jnp.float32) -> lider_lib.LiderParams:
-    """Abstract LiderParams for the dry-run (no 38 GB corpus allocation)."""
+def lider_param_structs(
+    rcfg, emb_dtype=jnp.float32, storage_dtype: str | None = None
+) -> lider_lib.LiderParams:
+    """Abstract LiderParams for the dry-run (no 38 GB corpus allocation).
+
+    ``storage_dtype`` (default: the arch config's ``lider.storage_dtype``)
+    shapes the bank's storage representation; "int8" adds the abstract
+    ``emb_scales``/``rescore_embs`` leaves so the quantized sharded search
+    lowers and compiles in the dry-run (DESIGN.md §Quantized bank).
+    """
     cfg: lider_lib.LiderConfig = rcfg.lider
+    storage_dtype = storage_dtype or cfg.storage_dtype
     c, d, lp = cfg.n_clusters, rcfg.dim, rcfg.capacity
     h, hc = cfg.n_arrays, cfg.n_arrays_centroid
     m, mc = cfg.key_len, cfg.key_len_centroid
@@ -558,11 +567,20 @@ def lider_param_structs(rcfg, emb_dtype=jnp.float32) -> lider_lib.LiderParams:
             rmi=rmi_s((c, h), w),
             sorted_keys=SDS((c, h, lp), jnp.uint32),
             sorted_pos=SDS((c, h, lp), jnp.int32),
-            embs=SDS((c, lp, d), emb_dtype),
+            embs=SDS(
+                (c, lp, d),
+                jnp.int8 if storage_dtype == "int8" else emb_dtype,
+            ),
             gids=SDS((c, lp), jnp.int32),
             sizes=SDS((c,), jnp.int32),
             tombstones=SDS((c,), jnp.int32),
             next_gid=SDS((), jnp.int32),
+            emb_scales=(
+                SDS((c, lp), jnp.float32) if storage_dtype == "int8" else None
+            ),
+            rescore_embs=(
+                SDS((c, lp, d), emb_dtype) if storage_dtype == "int8" else None
+            ),
         ),
     )
 

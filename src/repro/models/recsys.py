@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from . import layers
 from .sharding import ALL, DP, TP, maybe_shard
 
@@ -39,7 +40,7 @@ def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     rows — each shard takes its local rows (masked) and the partials are
     psum'd. Otherwise a plain take. Differentiable (scatter-add transpose).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty or "model" not in mesh.axis_names:
         return table[ids]
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -60,12 +61,11 @@ def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
 
     id_spec = P(dp if dp else None, *([None] * (ids.ndim - 1)))
     out_spec = P(dp if dp else None, *([None] * ids.ndim))
-    return jax.shard_map(
+    return compat.shard_map(
         local_lookup,
         mesh=mesh,
         in_specs=(P("model", None), id_spec),
         out_specs=out_spec,
-        check_vma=False,
     )(table, ids)
 
 

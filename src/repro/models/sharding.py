@@ -11,6 +11,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
+
 DP = "dp"  # logical data-parallel axis -> ("pod", "data")
 TP = "tp"  # logical tensor/expert-parallel axis -> ("model",)
 ALL = "all"  # every mesh axis (edge-parallel GNN aggregation)
@@ -41,7 +43,7 @@ def resolve_spec(spec_entries, mesh_axis_names) -> P:
 
 def maybe_shard(x: jax.Array, *spec_entries) -> jax.Array:
     """with_sharding_constraint under an ambient mesh; identity otherwise."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     return jax.lax.with_sharding_constraint(

@@ -69,7 +69,10 @@ class EngineStats:
 # raises instead of being silently ignored. All probing backends take the
 # same ``n_probe`` spelling (mplsh's search fn calls it n_probes internally).
 _BACKEND_KWARGS: dict[str, frozenset[str]] = {
-    "lider": frozenset({"n_probe", "r0", "refine", "use_fused", "prune_margin"}),
+    "lider": frozenset({
+        "n_probe", "r0", "refine", "use_fused", "prune_margin",
+        "rescore_factor", "block_c",
+    }),
     "flat": frozenset(),
     "pq": frozenset(),
     "ivfpq": frozenset({"n_probe"}),
@@ -124,6 +127,8 @@ def make_backend(
                 use_fused=kw.get("use_fused"),
                 prune_margin=prune_margin,
                 with_stats=prune_margin is not None,
+                rescore_factor=kw.get("rescore_factor", 4),
+                block_c=kw.get("block_c"),
             )
 
         if updatable:

@@ -126,6 +126,9 @@ def save_index(directory: str, params: Any) -> str:
         np.save(os.path.join(tmp, _leaf_name(path) + ".npy"), arr)
     meta = {
         "format": "lider_index_v1",
+        # Embedding storage dtype (DESIGN.md §Quantized bank); int8 indexes
+        # additionally persist bank__emb_scales / bank__rescore_embs leaves.
+        "storage_dtype": params.bank.storage_dtype,
         "in_lsh": {
             "n_arrays": params.bank.lsh.n_arrays,
             "key_len": params.bank.lsh.key_len,
@@ -202,6 +205,7 @@ def load_index(directory: str) -> Any:
         sorted_keys=leaf("centroid_cm", "sorted_keys"),
         sorted_ids=leaf("centroid_cm", "sorted_ids"),
     )
+    quantized = meta.get("storage_dtype", "float32") == "int8"
     bank = ClusterBank(
         lsh=lsh_of(("bank", "lsh"), meta["in_lsh"]),
         rescale=rescale_of(("bank", "rescale")),
@@ -213,6 +217,8 @@ def load_index(directory: str) -> Any:
         sizes=leaf("bank", "sizes"),
         tombstones=leaf("bank", "tombstones"),
         next_gid=leaf("bank", "next_gid"),
+        emb_scales=leaf("bank", "emb_scales") if quantized else None,
+        rescore_embs=leaf("bank", "rescore_embs") if quantized else None,
     )
     return LiderParams(
         centroid_cm=centroid_cm, centroids=leaf("centroids"), bank=bank

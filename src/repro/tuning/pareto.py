@@ -6,10 +6,15 @@ control plane (DESIGN.md §Adaptive speed-quality control plane) adds a
 ``prune_margin`` whose block-skipping verification kernel turns per-query
 routing confidence into wall-clock savings. This module closes the loop:
 
-1. **sweep** ``(n_probe, r0, prune_margin, refine)`` on held-out queries over
-   a built index, measuring AQT, recall@k, MRR@10, and the pruned-probe
-   fraction per operating point;
-2. **pareto_frontier** keeps the non-dominated points (min AQT, max recall);
+1. **sweep** ``(n_probe, r0, prune_margin, refine, rescore_factor,
+   block_c)`` on held-out queries over a built index, measuring AQT,
+   recall@k, MRR@10, and the pruned-probe fraction per operating point; the
+   CLI additionally sweeps ``--storage-dtypes`` (one built index per dtype,
+   DESIGN.md §Quantized bank) and tags every point with the bank storage it
+   ran against;
+2. **pareto_frontier** keeps the non-dominated points (min AQT, max recall)
+   across *all* storage dtypes — a quantized bank earns frontier spots only
+   by actually beating the full-precision points;
 3. **select_operating_point** returns the cheapest point meeting a recall
    target — what ``launch.serve --recall-target`` feeds into the engine.
 
@@ -48,12 +53,20 @@ from ..core.utils import mrr_at_10, recall_at_k
 
 @dataclasses.dataclass(frozen=True)
 class OperatingPoint:
-    """One point of the speed-quality control plane."""
+    """One point of the speed-quality control plane.
+
+    ``rescore_factor`` only affects int8-storage indexes (k' = factor * k
+    provisional candidates exactly rescored); ``block_c`` is the
+    verification kernel's candidate block size (None -> kernel default).
+    Both are static search knobs, so each distinct pair is one compile.
+    """
 
     n_probe: int
     r0: int = 4
     prune_margin: float | None = None
     refine: bool = False
+    rescore_factor: int = 4
+    block_c: int | None = None
 
     @property
     def adaptive(self) -> bool:
@@ -65,6 +78,8 @@ class OperatingPoint:
             r0=self.r0,
             refine=self.refine,
             prune_margin=self.prune_margin,
+            rescore_factor=self.rescore_factor,
+            block_c=self.block_c,
         )
 
     def label(self) -> str:
@@ -73,6 +88,10 @@ class OperatingPoint:
             tag += "/refine"
         if self.adaptive:
             tag += f"/margin{self.prune_margin:g}"
+        if self.rescore_factor != 4:
+            tag += f"/rescore{self.rescore_factor}"
+        if self.block_c is not None:
+            tag += f"/blk{self.block_c}"
         return tag
 
 
@@ -86,6 +105,7 @@ class SweepResult:
     recall: float
     mrr10: float
     pruned_fraction: float
+    storage_dtype: str = "float32"  # bank storage the point ran against
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -99,14 +119,28 @@ def default_grid(
     margins: Sequence[float] = (0.02, 0.05, 0.1, 0.2),
     r0: int = 4,
     refine: bool = False,
+    rescore_factors: Sequence[int] = (4,),
+    block_cs: Sequence[int | None] = (None,),
 ) -> list[OperatingPoint]:
-    """Fixed baselines (margin=None) plus adaptive variants per n_probe."""
-    fixed = [OperatingPoint(p, r0, None, refine) for p in n_probes]
+    """Fixed baselines (margin=None) plus adaptive variants per n_probe.
+
+    ``rescore_factors``/``block_cs`` extend the sweep over the quantized
+    bank's rescore depth and the kernel block size (defaults keep the grid
+    size unchanged); every (n_probe, margin) combo is crossed with them.
+    """
+    fixed = [
+        OperatingPoint(p, r0, None, refine, rf, bc)
+        for p in n_probes
+        for rf in rescore_factors
+        for bc in block_cs
+    ]
     adaptive = [
-        OperatingPoint(p, r0, m, refine)
+        OperatingPoint(p, r0, m, refine, rf, bc)
         for p in n_probes
         if p > 1  # pruning a single probe can only be a no-op
         for m in margins
+        for rf in rescore_factors
+        for bc in block_cs
     ]
     return fixed + adaptive
 
@@ -147,19 +181,25 @@ def sweep(
     that combo's margin variants.
     """
     on_tpu = jax.default_backend() == "tpu"
+    storage_dtype = params.bank.storage_dtype
     base_walls: dict[tuple, tuple[float, float]] = {}
     results = []
     for point in grid:
-        base_key = (point.n_probe, point.r0, point.refine)
+        base_key = (
+            point.n_probe, point.r0, point.refine,
+            point.rescore_factor, point.block_c,
+        )
         if base_key not in base_walls:
             route = jax.jit(
                 lambda q, p=point: lider_lib.route_queries(
-                    params, q, n_probe=p.n_probe, use_fused=use_fused
+                    params, q, n_probe=p.n_probe, use_fused=use_fused,
+                    block_c=p.block_c,
                 )
             )
             full = lambda q, p=point: lider_lib.search_lider(
                 params, q, k=k, n_probe=p.n_probe, r0=p.r0, refine=p.refine,
-                use_fused=use_fused,
+                use_fused=use_fused, rescore_factor=p.rescore_factor,
+                block_c=p.block_c,
             )
             base_walls[base_key] = (
                 _time_fn(route, queries, repeats),
@@ -197,6 +237,7 @@ def sweep(
                 recall=float(recall_at_k(out.ids, jnp.asarray(gt_ids))),
                 mrr10=mrr_at_10(ids, relevant) if relevant is not None else -1.0,
                 pruned_fraction=pruned_frac,
+                storage_dtype=storage_dtype,
             )
         )
     return results
@@ -264,24 +305,21 @@ def adaptive_beats_fixed(results: Sequence[SweepResult]) -> bool:
     return False
 
 
-def tune(
-    params,
-    queries,
-    gt_ids,
+def make_report(
+    results: Sequence[SweepResult],
     *,
     k: int,
-    grid: Sequence[OperatingPoint] | None = None,
+    n_queries: int,
     recall_target: float | None = None,
-    relevant=None,
-    repeats: int = 3,
-    use_fused: bool | None = None,
 ) -> dict:
-    """Sweep + frontier + selection, as one JSON-ready report dict."""
-    grid = list(grid) if grid is not None else default_grid()
-    results = sweep(
-        params, queries, gt_ids, grid, k=k, relevant=relevant,
-        repeats=repeats, use_fused=use_fused,
-    )
+    """Frontier + checks + selection over already-swept results.
+
+    ``results`` may span several built indexes (e.g. one per storage dtype
+    — the CLI's ``--storage-dtypes`` sweep); the frontier is computed over
+    all of them, so a quantized bank earns its place only by actually
+    beating the full-precision points somewhere on the curve.
+    """
+    results = list(results)
     frontier = pareto_frontier(results)
     frontier_set = {id(r) for r in frontier}
     report = {
@@ -292,7 +330,8 @@ def tune(
             else "modeled_from_measured_walls"
         ),
         "k": k,
-        "n_queries": int(queries.shape[0]),
+        "n_queries": n_queries,
+        "storage_dtypes": sorted({r.storage_dtype for r in results}),
         "points": [
             {**r.to_json(), "on_frontier": id(r) in frontier_set}
             for r in results
@@ -316,6 +355,30 @@ def tune(
     return report
 
 
+def tune(
+    params,
+    queries,
+    gt_ids,
+    *,
+    k: int,
+    grid: Sequence[OperatingPoint] | None = None,
+    recall_target: float | None = None,
+    relevant=None,
+    repeats: int = 3,
+    use_fused: bool | None = None,
+) -> dict:
+    """Sweep + frontier + selection, as one JSON-ready report dict."""
+    grid = list(grid) if grid is not None else default_grid()
+    results = sweep(
+        params, queries, gt_ids, grid, k=k, relevant=relevant,
+        repeats=repeats, use_fused=use_fused,
+    )
+    return make_report(
+        results, k=k, n_queries=int(queries.shape[0]),
+        recall_target=recall_target,
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -331,6 +394,20 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--n-probes", type=int, nargs="+", default=None)
     ap.add_argument("--margins", type=float, nargs="+", default=None)
+    ap.add_argument(
+        "--storage-dtypes", nargs="+", default=["float32"],
+        choices=["float32", "bfloat16", "int8"],
+        help="build + sweep one index per storage dtype; the frontier spans "
+        "all of them (DESIGN.md §Quantized bank)",
+    )
+    ap.add_argument(
+        "--rescore-factors", type=int, nargs="+", default=None,
+        help="k' = factor*k exact-rescore depths to sweep (int8 banks)",
+    )
+    ap.add_argument(
+        "--block-cs", type=int, nargs="+", default=None,
+        help="verification-kernel candidate block sizes to sweep",
+    )
     ap.add_argument("--no-check", action="store_true",
                     help="report only; do not exit non-zero when a check "
                     "fails (dominated frontier, or no adaptive point beating "
@@ -350,14 +427,6 @@ def main() -> None:
     gt = flat_search(corpus, queries, k=args.k)
 
     n_clusters = args.n_clusters or max(16, args.corpus_size // 1000)
-    cfg = lider_lib.LiderConfig(
-        n_clusters=n_clusters, n_arrays=4, n_leaves=4, kmeans_iters=10
-    )
-    t0 = time.time()
-    params = lider_lib.build_lider(jax.random.PRNGKey(0), corpus, cfg)
-    print(f"[pareto] built n={args.corpus_size} c={n_clusters} "
-          f"in {time.time() - t0:.1f}s")
-
     n_probes = tuple(args.n_probes) if args.n_probes else (
         (2, 4, 8, 16) if args.smoke else (2, 5, 10, 20, 40)
     )
@@ -365,16 +434,43 @@ def main() -> None:
     margins = tuple(args.margins) if args.margins else (
         (0.05, 0.1, 0.2) if args.smoke else (0.02, 0.05, 0.1, 0.2)
     )
-    grid = default_grid(n_probes=n_probes, margins=margins)
+    block_cs = tuple(args.block_cs) if args.block_cs else (None,)
 
-    report = tune(
-        params, queries, gt.ids, k=args.k, grid=grid,
-        recall_target=args.recall_target, relevant=relevant,
-        repeats=args.repeats,
+    # One built index per storage dtype; the frontier spans all of them.
+    results = []
+    for sd in args.storage_dtypes:
+        cfg = lider_lib.LiderConfig(
+            n_clusters=n_clusters, n_arrays=4, n_leaves=4, kmeans_iters=10,
+            storage_dtype=sd,
+        )
+        t0 = time.time()
+        params = lider_lib.build_lider(jax.random.PRNGKey(0), corpus, cfg)
+        print(f"[pareto] built n={args.corpus_size} c={n_clusters} "
+              f"storage={sd} in {time.time() - t0:.1f}s")
+        # rescore_factor is a no-op on float banks — crossing it in would
+        # only duplicate (and re-time/re-compile) identical points.
+        if sd == "int8":
+            rescore_factors = (
+                tuple(args.rescore_factors) if args.rescore_factors else (2, 4)
+            )
+        else:
+            rescore_factors = (4,)
+        grid = default_grid(
+            n_probes=n_probes, margins=margins,
+            rescore_factors=rescore_factors, block_cs=block_cs,
+        )
+        results.extend(
+            sweep(params, queries, gt.ids, grid, k=args.k, relevant=relevant,
+                  repeats=args.repeats)
+        )
+
+    report = make_report(
+        results, k=args.k, n_queries=int(queries.shape[0]),
+        recall_target=args.recall_target,
     )
     report["build"] = {
         "corpus_size": args.corpus_size, "dim": args.dim,
-        "n_clusters": n_clusters,
+        "n_clusters": n_clusters, "storage_dtypes": args.storage_dtypes,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
@@ -383,16 +479,22 @@ def main() -> None:
         star = "*" if p["on_frontier"] else " "
         kind = "adapt" if p["adaptive"] else "fixed"
         print(
-            f"[pareto]{star} {kind} probe={p['n_probe']:3d} "
+            f"[pareto]{star} {kind} {p['storage_dtype']:>8} "
+            f"probe={p['n_probe']:3d} "
             f"margin={p['prune_margin'] if p['prune_margin'] is not None else '-':>5} "
+            f"rescore={p['rescore_factor']} "
             f"aqt={p['aqt_s'] * 1e6:9.1f}us recall@{args.k}={p['recall']:.4f} "
             f"mrr10={p['mrr10']:.4f} pruned={p['pruned_fraction']:.2%}"
         )
     sel = report.get("selected")
     if sel:
+        sel_point = OperatingPoint(
+            sel["n_probe"], sel["r0"], sel["prune_margin"], sel["refine"],
+            sel["rescore_factor"], sel["block_c"],
+        )
         print(
             f"[pareto] operating point for recall>={args.recall_target}: "
-            f"{OperatingPoint(sel['n_probe'], sel['r0'], sel['prune_margin'], sel['refine']).label()} "
+            f"{sel['storage_dtype']}/{sel_point.label()} "
             f"(aqt={sel['aqt_s'] * 1e6:.1f}us recall={sel['recall']:.4f}, "
             f"meets_target={sel['meets_target']})"
         )

@@ -14,9 +14,10 @@ def _run(body: str) -> str:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, numpy as np
         import jax.numpy as jnp
-        from jax.sharding import Mesh, AxisType, NamedSharding, PartitionSpec as P
-        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"),
-                    axis_types=(AxisType.Auto,) * 2)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
+        mesh = compat.mesh_from_devices(
+            np.array(jax.devices()).reshape(4, 2), ("data", "model"))
         """
     ) + textwrap.dedent(body)
     proc = subprocess.run(
@@ -58,6 +59,45 @@ def test_sharded_search_equals_single_device():
         """
     )
     assert "EQUIV_OK" in out
+
+
+def test_sharded_search_quantized_bank_matches_single_device():
+    """int8 bank (DESIGN.md §Quantized bank): the new emb_scales /
+    rescore_embs fields derive cluster-sharded specs from their metadata and
+    the compressed-domain + exact-rescore pass runs shard-locally."""
+    out = _run(
+        """
+        from repro.core import lider, distributed
+        from repro.core.utils import l2_normalize
+        rng = jax.random.PRNGKey(0)
+        kc, kx, kq, kb = jax.random.split(rng, 4)
+        centers = jax.random.normal(kc, (32, 64))
+        assign = jax.random.randint(kx, (4000,), 0, 32)
+        x = l2_normalize(centers[assign] + 0.3*jax.random.normal(kq, (4000, 64)))
+        q = l2_normalize(x[:64] + 0.05*jax.random.normal(kb, (64, 64)))
+        cfg = lider.LiderConfig(n_clusters=64, n_probe=8, n_arrays=4,
+                                n_leaves=4, kmeans_iters=10,
+                                storage_dtype="int8")
+        params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+        assert params.bank.quantized
+        ref = lider.search_lider(params, q, k=10, n_probe=8, r0=8)
+        sp = distributed.shard_lider_params(mesh, params, ("data",))
+        specs = distributed.lider_param_specs(params, ("data",))
+        assert specs.bank.emb_scales == P(("data",), None)
+        assert specs.bank.rescore_embs == P(("data",), None, None)
+        search = distributed.make_sharded_search(
+            mesh, params, k=10, n_probe=8, r0=8, capacity_factor=3.0)
+        out, dropped = search(sp, q)
+        assert int(dropped) == 0, f"dropped {dropped}"
+        rs = np.sort(np.asarray(ref.scores)); os_ = np.sort(np.asarray(out.scores))
+        assert np.allclose(rs, os_, atol=1e-5), np.abs(rs-os_).max()
+        ov = np.mean([len(set(a[a>=0]) & set(b[b>=0]))/max(len(set(a[a>=0])),1)
+                      for a, b in zip(np.asarray(ref.ids), np.asarray(out.ids))])
+        assert ov == 1.0, ov
+        print("INT8_EQUIV_OK")
+        """
+    )
+    assert "INT8_EQUIV_OK" in out
 
 
 def test_capacity_drops_reduce_recall_gracefully():
@@ -106,12 +146,12 @@ def test_sharded_embedding_lookup_equals_take():
         table = jax.random.normal(jax.random.PRNGKey(0), (64, 8))
         ids = jax.random.randint(jax.random.PRNGKey(1), (16, 3), 0, 64)
         plain = table[ids]
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             sharded = jax.jit(embedding_lookup)(table, ids)
         assert np.allclose(np.asarray(plain), np.asarray(sharded), atol=1e-6)
         # gradient path through the shard_map lookup
         g_plain = jax.grad(lambda t: jnp.sum(t[ids] ** 2))(table)
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             g_shard = jax.jit(
                 jax.grad(lambda t: jnp.sum(embedding_lookup(t, ids) ** 2))
             )(table)
@@ -139,7 +179,7 @@ def test_lm_train_step_runs_sharded():
                           is_leaf=lambda x: isinstance(x, P))
         sp = jax.tree.map(lambda x, s: jax.device_put(x, s), params, ns)
         sb = jax.tree.map(lambda x: jax.device_put(x, NamedSharding(mesh, P(("data",), None))), batch)
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             got = float(jax.jit(lambda p, b: T.train_loss(p, cfg, b))(sp, sb))
         assert abs(ref - got) < 1e-3, (ref, got)
         print("LM_SHARD_OK")

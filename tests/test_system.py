@@ -72,18 +72,16 @@ def test_every_cell_constructs_a_bundle(arch_id):
     shardings and flops are well-formed (full lower/compile happens in the
     dry-run; this guards the construction path in unit tests)."""
     import numpy as np
-    from jax.sharding import Mesh, AxisType
 
+    from repro import compat
     from repro.launch.steps import make_bundle
 
-    mesh = Mesh(
-        np.array(jax.devices()).reshape(1, 1),
-        ("data", "model"),
-        axis_types=(AxisType.Auto,) * 2,
+    mesh = compat.mesh_from_devices(
+        np.array(jax.devices()).reshape(1, 1), ("data", "model")
     )
     arch = get_arch(arch_id)
     for shape in arch.shapes:
-        with jax.sharding.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             b = make_bundle(arch, shape, mesh)
         assert b.model_flops > 0
         flat_args = jax.tree.leaves(b.args)
@@ -95,7 +93,6 @@ def test_every_cell_constructs_a_bundle(arch_id):
 
 
 def test_lider_msmarco_bundle_dims():
-    from jax.sharding import Mesh, AxisType
     from repro.launch.steps import lider_param_structs
 
     arch = get_arch("lider-msmarco")
