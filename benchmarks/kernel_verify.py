@@ -43,6 +43,35 @@ import time
 
 STORAGE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
 RECALL_EPS = 0.02  # int8+rescore may trail bf16 recall by at most this
+# int8+host device-resident embedding-store bytes must stay at or below
+# this fraction of the f32 store (the tier dimension's CI gate; actual
+# ratio at d=768 is (d+4)/(4d) ~ 0.25 — DESIGN.md §Tiered embedding store).
+HOST_TIER_DEVICE_BYTES_MAX_VS_F32 = 0.45
+MSMARCO_N = 8_847_360  # paper corpus (lider-msmarco arch config)
+
+
+def storage_tier_model(
+    n: int, d: int, storage_dtype: str, rescore_tier: str = "device"
+) -> dict[str, float]:
+    """Embedding-store bytes by tier for an ``n x d`` corpus.
+
+    Codes at the storage width, plus (int8 only) the per-row f32 scales and
+    the full-precision rescore table — device-resident on the "device" tier,
+    host RAM on the "host" tier (DESIGN.md §Tiered embedding store). The
+    learned-index arrays (sorted keys/positions, RMI fits) are
+    tier-independent and excluded, matching the paper's index-memory
+    convention.
+    """
+    s = STORAGE_BYTES[storage_dtype]
+    device = float(n * d * s)
+    host = 0.0
+    if storage_dtype == "int8":
+        device += n * 4  # per-row symmetric scales
+        if rescore_tier == "device":
+            device += n * d * 4
+        else:
+            host = float(n * d * 4)
+    return {"device_bytes": device, "host_bytes": host}
 
 
 def traffic_model(
@@ -182,6 +211,65 @@ def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
     return out
 
 
+def _measure_host_tier(b, c, n, d, k, block_c, rescore_factor, iters=3):
+    """The tiered search's staged rescore vs the device-resident one: bit
+    parity of (ids, scores) plus the measured host fetch (D2H of the
+    provisional rows + the np.take) and staged-rescore walls."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.ops import verify_topk_op
+    from repro.kernels.quant import quantize_rows
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    embs_f = jax.random.normal(k1, (n, d))
+    ids = jax.random.randint(k2, (b, c), -1, n)
+    q = jax.random.normal(k3, (b, d))
+    table, scales = quantize_rows(embs_f)
+    host_table = np.ascontiguousarray(np.asarray(embs_f, np.float32))
+    kp = min(rescore_factor * k, c)
+
+    def first_pass():
+        return verify_topk_op(table, ids, q, k=kp, scales=scales,
+                              block_c=block_c)
+
+    prov = first_pass()[0]
+
+    def device_rescore():
+        return verify_topk_op(
+            embs_f, jnp.maximum(prov, 0), q, k=k, out_ids=prov,
+            block_c=block_c,
+        )
+
+    def host_fetch():
+        rows = np.asarray(prov)  # D2H of the provisional rows
+        return host_table.take(np.maximum(rows, 0).reshape(-1), axis=0
+                               ).reshape(b, kp, d)
+
+    fetched = jnp.asarray(host_fetch())  # H2D of only B*k'*d floats
+    row_ids = jnp.arange(b * kp, dtype=jnp.int32).reshape(b, kp)
+
+    def host_rescore():
+        return verify_topk_op(
+            fetched.reshape(b * kp, d), row_ids, q, k=k, out_ids=prov,
+            block_c=block_c,
+        )
+
+    di, ds = device_rescore()
+    hi, hs = host_rescore()
+    out = {
+        "ids_match": bool((np.asarray(di) == np.asarray(hi)).all()),
+        "scores_match": bool((np.asarray(ds) == np.asarray(hs)).all()),
+        "wall_s_device_rescore": _time(device_rescore, iters),
+        "wall_s_host_rescore": _time(host_rescore, iters),
+        "host_fetch_us": _time(host_fetch, iters) * 1e6,
+        "h2d_floats": b * kp * d,
+        "shape": {"B": b, "C": c, "N": n, "d": d, "k": k, "kp": kp},
+    }
+    return out
+
+
 def _recall_floor(n, d, b, k, rescore_factor):
     """Recall@k vs exact f32 of one-shot verification over the same
     candidate set, per storage dtype (the quality side of the sweep)."""
@@ -230,6 +318,11 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=768)
     ap.add_argument("--k", type=int, default=100)
     ap.add_argument("--rescore-factor", type=int, default=4)
+    ap.add_argument(
+        "--corpus-n", type=int, default=MSMARCO_N,
+        help="corpus rows for the storage-tier byte model (default: the "
+        "paper's MS-MARCO scale)",
+    )
     ap.add_argument("--dtypes", nargs="+",
                     default=["float32", "bfloat16", "int8"],
                     choices=list(STORAGE_BYTES))
@@ -239,6 +332,15 @@ def main() -> None:
     model = {
         sd: traffic_model(args.b, c, args.d, args.k, sd, args.rescore_factor)
         for sd in args.dtypes
+    }
+    # Storage-tier dimension (DESIGN.md §Tiered embedding store): where the
+    # embedding-store bytes live per (dtype, tier) config at paper scale.
+    tier_configs = [(sd, "device") for sd in args.dtypes]
+    if "int8" in args.dtypes:
+        tier_configs.append(("int8", "host"))
+    storage_tiers = {
+        f"{sd}_{tier}": storage_tier_model(args.corpus_n, args.d, sd, tier)
+        for sd, tier in tier_configs
     }
     f32_model = traffic_model(args.b, c, args.d, args.k, "float32",
                               args.rescore_factor)
@@ -276,6 +378,17 @@ def main() -> None:
                 b=4, c=608, n=4096, d=64, k=10, dtype_name=sd, block_c=128,
                 rescore_factor=args.rescore_factor,
             )
+    if "int8" in args.dtypes:
+        if full_measure:
+            measured["int8_host"] = _measure_host_tier(
+                b=args.b, c=c, n=200_000, d=args.d, k=args.k, block_c=256,
+                rescore_factor=args.rescore_factor,
+            )
+        else:
+            measured["int8_host"] = _measure_host_tier(
+                b=4, c=608, n=4096, d=64, k=10, block_c=128,
+                rescore_factor=args.rescore_factor,
+            )
     recall = _recall_floor(
         n=4096, d=64, b=32, k=10, rescore_factor=args.rescore_factor
     )
@@ -283,6 +396,17 @@ def main() -> None:
     checks = {
         f"parity_{sd}": measured[sd]["ids_match"] for sd in args.dtypes
     }
+    if "int8" in args.dtypes:
+        checks["parity_int8_host_vs_device_rescore"] = (
+            measured["int8_host"]["ids_match"]
+            and measured["int8_host"]["scores_match"]
+        )
+    if "int8" in args.dtypes and "float32" in args.dtypes:
+        checks["int8_host_device_bytes_le_045x_f32"] = (
+            storage_tiers["int8_host"]["device_bytes"]
+            <= HOST_TIER_DEVICE_BYTES_MAX_VS_F32
+            * storage_tiers["float32_device"]["device_bytes"]
+        )
     if "int8" in args.dtypes and "bfloat16" in args.dtypes:
         checks["int8_rescore_recall_floor"] = (
             recall["int8"] >= recall["bfloat16"] - RECALL_EPS
@@ -300,6 +424,12 @@ def main() -> None:
         },
         "traffic_model": model,
         "traffic_ratios": ratios,
+        "storage_tiers": {
+            "corpus_n": args.corpus_n,
+            "d": args.d,
+            "max_host_device_ratio_vs_f32": HOST_TIER_DEVICE_BYTES_MAX_VS_F32,
+            "configs": storage_tiers,
+        },
         "measured": measured,
         "recall_vs_exact": recall,
         "recall_eps": RECALL_EPS,
@@ -323,6 +453,26 @@ def main() -> None:
             f"({r['emitted_vs_unfused']:,.0f}x less than unfused); "
             f"measured fused {measured[sd]['wall_s_fused']*1e3:.2f} ms, "
             f"ids_match={measured[sd]['ids_match']}{extra}"
+        )
+    f32_dev = storage_tiers.get("float32_device", {}).get("device_bytes")
+    for name, tb in storage_tiers.items():
+        ratio = (
+            f" ({tb['device_bytes'] / f32_dev:.2f}x of f32 device)"
+            if f32_dev
+            else ""
+        )
+        print(
+            f"[verify] store {name:>15}: device {tb['device_bytes']/2**30:6.2f} GiB"
+            f", host {tb['host_bytes']/2**30:6.2f} GiB{ratio}"
+        )
+    if "int8_host" in measured:
+        mh = measured["int8_host"]
+        print(
+            f"[verify] int8_host staged rescore: ids_match={mh['ids_match']} "
+            f"scores_match={mh['scores_match']} "
+            f"fetch={mh['host_fetch_us']:.0f}us "
+            f"rescore={mh['wall_s_host_rescore']*1e3:.2f}ms "
+            f"(device-resident rescore {mh['wall_s_device_rescore']*1e3:.2f}ms)"
         )
     print(f"[verify] checks: {checks} -> {args.out}")
     failed = [name for name, ok in checks.items() if not ok]

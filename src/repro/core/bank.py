@@ -33,10 +33,12 @@ Full build is just ``vmap(refit_cluster)`` over all clusters
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
 from ..kernels.quant import dequantize_rows, quantize_rows
@@ -51,6 +53,173 @@ CLUSTER_AXIS = "cluster_axis"
 # §Quantized bank).
 STORAGE_DTYPES = ("float32", "bfloat16", "int8")
 
+# Where the full-precision rescore side table lives
+# (LiderConfig.rescore_tier; DESIGN.md §Tiered embedding store).
+RESCORE_TIERS = ("device", "host")
+
+
+class EmbStore:
+    """Tiered store for the full-precision rescore table.
+
+    ``tier="device"``: a shape-only marker — the table is the
+    ``ClusterBank.rescore_embs`` pytree leaf and travels through jit/sharding
+    like any other device array (the PR-4 layout).
+
+    ``tier="host"``: the table lives HERE, as a process-local contiguous
+    ("pinned" in the DMA sense — page-aligned C-contiguous NumPy, the layout
+    the runtime can transfer without staging) float32 array of shape
+    ``(c, Lp, d)``, *outside* the jit pytree. The jit'd index then carries
+    only codes + scales; search fetches the exact rows of the provisional
+    top-k' with :meth:`fetch` (a host ``np.take``) and ships ``B·k'·d``
+    floats H2D instead of keeping all ``c·Lp·d`` resident (DESIGN.md §Tiered
+    embedding store). A synced copy of ``gids`` rides along so the
+    distributed front-end can map flat rows to passage ids without touching
+    the cluster-sharded device tables.
+
+    The store is **mutable shared state**: the index lifecycle
+    (``core.update``) writes both tiers in lockstep — content writes
+    (``write_rows`` / ``compact_clusters``) mutate the table in place (like
+    any in-place update store, retained pre-update snapshots observe them),
+    while capacity growth is copy-on-grow (``grown``) because it changes the
+    flat-row arithmetic old snapshots still use. ``version`` bumps on every
+    host write so serving can track host-tier generations separately from
+    device recompiles. Because
+    it rides the ClusterBank pytree as *static* aux data, ``__eq__`` /
+    ``__hash__`` key on (tier, shape, dtype) only — content mutation never
+    invalidates a compiled search, and two same-shape indexes share one
+    compilation (the host data never enters the traced program).
+
+    A store constructed with ``rescore=None`` is *abstract* (shape/dtype
+    accounting only — what the dry-run memory model uses); ``fetch`` and the
+    write paths require a concrete one.
+    """
+
+    def __init__(
+        self,
+        tier: str,
+        *,
+        rescore: np.ndarray | None = None,
+        shape: tuple[int, ...] | None = None,
+        dtype=np.float32,
+        gids: np.ndarray | None = None,
+    ):
+        if tier not in RESCORE_TIERS:
+            raise ValueError(f"tier must be one of {RESCORE_TIERS}, got {tier!r}")
+        if rescore is not None:
+            rescore = np.ascontiguousarray(rescore, dtype=np.float32)
+            if not rescore.flags.writeable:  # device_get hands back views
+                rescore = rescore.copy()
+            shape = rescore.shape
+            dtype = rescore.dtype
+        if shape is None:
+            raise ValueError("EmbStore needs rescore rows or an explicit shape")
+        self.tier = tier
+        self.rescore = rescore
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = np.dtype(dtype)
+        self.gids = None if gids is None else np.ascontiguousarray(gids, np.int32)
+        self.version = 0  # bumped on every host-tier content write
+
+    # -- pytree aux-data contract: stable across content mutation ----------
+    def _key(self):
+        return (self.tier, self.shape, str(self.dtype))
+
+    def __eq__(self, other):
+        return isinstance(other, EmbStore) and self._key() == other._key()
+
+    def __hash__(self):
+        return hash(self._key())
+
+    def __repr__(self):
+        kind = "abstract" if self.rescore is None else f"v{self.version}"
+        return f"EmbStore({self.tier}, {self.shape}, {self.dtype}, {kind})"
+
+    @property
+    def nbytes(self) -> int:
+        return math.prod(self.shape) * self.dtype.itemsize
+
+    def _concrete(self) -> np.ndarray:
+        if self.rescore is None:
+            raise ValueError("abstract EmbStore (shape only) has no rows to access")
+        return self.rescore
+
+    # -- host-tier access ---------------------------------------------------
+    def fetch(self, rows: np.ndarray) -> np.ndarray:
+        """Gather flat bank rows ``(..., )`` -> ``(..., d)`` float32.
+
+        ``rows < 0`` (provisional padding) gather row 0; callers pass the
+        row array as ``out_ids`` downstream, so padded gathers are never
+        surfaced (same convention as the device-tier rescore gather).
+        """
+        rows = np.asarray(rows)
+        table = self._concrete().reshape(-1, self.shape[-1])
+        return table.take(np.maximum(rows, 0).reshape(-1), axis=0).reshape(
+            rows.shape + (self.shape[-1],)
+        )
+
+    def take_gids(self, rows: np.ndarray) -> np.ndarray:
+        """Map flat bank rows -> global passage ids via the synced gid copy."""
+        rows = np.asarray(rows)
+        if self.gids is None:
+            raise ValueError("EmbStore has no synced gids (call sync_gids)")
+        out = self.gids.reshape(-1).take(np.maximum(rows, 0).reshape(-1))
+        return np.where(rows.reshape(-1) < 0, -1, out).reshape(rows.shape)
+
+    # -- host-tier lifecycle writes (lockstep with the device tier) ---------
+    def sync_gids(self, gids: np.ndarray) -> None:
+        self.gids = np.ascontiguousarray(gids, np.int32)
+
+    def write_rows(self, flat_slots: np.ndarray, rows: np.ndarray) -> None:
+        """Scatter ``rows`` at ``flat_slots``; out-of-range slots drop (the
+        same ``mode="drop"`` contract as the device-tier append)."""
+        table = self._concrete().reshape(-1, self.shape[-1])
+        flat_slots = np.asarray(flat_slots).reshape(-1)
+        rows = np.asarray(rows, np.float32).reshape(-1, self.shape[-1])
+        keep = (flat_slots >= 0) & (flat_slots < table.shape[0])
+        table[flat_slots[keep]] = rows[keep]
+        self.version += 1
+
+    def grown(self, new_capacity: int) -> "EmbStore":
+        """A new store with the slot axis ``Lp`` grown (zeros, like the
+        device pad). Copy-on-grow, NOT in place: growth changes the flat-row
+        arithmetic (``cid*Lp + slot``), so mutating the shared store would
+        silently corrupt fetches from any retained pre-growth bank snapshot
+        — the new table is a fresh allocation anyway, so returning a new
+        store costs nothing and keeps old snapshots consistent."""
+        c, lp, d = self.shape
+        if new_capacity < lp:
+            raise ValueError(f"cannot shrink capacity {lp} -> {new_capacity}")
+        if new_capacity == lp:
+            return self
+        gids = self.gids
+        if gids is not None:
+            # Pad the synced gid copy like the device pad (-1 = free slot)
+            # so take_gids' flat-row arithmetic matches the grown table
+            # immediately, not only after the next sync_gids.
+            gids = np.pad(
+                gids, ((0, 0), (0, new_capacity - lp)), constant_values=-1
+            )
+        out = EmbStore("host", shape=(c, new_capacity, d), dtype=self.dtype,
+                       gids=gids)
+        if self.rescore is not None:
+            table = np.zeros((c, new_capacity, d), np.float32)
+            table[:, :lp] = self.rescore
+            out.rescore = table
+        out.version = self.version + 1
+        return out
+
+    def compact_clusters(self, cids: np.ndarray, gid_rows: np.ndarray) -> None:
+        """Mirror of ``update._compact_clusters`` for the host tier: stable
+        repack of live rows to the slot prefix. ``gid_rows`` are the
+        *pre-compaction* per-cluster gid rows (live = ``gid >= 0``)."""
+        table = self._concrete()
+        for cid, g in zip(np.asarray(cids), np.asarray(gid_rows)):
+            order = np.argsort(g < 0, kind="stable")
+            rows = table[cid][order]
+            rows[g[order] < 0] = 0.0
+            table[cid] = rows
+        self.version += 1
+
 
 def _f(cluster_axis: int | None, default=dataclasses.MISSING):
     return dataclasses.field(
@@ -58,7 +227,7 @@ def _f(cluster_axis: int | None, default=dataclasses.MISSING):
     )
 
 
-@pytree_dataclass
+@pytree_dataclass(meta_fields=("store",))
 class ClusterBank:
     lsh: lsh_lib.LSHParams = _f(None)  # shared across clusters (DESIGN.md §2)
     rescale: rescale_lib.RescaleParams = _f(0)  # leaves (c, H)
@@ -75,6 +244,12 @@ class ClusterBank:
     # rows from (DESIGN.md §Quantized bank).
     emb_scales: jnp.ndarray | None = _f(0, default=None)  # (c, Lp) f32
     rescore_embs: jnp.ndarray | None = _f(0, default=None)  # (c, Lp, d)
+    # Host-tier handle (DESIGN.md §Tiered embedding store). None = device
+    # tier. Registered as *static* pytree aux data: the host table never
+    # enters traced programs — the staged search fetches from it between its
+    # two jit'd stages — and EmbStore hashes by (tier, shape, dtype), so
+    # host-content writes never invalidate a compiled search.
+    store: EmbStore | None = _f(None, default=None)
 
     @property
     def n_clusters(self) -> int:
@@ -95,6 +270,24 @@ class ClusterBank:
     @property
     def storage_dtype(self) -> str:
         return "int8" if self.quantized else str(self.embs.dtype)
+
+    @property
+    def rescore_tier(self) -> str:
+        """Where the full-precision rescore table lives (§Tiered store)."""
+        return "host" if self.store is not None else "device"
+
+    def nbytes_by_tier(self) -> dict[str, int]:
+        """Index bytes by storage tier: ``device`` (every pytree leaf — what
+        must be HBM-resident to search) vs ``host`` (the off-device rescore
+        table). The accounting the dry-run memory model and the memory
+        benchmarks report; works on abstract (ShapeDtypeStruct) banks too.
+        """
+        device = sum(
+            math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree_util.tree_leaves(self)
+        )
+        host = self.store.nbytes if self.store is not None else 0
+        return {"device": int(device), "host": int(host)}
 
     def float_rows(self) -> jnp.ndarray:
         """(c, Lp, d) rows as first-pass verification scores them —
@@ -199,6 +392,36 @@ def store_rows(
     )
 
 
+def set_rescore_tier(bank: ClusterBank, tier: str) -> ClusterBank:
+    """Move the full-precision rescore table between storage tiers.
+
+    ``device -> host``: the ``rescore_embs`` leaf leaves the pytree and
+    becomes a process-local host array (the jit'd index shrinks to codes +
+    scales). ``host -> device``: the inverse. Search results are
+    bit-identical across the move (same rows, same kernel, same tie-break —
+    tested in tests/test_tiered.py); only *where* the rows live changes.
+    """
+    if tier not in RESCORE_TIERS:
+        raise ValueError(f"rescore_tier must be one of {RESCORE_TIERS}, got {tier!r}")
+    if tier == bank.rescore_tier:
+        return bank
+    if not bank.quantized:
+        raise ValueError(
+            "rescore_tier='host' requires int8 storage — float banks have "
+            "no rescore side table to move off-device"
+        )
+    if tier == "host":
+        store = EmbStore(
+            "host",
+            rescore=np.asarray(jax.device_get(bank.rescore_embs), np.float32),
+            gids=np.asarray(jax.device_get(bank.gids)),
+        )
+        return dataclasses.replace(bank, rescore_embs=None, store=store)
+    return dataclasses.replace(
+        bank, rescore_embs=jnp.asarray(bank.store._concrete()), store=None
+    )
+
+
 class CapacityOverflowError(ValueError):
     """A pack dropped passages because ``capacity`` < max cluster size.
 
@@ -229,6 +452,7 @@ def build_bank(
     n_leaves: int,
     allow_drops: bool = False,
     storage_dtype: str = "float32",
+    rescore_tier: str = "device",
 ) -> tuple[ClusterBank, int]:
     """Stage-3 build: pack -> store -> hash/sort -> fit, all clusters at once.
 
@@ -245,7 +469,20 @@ def build_bank(
     per-cluster overflow; a lossy pack raises :class:`CapacityOverflowError`
     unless ``allow_drops=True`` (the count is always returned so callers can
     surface it either way).
+
+    ``rescore_tier="host"`` (int8 only — DESIGN.md §Tiered embedding store)
+    builds the full-precision rescore table as a process-local host array
+    instead of a device-resident pytree leaf.
     """
+    if rescore_tier not in RESCORE_TIERS:
+        raise ValueError(
+            f"rescore_tier must be one of {RESCORE_TIERS}, got {rescore_tier!r}"
+        )
+    if rescore_tier == "host" and storage_dtype != "int8":
+        raise ValueError(
+            "rescore_tier='host' requires storage_dtype='int8' — float "
+            "banks have no rescore side table to move off-device"
+        )
     raw_sizes = jnp.bincount(assignment, length=n_clusters)
     n_dropped = int(
         jax.device_get(jnp.sum(jnp.maximum(raw_sizes - capacity, 0)))
@@ -262,6 +499,14 @@ def build_bank(
     sorted_keys, sorted_pos, resc, r = _fit_all_clusters(
         lsh, fit_rows, gids >= 0, n_leaves=n_leaves
     )
+    store = None
+    if rescore_tier == "host":
+        store = EmbStore(
+            "host",
+            rescore=np.asarray(jax.device_get(rescore_embs), np.float32),
+            gids=np.asarray(jax.device_get(gids)),
+        )
+        rescore_embs = None
     bank = ClusterBank(
         lsh=lsh,
         rescale=resc,
@@ -275,6 +520,7 @@ def build_bank(
         next_gid=jnp.int32(embs.shape[0]),
         emb_scales=emb_scales,
         rescore_embs=rescore_embs,
+        store=store,
     )
     return bank, n_dropped
 
@@ -294,6 +540,10 @@ def grow_bank(bank: ClusterBank, new_capacity: int) -> ClusterBank:
     if new_capacity == lp:
         return bank
     extra = new_capacity - lp
+    if bank.store is not None:
+        # Host tier grows in lockstep — copy-on-grow, so prior bank
+        # snapshots keep a consistent (old-Lp) view of their store.
+        bank = dataclasses.replace(bank, store=bank.store.grown(new_capacity))
     return dataclasses.replace(
         bank,
         sorted_keys=jnp.pad(

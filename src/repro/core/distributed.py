@@ -29,13 +29,20 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .. import compat
 from .bank import replicated_field_names
 from .clustering import update_centroids
 from .core_model import TopK, search_core_model
-from .lider import LiderParams, incluster_search, prune_probes
+from .lider import (
+    LiderParams,
+    incluster_search,
+    provisional_rows,
+    prune_probes,
+    rescore_fetched_rows,
+)
 from .utils import dedup_topk
 
 
@@ -71,7 +78,16 @@ def lider_param_specs(params: LiderParams, cluster_axes: Sequence[str]):
 def shard_lider_params(
     mesh: jax.sharding.Mesh, params: LiderParams, cluster_axes: Sequence[str]
 ) -> LiderParams:
-    """device_put every leaf onto the mesh with the LIDER layout."""
+    """device_put every leaf onto the mesh with the LIDER layout.
+
+    The host tier (a host-tier bank's off-device rescore table — static
+    pytree aux, not a leaf) stays process-local, sharded *by process*
+    alongside the device shards: each process keeps the host rows for the
+    clusters its devices own (in this single-process codebase that is the
+    whole table, exactly like the checkpoint writer's single-process note).
+    No device placement and no collectives are involved — the distributed
+    search fetches from it between its two device phases.
+    """
     specs = lider_param_specs(params, cluster_axes)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs
@@ -122,6 +138,18 @@ def make_sharded_search(
     runs the compressed-domain + exact-rescore pass shard-locally
     (``rescore_factor``/``block_c`` tune it) — provisional rows always live
     in the shard that found them, so no extra collective appears.
+
+    **Host-tier banks** (DESIGN.md §Tiered embedding store) split the search
+    in two device phases around a host fetch, with *no new collectives*: the
+    shard_map phase runs route -> dispatch -> compressed first pass and
+    merges per-shard provisional candidates through the *same* single
+    all-gather (carrying k' = rescore_factor*k entries instead of k; rows
+    offset to global flat ids so the row-dedup stays exact across shards);
+    then the front-end fetches the k' exact rows + their gids from the
+    process-local host tier and a small top-level jit rescores them
+    (dedup/tie-break by gid, the float-path convention). The returned
+    ``search`` is therefore a two-phase callable; its jit'd device phase is
+    exposed as ``search.stage1`` (what the dry-run lowers).
     """
     caxes = tuple(cluster_axes)
     qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
@@ -134,8 +162,10 @@ def make_sharded_search(
         )
 
     param_specs = lider_param_specs(params_like, caxes)
+    host_tier = getattr(params_like.bank, "rescore_tier", "device") == "host"
 
-    def body(local_params: LiderParams, q_loc: jnp.ndarray):
+    def _dispatch(local_params, q_loc):
+        """Route + prune + capacity dispatch (shared by both tiers)."""
         c_local = local_params.bank.gids.shape[0]
         my = _flat_axis_index(caxes)
         routed = search_core_model(
@@ -168,6 +198,13 @@ def make_sharded_search(
             sel_valid, flat_cids[sel] - my * c_local, -1
         ).astype(jnp.int32)
         dropped = jnp.sum(mine) - jnp.sum(sel_valid)
+        return my, b_loc, p, sel, sel_valid, sel_b, sel_cid_local, dropped
+
+    def body(local_params: LiderParams, q_loc: jnp.ndarray):
+        my, b_loc, p, sel, sel_valid, sel_b, sel_cid_local, dropped = _dispatch(
+            local_params, q_loc
+        )
+        n_pairs = b_loc * p
 
         pair_topk = incluster_search(
             local_params,
@@ -208,20 +245,118 @@ def make_sharded_search(
         dropped = jax.lax.psum(dropped, caxes + qaxes if qaxes else caxes)
         return ids, sc, dropped
 
+    def body_provisional(local_params: LiderParams, q_loc: jnp.ndarray):
+        """Host-tier device phase: compressed pass + provisional merge.
+
+        Identical dataflow to ``body`` but stops at the provisional
+        top-k' *flat bank rows* (offset to global row ids, so the row-level
+        dedup of the merges stays exact across shards). The all-gather is
+        the same single collective, just k' wide.
+        """
+        my, b_loc, p, sel, sel_valid, sel_b, sel_cid_local, dropped = _dispatch(
+            local_params, q_loc
+        )
+        n_pairs = b_loc * p
+        c_local, lp = local_params.bank.gids.shape
+
+        pair_prov = provisional_rows(
+            local_params,
+            q_loc[sel_b],
+            sel_cid_local[:, None],
+            k=k,
+            r0=r0,
+            refine=refine,
+            use_fused=use_fused,
+            rescore_factor=rescore_factor,
+            block_c=block_c,
+        )  # (cap, k') local flat rows + compressed scores
+        kp = pair_prov.ids.shape[-1]
+        g_rows_pair = jnp.where(
+            pair_prov.ids >= 0, pair_prov.ids + my * c_local * lp, -1
+        )
+
+        scatter_idx = jnp.where(sel_valid, sel, n_pairs)
+        rows_buf = (
+            jnp.full((n_pairs + 1, kp), -1, dtype=jnp.int32)
+            .at[scatter_idx]
+            .set(g_rows_pair)
+        )
+        sc_buf = (
+            jnp.full((n_pairs + 1, kp), -jnp.inf, dtype=jnp.float32)
+            .at[scatter_idx]
+            .set(pair_prov.scores)
+        )
+        l_rows, l_sc = dedup_topk(
+            rows_buf[:-1].reshape(b_loc, -1), sc_buf[:-1].reshape(b_loc, -1), kp
+        )
+
+        g_rows = jax.lax.all_gather(l_rows, caxes)  # (S, B_loc, k')
+        g_sc = jax.lax.all_gather(l_sc, caxes)
+        rows, sc = dedup_topk(
+            jnp.moveaxis(g_rows, 0, 1).reshape(b_loc, -1),
+            jnp.moveaxis(g_sc, 0, 1).reshape(b_loc, -1),
+            kp,
+        )
+        dropped = jax.lax.psum(dropped, caxes + qaxes if qaxes else caxes)
+        return rows, sc, dropped
+
     qspec = P(qaxes, None) if qaxes else P(None, None)
     sharded = compat.shard_map(
-        body,
+        body_provisional if host_tier else body,
         mesh=mesh,
         in_specs=(param_specs, qspec),
         out_specs=(qspec, qspec, P()),
     )
 
-    @jax.jit
-    def search(params: LiderParams, queries: jnp.ndarray):
-        ids, sc, dropped = sharded(params, queries)
-        return TopK(ids=ids, scores=sc), dropped
+    if not host_tier:
+        @jax.jit
+        def search(params: LiderParams, queries: jnp.ndarray):
+            ids, sc, dropped = sharded(params, queries)
+            return TopK(ids=ids, scores=sc), dropped
 
+        return search
+
+    stage1 = jax.jit(sharded)
+
+    def search(params: LiderParams, queries: jnp.ndarray):
+        rows, _, dropped = stage1(params, queries)
+        rows_np = np.asarray(rows)
+        store = params.bank.store
+        fetched = store.fetch(rows_np)  # host np.take on the local shard
+        out_gids = store.take_gids(rows_np)  # host row->gid map
+        out = _rescore_fetched(
+            jnp.asarray(fetched),
+            jnp.asarray(out_gids),
+            queries,
+            k=k,
+            use_fused=use_fused,
+            block_c=block_c,
+        )
+        return out, dropped
+
+    search.stage1 = stage1
     return search
+
+
+@partial(jax.jit, static_argnames=("k", "use_fused", "block_c"))
+def _rescore_fetched(
+    fetched: jnp.ndarray,
+    out_gids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    use_fused: bool | None,
+    block_c: int | None,
+) -> TopK:
+    """Top-level exact rescore of host-fetched rows (distributed front-end).
+
+    Dedups/reports by global id — gids are globally unique, so no cross-
+    shard coordination is needed; ties break by smallest gid (the float-path
+    convention)."""
+    ids, sc = rescore_fetched_rows(
+        fetched, out_gids, queries, k=k, use_fused=use_fused, block_c=block_c
+    )
+    return TopK(ids=ids, scores=sc)
 
 
 # ---------------------------------------------------------------------------

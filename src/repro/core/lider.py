@@ -24,6 +24,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import bank as bank_lib
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
@@ -62,6 +63,13 @@ class LiderConfig:
     # top-(rescore_factor * k) from the full-precision side table.
     storage_dtype: str = "float32"
     rescore_factor: int = 4  # k' = rescore_factor * k (int8 storage only)
+    # Where the full-precision rescore side table lives (int8 storage only;
+    # DESIGN.md §Tiered embedding store). "device": a pytree leaf next to
+    # the codes (PR-4 layout — costs ~25% more HBM than f32). "host": a
+    # process-local pinned host array outside the pytree; search becomes
+    # the staged fetch->rescore pipeline and the device-resident index
+    # shrinks to codes + scales (~0.25x of f32).
+    rescore_tier: str = "device"
     # Verification-kernel candidate block size; None -> kernel default (256).
     # Swept by the Pareto autotuner alongside the quantization knobs.
     block_c: int | None = None
@@ -168,6 +176,7 @@ def build_lider(
         n_leaves=config.n_leaves,
         allow_drops=config.allow_drops,
         storage_dtype=config.storage_dtype,
+        rescore_tier=config.rescore_tier,
     )
 
     # Stage 2: centroids retriever.
@@ -244,6 +253,76 @@ def route_queries(
     )
 
 
+def set_rescore_tier(params: LiderParams, tier: str) -> LiderParams:
+    """Move the index's rescore table between storage tiers (§Tiered store).
+
+    Search results are bit-identical across the move; only where the
+    full-precision rows live — and therefore which search pipeline runs —
+    changes (``bank.set_rescore_tier``).
+    """
+    return dataclasses.replace(
+        params, bank=bank_lib.set_rescore_tier(params.bank, tier)
+    )
+
+
+def _bank_candidates(
+    bank: ClusterBank,
+    queries: jnp.ndarray,
+    cids: jnp.ndarray,
+    *,
+    k: int,
+    r0: int,
+    refine: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Candidate generation over the probed clusters (hash -> rescale -> RMI
+    -> window expansion). Returns ``(flat_emb, gids)``, both (B, P, H, R):
+    flat ``(cluster, slot)`` rows into the ``(c*Lp, ...)`` tables and the
+    matching global passage ids (-1 at dead/invalid candidates). Shared by
+    the single-pass float search, the quantized two-stage search, and the
+    tiered first pass (§Tiered embedding store)."""
+    c, h, lp = bank.sorted_keys.shape
+    b, p = cids.shape
+    r = min(r0 * k, lp)
+
+    qkeys = lsh_lib.hash_vectors(bank.lsh, queries)  # (B, H)
+    safe_cid = jnp.clip(cids, 0, c - 1)
+    cvalid = cids >= 0  # (B, P)
+
+    # Gather per-(query, probe) rescale + RMI models out of the bank, then
+    # predict positions with the banked RMI form.
+    resc = jax.tree.map(lambda leaf: leaf[safe_cid], bank.rescale)  # (B, P, H)
+    scaled = rescale_lib.rescale(resc, qkeys[:, None, :])  # (B, P, H)
+    pos = rmi_lib.predict_banked(
+        rmi_lib.gather_banked(bank.rmi, safe_cid), scaled
+    )  # (B, P, H)
+
+    h_idx = jnp.arange(h, dtype=jnp.int32)[None, None, :, None]
+    if refine:
+        # Beyond-paper last-mile: gather a 2R key window around the RMI
+        # prediction (keys are 4 B vs d*4 B embeddings) and binary-search the
+        # exact position inside it, then expand only R around the truth.
+        w1 = min(2 * r, lp)
+        start1 = jnp.clip(jnp.round(pos).astype(jnp.int32) - w1 // 2, 0, lp - w1)
+        idx1 = start1[..., None] + jnp.arange(w1, dtype=jnp.int32)
+        flat1 = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx1
+        keys_win = jnp.take(bank.sorted_keys.reshape(-1), flat1)  # (B,P,H,W1)
+        qk = jnp.broadcast_to(qkeys[:, None, :], (b, p, h)).reshape(-1)
+        rows = keys_win.reshape(-1, w1)
+        off = jax.vmap(lambda row, q: jnp.searchsorted(row, q))(rows, qk)
+        pos = (start1 + off.reshape(b, p, h).astype(jnp.int32)).astype(jnp.float32)
+
+    start = jnp.clip(jnp.round(pos).astype(jnp.int32) - r // 2, 0, lp - r)
+    idx = start[..., None] + jnp.arange(r, dtype=jnp.int32)  # (B, P, H, R)
+    flat = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx
+    local_pos = jnp.take(bank.sorted_pos.reshape(-1), flat)  # (B, P, H, R)
+
+    valid = (local_pos >= 0) & cvalid[:, :, None, None]
+    flat_emb = safe_cid[:, :, None, None] * lp + jnp.maximum(local_pos, 0)
+    gids = jnp.take(bank.gids.reshape(-1), flat_emb)
+    gids = jnp.where(valid, gids, -1)
+    return flat_emb, gids
+
+
 def _verify_bank_rows(
     bank: ClusterBank,
     flat_rows: jnp.ndarray,
@@ -255,7 +334,8 @@ def _verify_bank_rows(
     block_c: int | None,
     use_pallas: bool | None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Verify ``(Bq, C)`` flat bank rows -> gid-space top-k ids + scores.
+    """Verify ``(Bq, C)`` flat bank rows -> gid-space top-k ids + scores
+    (device-tier rescore table).
 
     The single verification funnel for both ``incluster_search`` shapes
     (merged and per-pair). On a float bank this is one ``verify_topk_op``
@@ -268,6 +348,12 @@ def _verify_bank_rows(
     2. exact rescore of those k' rows from the full-precision side table
        (a gather k'/C the size of the first pass), reusing the same fused
        kernel; final rows map back to global ids through ``bank.gids``.
+
+    On a *host-tier* bank the rescore table is not device-resident, so the
+    second stage cannot be traced here; stage 1 is :func:`provisional_rows`
+    and the fetch + rescore run between jits (:func:`search_lider` /
+    ``serving.RetrievalEngine`` pipeline) — this function is device-tier
+    only.
 
     Score ties between distinct passages break by smallest flat row on the
     quantized path (vs smallest gid on the float path) — both deterministic.
@@ -348,46 +434,18 @@ def incluster_search(
             raise ValueError("prune_margin needs cid_scores (layer-1 scores)")
         cids = prune_probes(cids, cid_scores, prune_margin)
     bank = params.bank
-    c, h, lp = bank.sorted_keys.shape
+    if bank.rescore_tier == "host":
+        raise ValueError(
+            "incluster_search cannot complete on a host-tier bank — the "
+            "rescore table is off-device; use search_lider (staged "
+            "fetch->rescore pipeline) or provisional_rows + "
+            "rescore_fetched_rows directly (DESIGN.md §Tiered embedding "
+            "store)"
+        )
     b, p = cids.shape
-    r = min(r0 * k, lp)
-
-    qkeys = lsh_lib.hash_vectors(bank.lsh, queries)  # (B, H)
-    safe_cid = jnp.clip(cids, 0, c - 1)
-    cvalid = cids >= 0  # (B, P)
-
-    # Gather per-(query, probe) rescale + RMI models out of the bank, then
-    # predict positions with the banked RMI form.
-    resc = jax.tree.map(lambda leaf: leaf[safe_cid], bank.rescale)  # (B, P, H)
-    scaled = rescale_lib.rescale(resc, qkeys[:, None, :])  # (B, P, H)
-    pos = rmi_lib.predict_banked(
-        rmi_lib.gather_banked(bank.rmi, safe_cid), scaled
-    )  # (B, P, H)
-
-    h_idx = jnp.arange(h, dtype=jnp.int32)[None, None, :, None]
-    if refine:
-        # Beyond-paper last-mile: gather a 2R key window around the RMI
-        # prediction (keys are 4 B vs d*4 B embeddings) and binary-search the
-        # exact position inside it, then expand only R around the truth.
-        w1 = min(2 * r, lp)
-        start1 = jnp.clip(jnp.round(pos).astype(jnp.int32) - w1 // 2, 0, lp - w1)
-        idx1 = start1[..., None] + jnp.arange(w1, dtype=jnp.int32)
-        flat1 = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx1
-        keys_win = jnp.take(bank.sorted_keys.reshape(-1), flat1)  # (B,P,H,W1)
-        qk = jnp.broadcast_to(qkeys[:, None, :], (b, p, h)).reshape(-1)
-        rows = keys_win.reshape(-1, w1)
-        off = jax.vmap(lambda row, q: jnp.searchsorted(row, q))(rows, qk)
-        pos = (start1 + off.reshape(b, p, h).astype(jnp.int32)).astype(jnp.float32)
-
-    start = jnp.clip(jnp.round(pos).astype(jnp.int32) - r // 2, 0, lp - r)
-    idx = start[..., None] + jnp.arange(r, dtype=jnp.int32)  # (B, P, H, R)
-    flat = (safe_cid[:, :, None, None] * h + h_idx) * lp + idx
-    local_pos = jnp.take(bank.sorted_pos.reshape(-1), flat)  # (B, P, H, R)
-
-    valid = (local_pos >= 0) & cvalid[:, :, None, None]
-    flat_emb = safe_cid[:, :, None, None] * lp + jnp.maximum(local_pos, 0)
-    gids = jnp.take(bank.gids.reshape(-1), flat_emb)
-    gids = jnp.where(valid, gids, -1)
+    flat_emb, gids = _bank_candidates(
+        bank, queries, cids, k=k, r0=r0, refine=refine
+    )
 
     # Verification: gather rows from the flat (c*Lp, d) table (row_ids =
     # flat_emb), dedup/report by global passage id (out_ids = gids, -1 where
@@ -430,6 +488,196 @@ def incluster_search(
         "with_stats", "rescore_factor", "block_c",
     ),
 )
+def _search_lider_device(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    n_probe: int = 20,
+    r0: int = 4,
+    r0_centroid: int = 4,
+    refine: bool = False,
+    use_fused: bool | None = None,
+    prune_margin: float | None = None,
+    with_stats: bool = False,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
+) -> TopK | tuple[TopK, jnp.ndarray]:
+    """Single-jit search for device-tier banks (float, or int8 with the
+    rescore table resident next to the codes)."""
+    routed = route_queries(
+        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused,
+        block_c=block_c,
+    )
+    cids = prune_probes(routed.ids, routed.scores, prune_margin)
+    out = incluster_search(
+        params, queries, cids, k=k, r0=r0, refine=refine,
+        use_fused=use_fused, rescore_factor=rescore_factor, block_c=block_c,
+    )
+    if with_stats:
+        pruned = (routed.ids >= 0) & (cids < 0)
+        return out, pruned
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tiered (host-resident rescore table) search: three explicit stages
+# (DESIGN.md §Tiered embedding store)
+# ---------------------------------------------------------------------------
+
+
+def provisional_rows(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    cids: jnp.ndarray,
+    *,
+    k: int,
+    r0: int = 4,
+    refine: bool = False,
+    merge: bool = True,
+    use_fused: bool | None = None,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
+) -> TopK:
+    """Stage 1 of the tiered search: compressed-domain first pass only.
+
+    Same candidate generation and int8 first pass as the device-tier
+    quantized search — deduped by flat bank row, same tie-break — but stops
+    at the provisional top-``k' = rescore_factor*k``: ``ids`` are *flat bank
+    rows* (-1 padding) and ``scores`` are the compressed-domain scores. The
+    caller fetches those rows from the host tier (``bank.store.fetch``) and
+    finishes with :func:`rescore_fetched_rows` / :func:`host_rescore`.
+    ``merge=False`` keeps the per-(query, probe) pair shape for the
+    distributed capacity-dispatch path.
+    """
+    bank = params.bank
+    if not bank.quantized:
+        raise ValueError("provisional_rows needs a quantized (int8) bank")
+    b, p = cids.shape
+    flat_emb, gids = _bank_candidates(
+        bank, queries, cids, k=k, r0=r0, refine=refine
+    )
+    c, lp = bank.gids.shape
+    flat_table = bank.embs.reshape(c * lp, -1)
+    scales = bank.emb_scales.reshape(-1)
+    if merge:
+        fr = flat_emb.reshape(b, -1)
+        og = gids.reshape(b, -1)
+        q = queries
+    else:
+        pair_q = jnp.broadcast_to(queries[:, None, :], (b, p, queries.shape[-1]))
+        fr = flat_emb.reshape(b * p, -1)
+        og = gids.reshape(b * p, -1)
+        q = pair_q.reshape(b * p, -1)
+    out_rows = jnp.where(og >= 0, fr, -1)
+    kp = min(max(rescore_factor, 1) * k, fr.shape[-1])
+    rows, sc = verify_topk_op(
+        flat_table, fr, q, k=kp, out_ids=out_rows, scales=scales,
+        block_c=block_c, use_pallas=use_fused,
+    )
+    if not merge:
+        return TopK(ids=rows.reshape(b, p, kp), scores=sc.reshape(b, p, kp))
+    return TopK(ids=rows, scores=sc)
+
+
+def rescore_fetched_rows(
+    fetched: jnp.ndarray,
+    out_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    use_fused: bool | None = None,
+    block_c: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage 3 of the tiered search: exact rescore over host-fetched rows.
+
+    ``fetched``: (B, k', d) full-precision rows (the H2D payload — only
+    ``B*k'*d`` floats); ``out_ids``: (B, k') the ids to dedup/report by
+    (flat bank rows on the single-device path — the device-tier tie-break —
+    or global ids on the distributed path). Runs the *same* fused kernel as
+    the device-tier rescore with the fetched block as its table, so scores
+    and tie-breaks are bit-identical to scoring against the resident table.
+    """
+    b, kp, d = fetched.shape
+    table = fetched.reshape(b * kp, d)
+    row_ids = jnp.arange(b * kp, dtype=jnp.int32).reshape(b, kp)
+    return verify_topk_op(
+        table, row_ids, queries, k=k, out_ids=out_ids,
+        block_c=block_c, use_pallas=use_fused,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "n_probe", "r0", "r0_centroid", "refine", "use_fused",
+        "rescore_factor", "block_c",
+    ),
+)
+def host_first_pass(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    n_probe: int = 20,
+    r0: int = 4,
+    r0_centroid: int = 4,
+    refine: bool = False,
+    use_fused: bool | None = None,
+    prune_margin: float | None = None,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Jit'd stage 1+2a of the tiered search: route + prune + compressed
+    first pass. Returns ``(prov_rows (B, k'), pruned_mask (B, n_probe))``;
+    the host fetch and the rescore jit complete the query
+    (:func:`search_lider`, or pipelined across batches by the serving
+    engine)."""
+    routed = route_queries(
+        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused,
+        block_c=block_c,
+    )
+    cids = prune_probes(routed.ids, routed.scores, prune_margin)
+    prov = provisional_rows(
+        params, queries, cids, k=k, r0=r0, refine=refine, use_fused=use_fused,
+        rescore_factor=rescore_factor, block_c=block_c,
+    )
+    pruned = (routed.ids >= 0) & (cids < 0)
+    return prov.ids, pruned
+
+
+def host_fetch(params: LiderParams, prov_rows) -> np.ndarray:
+    """Stage 2 of the tiered search: host-side exact-row gather.
+
+    A NumPy ``take`` on the process-local host tier — no device involvement;
+    the result is the only H2D payload the rescore needs (``B·k'·d``
+    floats vs the first pass's ``B·C`` candidate traffic)."""
+    return params.bank.store.fetch(np.asarray(prov_rows))
+
+
+@partial(jax.jit, static_argnames=("k", "use_fused", "block_c"))
+def host_rescore(
+    gids: jnp.ndarray,
+    fetched: jnp.ndarray,
+    prov_rows: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    use_fused: bool | None = None,
+    block_c: int | None = None,
+) -> TopK:
+    """Jit'd stage 3: exact rescore of the fetched rows + row->gid mapping.
+
+    Dedup/tie-break by flat bank row — identical to the device-tier
+    quantized path — then the surviving rows map to global ids through the
+    bank's ``gids`` table (a device-resident (c, Lp) int32 leaf)."""
+    rows, scores = rescore_fetched_rows(
+        fetched, prov_rows, queries, k=k, use_fused=use_fused, block_c=block_c
+    )
+    ids = jnp.where(rows >= 0, gids.reshape(-1)[jnp.maximum(rows, 0)], -1)
+    return TopK(ids=ids, scores=scores)
+
+
 def search_lider(
     params: LiderParams,
     queries: jnp.ndarray,
@@ -457,17 +705,31 @@ def search_lider(
     verification runs compressed-domain first, then exactly rescores the
     provisional top-``rescore_factor * k``; the knobs are static so each
     (rescore_factor, block_c) pair is one compile.
+
+    Tier dispatch (DESIGN.md §Tiered embedding store): on a device-tier bank
+    the whole search is one jit. On a *host-tier* bank it runs as three
+    explicit stages — jit'd compressed first pass (:func:`host_first_pass`),
+    host-side exact-row fetch (:func:`host_fetch`: ``np.take`` on the
+    process-local tier, H2D of only ``B·k'·d`` floats), jit'd fused rescore
+    (:func:`host_rescore`) — returning bit-identical (ids, scores) to the
+    device tier on the same bank.
     """
-    routed = route_queries(
-        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused,
-        block_c=block_c,
+    if params.bank.rescore_tier == "host":
+        prov, pruned = host_first_pass(
+            params, queries, k=k, n_probe=n_probe, r0=r0,
+            r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
+            prune_margin=prune_margin, rescore_factor=rescore_factor,
+            block_c=block_c,
+        )
+        fetched = host_fetch(params, prov)
+        out = host_rescore(
+            params.bank.gids, jnp.asarray(fetched), prov, queries, k=k,
+            use_fused=use_fused, block_c=block_c,
+        )
+        return (out, pruned) if with_stats else out
+    return _search_lider_device(
+        params, queries, k=k, n_probe=n_probe, r0=r0,
+        r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
+        prune_margin=prune_margin, with_stats=with_stats,
+        rescore_factor=rescore_factor, block_c=block_c,
     )
-    cids = prune_probes(routed.ids, routed.scores, prune_margin)
-    out = incluster_search(
-        params, queries, cids, k=k, r0=r0, refine=refine,
-        use_fused=use_fused, rescore_factor=rescore_factor, block_c=block_c,
-    )
-    if with_stats:
-        pruned = (routed.ids >= 0) & (cids < 0)
-        return out, pruned
-    return out

@@ -27,6 +27,15 @@ slot prefix) and refit.
 Dirty-cluster refits run under jit with the cluster list padded to a power of
 two (sentinel -1, scattered with ``mode="drop"``), so recompile count is
 O(log max-dirty-batch), not O(distinct batch sizes).
+
+**Tiers** (DESIGN.md §Tiered embedding store): on a host-tier bank the
+full-precision rescore table lives outside the jit pytree, so every lifecycle
+op writes both tiers in lockstep — the jit'd append/compact returns (or is
+mirrored by) the exact slot scatter / stable permutation it applied, and the
+Python wrappers replay it against the host ``EmbStore`` (``write_rows`` /
+``compact_clusters`` / ``grow``), then re-sync the host gid copy. Refits need
+no host work at all: hash/sort/fit reads the *dequantized codes* on both
+tiers, never the rescore rows.
 """
 from __future__ import annotations
 
@@ -108,7 +117,7 @@ def _refit_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
 @jax.jit
 def _append_rows(
     bank: ClusterBank, new_embs: jnp.ndarray, assignment: jnp.ndarray
-) -> ClusterBank:
+) -> tuple[ClusterBank, jnp.ndarray, jnp.ndarray]:
     """Scatter ``new_embs`` into the free slot prefix of their clusters.
 
     ``assignment == n_clusters`` marks batch-padding rows (the caller pads
@@ -116,7 +125,12 @@ def _append_rows(
     real point and scatter out of range, i.e. are dropped. New global ids
     continue from ``bank.next_gid`` in input order — the same ids a
     layer-1-frozen rebuild over ``concat(old corpus, new_embs)`` would
-    assign. Caller guarantees capacity (grow first)."""
+    assign. Caller guarantees capacity (grow first).
+
+    Returns ``(bank, flat_slot, order)`` — the slot each (input-ordered)
+    row landed in and the batch permutation that ordered it, so a host-tier
+    caller can replay the identical scatter against the off-device rescore
+    table (``EmbStore.write_rows``); the device tier ignores them."""
     c, lp = bank.gids.shape
     n = new_embs.shape[0]
     used = bank.sizes + bank.tombstones  # occupied slot prefix per cluster
@@ -145,12 +159,15 @@ def _append_rows(
             .at[flat_slot]
             .set(scl, mode="drop")
             .reshape(c, lp),
-            rescore_embs=bank.rescore_embs.reshape(c * lp, -1)
-            .at[flat_slot]
-            .set(res.astype(bank.rescore_embs.dtype), mode="drop")
-            .reshape(c, lp, -1),
         )
-    return dataclasses.replace(
+        if bank.rescore_embs is not None:  # device tier; host writes outside
+            extra["rescore_embs"] = (
+                bank.rescore_embs.reshape(c * lp, -1)
+                .at[flat_slot]
+                .set(res.astype(bank.rescore_embs.dtype), mode="drop")
+                .reshape(c, lp, -1)
+            )
+    bank = dataclasses.replace(
         bank,
         gids=bank.gids.reshape(-1)
         .at[flat_slot]
@@ -164,6 +181,7 @@ def _append_rows(
         next_gid=bank.next_gid + jnp.sum(assignment < c, dtype=jnp.int32),
         **extra,
     )
+    return bank, flat_slot, order
 
 
 def upsert(
@@ -210,7 +228,18 @@ def upsert(
     m = _pad_pow2(n)
     embs_p = jnp.zeros((m, new_embs.shape[1]), new_embs.dtype).at[:n].set(new_embs)
     assign_p = jnp.full((m,), c, jnp.int32).at[:n].set(assignment)
-    bank = _append_rows(bank, embs_p, assign_p)
+    bank, flat_slot, order = _append_rows(bank, embs_p, assign_p)
+
+    if bank.store is not None:
+        # Host tier writes in lockstep: replay the exact append scatter
+        # against the off-device rescore table (same slots, same rows —
+        # DESIGN.md §Tiered embedding store), then refresh the synced gid
+        # copy the distributed front-end maps rows through.
+        rows = np.asarray(jax.device_get(embs_p), np.float32)[
+            np.asarray(jax.device_get(order))
+        ]
+        bank.store.write_rows(np.asarray(jax.device_get(flat_slot)), rows)
+        bank.store.sync_gids(np.asarray(jax.device_get(bank.gids)))
 
     dirty = np.unique(np.asarray(jax.device_get(assignment)))
     dirty = dirty[(dirty >= 0) & (dirty < c)]
@@ -279,11 +308,17 @@ def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
             jnp.take_along_axis(bank.emb_scales[safe], order, axis=-1),
             1.0,  # the all-zero-row convention (matches a fresh pack's pads)
         )
-        res_p = jnp.where(
-            live_p[..., None],
-            jnp.take_along_axis(bank.rescore_embs[safe], order[..., None], axis=1),
-            0,
-        ).astype(bank.rescore_embs.dtype)
+        # Host-tier banks permute the off-device table in delete() instead
+        # (EmbStore.compact_clusters — same stable order, outside the jit).
+        res_p = None
+        if bank.rescore_embs is not None:
+            res_p = jnp.where(
+                live_p[..., None],
+                jnp.take_along_axis(
+                    bank.rescore_embs[safe], order[..., None], axis=1
+                ),
+                0,
+            ).astype(bank.rescore_embs.dtype)
         fit_rows = dequantize_rows(emb_p, scl_p)
     else:
         scl_p = res_p = None
@@ -295,10 +330,9 @@ def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
     put = lambda old, new: old.at[tgt].set(new, mode="drop")
     bank = _scatter_fit(bank, tgt, sk, sp, resc, rmi)
     if bank.quantized:
-        extra = dict(
-            emb_scales=put(bank.emb_scales, scl_p),
-            rescore_embs=put(bank.rescore_embs, res_p),
-        )
+        extra = dict(emb_scales=put(bank.emb_scales, scl_p))
+        if res_p is not None:
+            extra["rescore_embs"] = put(bank.rescore_embs, res_p)
     return dataclasses.replace(
         bank,
         embs=put(bank.embs, emb_p),
@@ -330,7 +364,15 @@ def delete(
     )[0]
     n_compact = int(to_compact.shape[0])
     if n_compact:
+        if bank.store is not None:
+            # Host tier compacts in lockstep: same stable live-rows-first
+            # order, derived from the same pre-compaction gid rows.
+            bank.store.compact_clusters(
+                to_compact, np.asarray(jax.device_get(bank.gids))[to_compact]
+            )
         bank = _compact_clusters(bank, _pad_ids(to_compact))
+    if bank.store is not None:
+        bank.store.sync_gids(np.asarray(jax.device_get(bank.gids)))
 
     stats = UpdateStats(
         n_deleted=n_deleted,

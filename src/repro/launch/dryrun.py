@@ -134,6 +134,14 @@ def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str) -> dict:
                 rec["cost"] = {"error": str(e)}
             rec["collectives"] = collective_stats(compiled.as_text())
             rec["model_flops"] = bundle.model_flops
+            if bundle.tier_memory is not None:
+                # Retrieval cells: index bytes by storage tier (device HBM
+                # vs host RAM) per storage config, so memory_analysis above
+                # is read against the true device-resident footprint of an
+                # int8+host index (DESIGN.md §Tiered embedding store). The
+                # bundle asserts int8+host device bytes < int8-device (and
+                # < f32) before this record is written.
+                rec["tier_memory"] = bundle.tier_memory
             rec["status"] = "ok"
     except Exception as e:  # noqa: BLE001 — record the failure, keep going
         rec["status"] = "failed"

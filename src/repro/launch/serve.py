@@ -72,6 +72,16 @@ def main() -> None:
         "rescored on int8 banks (LIDER only)",
     )
     ap.add_argument(
+        "--rescore-tier",
+        choices=["device", "host"],
+        default=None,
+        help="where the int8 bank's full-precision rescore table lives "
+        "(DESIGN.md §Tiered embedding store): device (resident next to the "
+        "codes) or host (process-local RAM; the engine pipelines the "
+        "fetch->rescore stages). Default: device on build, the saved tier "
+        "on --load-index",
+    )
+    ap.add_argument(
         "--block-c", type=int, default=None,
         help="verification-kernel candidate block size (default: kernel "
         "default, 256)",
@@ -98,6 +108,11 @@ def main() -> None:
         help="hold out this corpus fraction and upsert it mid-traffic "
         "(LIDER only; exercises RetrievalEngine.apply_updates)",
     )
+    ap.add_argument(
+        "--stats-json", default=None, metavar="PATH",
+        help="write engine stats + recall + per-tier index bytes as JSON "
+        "(what the CI serve smoke job uploads)",
+    )
     args = ap.parse_args()
     use_fused = {"auto": None, "on": True, "off": False}[args.use_fused]
     lifecycle = args.save_index or args.load_index or args.update_fraction > 0
@@ -106,6 +121,16 @@ def main() -> None:
     adaptive = args.prune_margin is not None or args.recall_target is not None
     if adaptive and args.backend != "lider":
         raise SystemExit("--prune-margin/--recall-target need --backend lider")
+    if args.rescore_tier is not None and args.backend != "lider":
+        raise SystemExit("--rescore-tier needs --backend lider")
+    if (
+        args.rescore_tier == "host"
+        and args.storage_dtype != "int8"
+        and not args.load_index
+    ):
+        # Build path only: a loaded checkpoint carries its own storage dtype
+        # (load_index validates the tier against it).
+        raise SystemExit("--rescore-tier host needs --storage-dtype int8")
     if not 0.0 <= args.update_fraction < 1.0:
         raise SystemExit("--update-fraction must be in [0, 1)")
 
@@ -129,9 +154,12 @@ def main() -> None:
             storage_dtype=args.storage_dtype,
             rescore_factor=args.rescore_factor,
             block_c=args.block_c,
+            rescore_tier=args.rescore_tier or "device",
         )
         if args.load_index:
-            index = checkpoint.load_index(args.load_index)
+            index = checkpoint.load_index(
+                args.load_index, rescore_tier=args.rescore_tier
+            )
         else:
             index, build_stats = lider_lib.build_lider(
                 jax.random.PRNGKey(0), base_embs, cfg, return_stats=True
@@ -155,6 +183,14 @@ def main() -> None:
     build_s = time.time() - t0
     built_how = "loaded" if args.load_index else "built"
     print(f"[serve] backend={args.backend} {built_how} in {build_s:.1f}s")
+    tier_bytes = None
+    if args.backend == "lider":
+        tier_bytes = index.bank.nbytes_by_tier()
+        print(
+            f"[serve] index tiers: rescore_tier={index.bank.rescore_tier} "
+            f"device={tier_bytes['device'] / 2**20:.1f} MiB "
+            f"host={tier_bytes['host'] / 2**20:.1f} MiB"
+        )
 
     # Operating point: explicit knobs, or autotuned for a recall target on a
     # held-out query set (DESIGN.md §Adaptive speed-quality control plane).
@@ -255,10 +291,17 @@ def main() -> None:
             + (", ..." if engine.stats.n_batches > 8 else "")
             + ")"
         )
+    host_note = ""
+    if engine.stats.n_host_fetches:
+        host_note = (
+            f", host fetch {engine.stats.host_fetch_us / 1e3:.1f} ms total "
+            f"over {engine.stats.n_host_fetches} batches, overlap "
+            f"{engine.stats.overlap_fraction:.0%}"
+        )
     print(
         f"[serve] {engine.stats.n_queries} queries in "
         f"{engine.stats.total_time_s:.3f}s -> AQT={engine.stats.aqt*1e3:.3f} ms "
-        f"(padding {engine.stats.padding_fraction:.1%}{pruned_note})"
+        f"(padding {engine.stats.padding_fraction:.1%}{pruned_note}{host_note})"
     )
 
     if args.save_index:
@@ -269,6 +312,42 @@ def main() -> None:
     got = jnp.stack(got_rows)
     rec = recall_at_k(got, gt.ids)
     print(f"[serve] recall@{args.k} vs Flat = {float(rec):.4f}")
+
+    if args.stats_json:
+        import json
+
+        s = engine.stats
+        # Record what was actually served — a loaded checkpoint's dtype/tier,
+        # not the CLI defaults (which the load path ignores).
+        served_bank = getattr(engine.params, "bank", None)
+        record = {
+            "backend": args.backend,
+            "storage_dtype": (
+                served_bank.storage_dtype
+                if served_bank is not None
+                else args.storage_dtype
+            ),
+            "rescore_tier": (
+                served_bank.rescore_tier if served_bank is not None else None
+            ),
+            "n_queries": s.n_queries,
+            "n_batches": s.n_batches,
+            "aqt_s": s.aqt,
+            "padding_fraction": s.padding_fraction,
+            "host_fetch_us": s.host_fetch_us,
+            "n_host_fetches": s.n_host_fetches,
+            "overlap_fraction": s.overlap_fraction,
+            "generation": engine.generation,
+            "device_generation": engine.device_generation,
+            "host_generation": engine.host_generation,
+            "recompiles": engine.recompiles,
+            "recall_at_k": float(rec),
+            "k": args.k,
+            "tier_bytes": tier_bytes,
+        }
+        with open(args.stats_json, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[serve] stats -> {args.stats_json}")
 
 
 if __name__ == "__main__":

@@ -48,6 +48,11 @@ class StepBundle:
     # static trip count (layer scan x grad-accum scan) used by
     # benchmarks/roofline.py to correct HLO flops/bytes (§Roofline method).
     loop_factor: float = 1.0
+    # Retrieval cells only: per-storage-config index bytes split by tier
+    # (device HBM vs host RAM — DESIGN.md §Tiered embedding store), recorded
+    # into the dry-run JSON so memory_analysis is read against the real
+    # device-resident footprint.
+    tier_memory: dict | None = None
 
 
 def _ns(mesh, spec_tree):
@@ -513,7 +518,10 @@ def make_recsys_bundle(arch: ArchSpec, shape: ShapeSpec, mesh) -> StepBundle:
 
 
 def lider_param_structs(
-    rcfg, emb_dtype=jnp.float32, storage_dtype: str | None = None
+    rcfg,
+    emb_dtype=jnp.float32,
+    storage_dtype: str | None = None,
+    rescore_tier: str | None = None,
 ) -> lider_lib.LiderParams:
     """Abstract LiderParams for the dry-run (no 38 GB corpus allocation).
 
@@ -521,9 +529,18 @@ def lider_param_structs(
     shapes the bank's storage representation; "int8" adds the abstract
     ``emb_scales``/``rescore_embs`` leaves so the quantized sharded search
     lowers and compiles in the dry-run (DESIGN.md §Quantized bank).
+
+    ``rescore_tier="host"`` (int8 only) attaches an *abstract* host-tier
+    ``EmbStore`` instead of the ``rescore_embs`` leaf — the pytree the jit'd
+    device program sees shrinks to codes + scales, which is exactly what the
+    dry-run's ``memory_analysis`` / per-tier accounting should reflect
+    (DESIGN.md §Tiered embedding store).
     """
     cfg: lider_lib.LiderConfig = rcfg.lider
     storage_dtype = storage_dtype or cfg.storage_dtype
+    rescore_tier = rescore_tier or cfg.rescore_tier
+    if rescore_tier == "host" and storage_dtype != "int8":
+        raise ValueError("rescore_tier='host' requires storage_dtype='int8'")
     c, d, lp = cfg.n_clusters, rcfg.dim, rcfg.capacity
     h, hc = cfg.n_arrays, cfg.n_arrays_centroid
     m, mc = cfg.key_len, cfg.key_len_centroid
@@ -579,7 +596,14 @@ def lider_param_structs(
                 SDS((c, lp), jnp.float32) if storage_dtype == "int8" else None
             ),
             rescore_embs=(
-                SDS((c, lp, d), emb_dtype) if storage_dtype == "int8" else None
+                SDS((c, lp, d), emb_dtype)
+                if storage_dtype == "int8" and rescore_tier == "device"
+                else None
+            ),
+            store=(
+                bank_lib.EmbStore("host", shape=(c, lp, d))
+                if storage_dtype == "int8" and rescore_tier == "host"
+                else None
             ),
         ),
     )
@@ -598,6 +622,33 @@ def _lider_flops(rcfg, batch: int) -> float:
     return hash_f + cen_verify + verify
 
 
+def lider_tier_memory(rcfg) -> dict:
+    """Per-tier index bytes for the three storage configs the memory story
+    compares at this arch's shape: f32 (the baseline), int8 with a
+    device-resident rescore table (PR-4 layout — *more* HBM than f32), and
+    int8 with the host tier (codes + scales only on device). Asserts the
+    tiering actually pays: int8+host device bytes must drop vs both."""
+    variants = {
+        "float32_device": lider_param_structs(
+            rcfg, storage_dtype="float32", rescore_tier="device"
+        ),
+        "int8_device": lider_param_structs(
+            rcfg, storage_dtype="int8", rescore_tier="device"
+        ),
+        "int8_host": lider_param_structs(
+            rcfg, storage_dtype="int8", rescore_tier="host"
+        ),
+    }
+    out = {name: p.bank.nbytes_by_tier() for name, p in variants.items()}
+    assert out["int8_host"]["device"] < out["int8_device"]["device"], (
+        "host tier must shrink the device-resident index"
+    )
+    assert out["int8_host"]["device"] < out["float32_device"]["device"], (
+        "int8+host must beat the f32 device footprint"
+    )
+    return out
+
+
 def make_retrieval_bundle(
     arch: ArchSpec,
     shape: ShapeSpec,
@@ -607,8 +658,12 @@ def make_retrieval_bundle(
     r0: int | None = None,
     refine: bool = False,
     capacity_factor: float = 2.0,
+    storage_dtype: str | None = None,
+    rescore_tier: str | None = None,
 ) -> StepBundle:
-    """``emb_dtype``/``r0``/``refine`` are §Perf iteration knobs."""
+    """``emb_dtype``/``r0``/``refine`` are §Perf iteration knobs;
+    ``storage_dtype``/``rescore_tier`` override the arch config's embedding
+    storage layout (the dry-run's tier axis)."""
     rcfg = arch.config
     cfg: lider_lib.LiderConfig = rcfg.lider
     dp = data_axes(mesh)
@@ -637,7 +692,12 @@ def make_retrieval_bundle(
 
     b = shape.dims["batch"]
     q_axes = ("model",) if ("model" in mesh.axis_names and b % mesh.shape["model"] == 0) else ()
-    params_s = lider_param_structs(rcfg, emb_dtype=emb_dtype)
+    params_s = lider_param_structs(
+        rcfg,
+        emb_dtype=emb_dtype,
+        storage_dtype=storage_dtype,
+        rescore_tier=rescore_tier,
+    )
     search = dist.make_sharded_search(
         mesh,
         params_s,
@@ -651,9 +711,12 @@ def make_retrieval_bundle(
         refine=refine,
     )
     specs = dist.lider_param_specs(params_s, dp)
+    # Host-tier searches are two device phases around a host fetch; the
+    # lowerable device program is stage1 (the compressed pass + merge).
+    fn = getattr(search, "stage1", search)
     return StepBundle(
         name=name,
-        fn=search,
+        fn=fn,
         args=(params_s, SDS((b, rcfg.dim), jnp.float32)),
         in_shardings=(
             _ns(mesh, specs),
@@ -662,6 +725,7 @@ def make_retrieval_bundle(
         out_shardings=None,
         model_flops=_lider_flops(rcfg, b),
         donate_argnums=(),
+        tier_memory=lider_tier_memory(rcfg),
     )
 
 

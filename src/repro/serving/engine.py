@@ -49,10 +49,22 @@ class EngineStats:
         default_factory=lambda: collections.deque(maxlen=256)
     )
     n_results_evicted: int = 0  # results dropped by the bounded results map
+    # Tiered serving (DESIGN.md §Tiered embedding store): host-side exact-row
+    # fetch accounting. A fetch is "overlapped" when the next batch's
+    # compressed first pass was already dispatched to the device before the
+    # fetch ran — the double-buffered pipeline's payoff condition.
+    host_fetch_us: float = 0.0
+    n_host_fetches: int = 0
+    n_overlapped_fetches: int = 0
 
     @property
     def aqt(self) -> float:
         return self.total_time_s / max(self.n_queries, 1)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of host fetches that ran under a dispatched next batch."""
+        return self.n_overlapped_fetches / max(self.n_host_fetches, 1)
 
     @property
     def padding_fraction(self) -> float:
@@ -132,6 +144,42 @@ def make_backend(
             )
 
         if updatable:
+            # Staged spelling of the same operating point, for host-tier
+            # (rescore_tier="host") params: the engine pipelines stage1 of
+            # batch i+1 over batch i's host fetch + rescore (DESIGN.md
+            # §Tiered embedding store). search_lider composes the identical
+            # stages serially, so results match the unpipelined call.
+            def host_stage1(params, q, k):
+                prov, pruned = lider_lib.host_first_pass(
+                    params,
+                    q,
+                    k=k,
+                    n_probe=kw.get("n_probe", 20),
+                    r0=kw.get("r0", 4),
+                    refine=kw.get("refine", False),
+                    use_fused=kw.get("use_fused"),
+                    prune_margin=prune_margin,
+                    rescore_factor=kw.get("rescore_factor", 4),
+                    block_c=kw.get("block_c"),
+                )
+                # Same contract as the serial path: probe stats only when
+                # the margin rule is actually configured.
+                return prov, (pruned if prune_margin is not None else None)
+
+            def host_stage2(params, fetched, prov_rows, q, k):
+                return lider_lib.host_rescore(
+                    params.bank.gids,
+                    fetched,
+                    prov_rows,
+                    q,
+                    k=k,
+                    use_fused=kw.get("use_fused"),
+                    block_c=kw.get("block_c"),
+                )
+
+            lider_search.host_stage1 = host_stage1
+            lider_search.host_fetch = lider_lib.host_fetch
+            lider_search.host_stage2 = host_stage2
             return lider_search
 
         def search(q, k):
@@ -180,6 +228,12 @@ class RetrievalEngine:
         self.dim = dim
         self.params = params
         self.generation = 0  # bumped on every apply_updates
+        # The tier split (DESIGN.md §Tiered embedding store): device-tier
+        # state (pytree leaves) and host-tier state (the EmbStore content)
+        # change independently, and only device *shape* changes ever force a
+        # recompile — a host-content-only update must not re-trace anything.
+        self.device_generation = 0  # pytree leaves changed
+        self.host_generation = 0  # host EmbStore content changed
         self.recompiles = 0  # bumped only when shapes changed
         self.queue: collections.deque[tuple[int, np.ndarray]] = collections.deque()
         # Bounded FIFO of answered (ids, scores) pairs. ``result()`` pops by
@@ -237,56 +291,165 @@ class RetrievalEngine:
                 "engine was not built with params (make_backend(..., "
                 "updatable=True) + RetrievalEngine(..., params=...))"
             )
+        old_leaves = jax.tree_util.tree_leaves(self.params)
+        old_store = self._host_store(self.params)
+        # Capture the version BEFORE the update runs: lifecycle ops mutate
+        # the store in place, so the object identity alone can't tell us
+        # whether its content changed.
+        old_hver = None if old_store is None else old_store.version
         out = update_fn(self.params)
         new_params = out[0] if isinstance(out, tuple) else out
-        old_shapes = [jnp.shape(l) for l in jax.tree_util.tree_leaves(self.params)]
-        new_shapes = [jnp.shape(l) for l in jax.tree_util.tree_leaves(new_params)]
-        grew = old_shapes != new_shapes
+        new_leaves = jax.tree_util.tree_leaves(new_params)
+        grew = [jnp.shape(l) for l in old_leaves] != [
+            jnp.shape(l) for l in new_leaves
+        ]
+        device_changed = grew or any(
+            a is not b for a, b in zip(old_leaves, new_leaves)
+        )
+        new_store = self._host_store(new_params)
+        host_changed = (new_store is not old_store) or (
+            new_store is not None and new_store.version != old_hver
+        )
         self.params = new_params
         self.generation += 1
+        if device_changed:
+            self.device_generation += 1
+        if host_changed:
+            self.host_generation += 1
         if grew:
             self.recompiles += 1
             self.warmup()
         return grew
 
+    @staticmethod
+    def _host_store(params):
+        return getattr(getattr(params, "bank", None), "store", None)
+
+    def _next_batch(self):
+        """Pop up to ``batch_size`` requests into the padded device batch.
+
+        The device array must be a COPY of the preallocated buffer, never an
+        alias (CPU jax can zero-copy suitably-aligned NumPy arrays): the
+        pipelined drain refills the buffer for batch i+1 while batch i's
+        device input is still pending in its rescore stage.
+        """
+        n = min(len(self.queue), self.batch_size)
+        chunk = [self.queue.popleft() for _ in range(n)]
+        q = self._batch_buf
+        for i, (_, vec) in enumerate(chunk):
+            q[i] = vec
+        if n < self.batch_size:  # zero stale rows from the last batch
+            q[n:] = 0.0
+        return chunk, n, jnp.array(q)  # jnp.array copies; asarray may alias
+
+    def _record_batch(self, chunk, n, out, pruned) -> None:
+        """Account one completed batch and route its answers (outside the
+        AQT window — this includes the result D2H conversion)."""
+        ids = np.asarray(out.ids)
+        scores = np.asarray(out.scores)
+        self.stats.n_queries += n
+        self.stats.n_batches += 1
+        self.stats.n_padded += self.batch_size - n
+        if pruned is not None:
+            # Count only the n real queries — padded rows route too, but
+            # their probes are not served traffic.
+            pmask = np.asarray(pruned)[:n]
+            self.stats.n_probes_total += int(pmask.size)
+            self.stats.n_probes_pruned += int(pmask.sum())
+            self.stats.batch_pruned_fraction.append(
+                float(pmask.sum()) / max(pmask.size, 1)
+            )
+        for i, (rid, _) in enumerate(chunk):
+            self.results[rid] = (ids[i], scores[i])
+        while len(self.results) > self.max_results:
+            self.results.popitem(last=False)  # evict oldest un-collected
+            self.stats.n_results_evicted += 1
+
+    def _staged_host_serving(self) -> bool:
+        """Host-tier LIDER params + a backend exposing the staged search."""
+        return (
+            self.params is not None
+            and getattr(self.search_fn, "host_stage1", None) is not None
+            and getattr(
+                getattr(self.params, "bank", None), "rescore_tier", "device"
+            )
+            == "host"
+        )
+
     def drain(self) -> None:
-        """Execute queued requests in fixed-size (padded) batches."""
+        """Execute queued requests in fixed-size (padded) batches.
+
+        Host-tier LIDER indexes (``rescore_tier="host"``) drain through the
+        double-buffered fetch->rescore pipeline (:meth:`_drain_pipelined`);
+        everything else executes serially.
+        """
+        if self._staged_host_serving():
+            return self._drain_pipelined()
         while self.queue:
-            n = min(len(self.queue), self.batch_size)
-            chunk = [self.queue.popleft() for _ in range(n)]
-            q = self._batch_buf
-            for i, (_, vec) in enumerate(chunk):
-                q[i] = vec
-            if n < self.batch_size:  # zero stale rows from the last batch
-                q[n:] = 0.0
+            chunk, n, q = self._next_batch()
             t0 = time.perf_counter()
-            out, pruned = self._split_out(self._search(jnp.asarray(q)))
+            out, pruned = self._split_out(self._search(q))
             # Block on BOTH outputs so AQT covers all device time — blocking
             # on ids alone under-counts when scores finish later. The AQT
             # window closes HERE: D2H conversion (np.asarray) is host-side
             # transfer the paper's efficiency metric must not include.
             jax.block_until_ready((out.ids, out.scores))
-            dt = time.perf_counter() - t0
-            ids = np.asarray(out.ids)
-            scores = np.asarray(out.scores)
-            self.stats.n_queries += n
-            self.stats.n_batches += 1
-            self.stats.n_padded += self.batch_size - n
-            self.stats.total_time_s += dt
-            if pruned is not None:
-                # Count only the n real queries — padded rows route too, but
-                # their probes are not served traffic.
-                pmask = np.asarray(pruned)[:n]
-                self.stats.n_probes_total += int(pmask.size)
-                self.stats.n_probes_pruned += int(pmask.sum())
-                self.stats.batch_pruned_fraction.append(
-                    float(pmask.sum()) / max(pmask.size, 1)
+            self.stats.total_time_s += time.perf_counter() - t0
+            self._record_batch(chunk, n, out, pruned)
+
+    def _drain_pipelined(self) -> None:
+        """Double-buffered host-tier drain (§Tiered embedding store).
+
+        Batch *i+1*'s compressed first pass is dispatched to the device
+        *before* batch *i*'s provisional rows come back D2H and its exact
+        rows are fetched from the host tier — so the host fetch (and the
+        B·k'·d H2D of the fetched rows) hides behind device work for every
+        batch but the last. The AQT window spans the whole pipelined drain
+        (per-batch windows would double-count the overlapped regions) and
+        still excludes the result D2H conversions, which are measured and
+        subtracted.
+        """
+        t0 = time.perf_counter()
+        d2h_s = 0.0
+        pending = None  # the batch whose fetch + rescore are still due
+        while self.queue or pending is not None:
+            nxt = None
+            if self.queue:
+                chunk, n, q = self._next_batch()
+                # Async dispatch: returns before the device finishes, so the
+                # pending batch's host fetch below overlaps this compute.
+                prov, pruned = self.search_fn.host_stage1(
+                    self.params, q, self.k
                 )
-            for i, (rid, _) in enumerate(chunk):
-                self.results[rid] = (ids[i], scores[i])
-            while len(self.results) > self.max_results:
-                self.results.popitem(last=False)  # evict oldest un-collected
-                self.stats.n_results_evicted += 1
+                nxt = (chunk, n, q, prov, pruned)
+            if pending is not None:
+                d2h_s += self._finish_host_batch(
+                    pending, overlapped=nxt is not None
+                )
+            pending = nxt
+        self.stats.total_time_s += max(time.perf_counter() - t0 - d2h_s, 0.0)
+
+    def _finish_host_batch(self, entry, *, overlapped: bool) -> float:
+        """Fetch + rescore one stage1-dispatched batch; returns the result
+        D2H conversion seconds (excluded from the AQT window)."""
+        chunk, n, q, prov, pruned = entry
+        # Close the device wait BEFORE the fetch timer: np.asarray(prov)
+        # inside host_fetch would otherwise block on the batch's first pass
+        # and charge device compute to the host-fetch stat.
+        jax.block_until_ready(prov)
+        tf0 = time.perf_counter()
+        fetched = self.search_fn.host_fetch(self.params, prov)
+        self.stats.host_fetch_us += (time.perf_counter() - tf0) * 1e6
+        self.stats.n_host_fetches += 1
+        if overlapped:
+            self.stats.n_overlapped_fetches += 1
+        out = self.search_fn.host_stage2(
+            self.params, jnp.asarray(fetched), prov, q, self.k
+        )
+        jax.block_until_ready((out.ids, out.scores))
+        tc0 = time.perf_counter()
+        self._record_batch(chunk, n, out, pruned)
+        return time.perf_counter() - tc0
 
     def result(self, rid: int, *, keep: bool = False):
         """Fetch (and by default release) the answer for ``rid``.

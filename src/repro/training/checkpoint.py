@@ -124,11 +124,24 @@ def save_index(directory: str, params: Any) -> str:
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, _leaf_name(path) + ".npy"), arr)
+    rescore_tier = getattr(params.bank, "rescore_tier", "device")
+    if rescore_tier == "host":
+        # The host tier lives outside the pytree (DESIGN.md §Tiered
+        # embedding store) — persist it under the SAME leaf name a
+        # device-tier index uses, so checkpoints are tier-portable: a
+        # device-tier save loads as host-tier and vice versa.
+        np.save(
+            os.path.join(tmp, "bank__rescore_embs.npy"),
+            params.bank.store._concrete(),
+        )
     meta = {
         "format": "lider_index_v1",
         # Embedding storage dtype (DESIGN.md §Quantized bank); int8 indexes
         # additionally persist bank__emb_scales / bank__rescore_embs leaves.
         "storage_dtype": params.bank.storage_dtype,
+        # Which tier the rescore table was served from at save time; load
+        # defaults to it but any tier can be requested (load_index).
+        "rescore_tier": rescore_tier,
         "in_lsh": {
             "n_arrays": params.bank.lsh.n_arrays,
             "key_len": params.bank.lsh.key_len,
@@ -153,9 +166,15 @@ def save_index(directory: str, params: Any) -> str:
     return final
 
 
-def load_index(directory: str) -> Any:
-    """Load a ``LiderParams`` index saved by :func:`save_index`."""
-    from ..core.bank import ClusterBank
+def load_index(directory: str, *, rescore_tier: str | None = None) -> Any:
+    """Load a ``LiderParams`` index saved by :func:`save_index`.
+
+    ``rescore_tier`` overrides where the rescore table lands ("device" or
+    "host"); default is whatever tier the index was saved from. The on-disk
+    format is tier-agnostic (one ``bank__rescore_embs.npy`` either way), so
+    a device-tier checkpoint loads as host-tier and vice versa.
+    """
+    from ..core.bank import ClusterBank, EmbStore
     from ..core.core_model import CoreModelParams
     from ..core.lider import LiderParams
     from ..core.lsh import LSHParams
@@ -206,6 +225,22 @@ def load_index(directory: str) -> Any:
         sorted_ids=leaf("centroid_cm", "sorted_ids"),
     )
     quantized = meta.get("storage_dtype", "float32") == "int8"
+    tier = rescore_tier or meta.get("rescore_tier", "device")
+    if tier not in ("device", "host"):
+        raise ValueError(f"rescore_tier must be 'device' or 'host', got {tier!r}")
+    if tier == "host" and not quantized:
+        raise ValueError(
+            "rescore_tier='host' requires an int8 index (float banks have "
+            "no rescore table)"
+        )
+    rescore = store = None
+    if quantized:
+        gids_arr = np.load(os.path.join(d, "bank__gids.npy"))
+        rescore_arr = np.load(os.path.join(d, "bank__rescore_embs.npy"))
+        if tier == "host":
+            store = EmbStore("host", rescore=rescore_arr, gids=gids_arr)
+        else:
+            rescore = jnp.asarray(rescore_arr)
     bank = ClusterBank(
         lsh=lsh_of(("bank", "lsh"), meta["in_lsh"]),
         rescale=rescale_of(("bank", "rescale")),
@@ -218,7 +253,8 @@ def load_index(directory: str) -> Any:
         tombstones=leaf("bank", "tombstones"),
         next_gid=leaf("bank", "next_gid"),
         emb_scales=leaf("bank", "emb_scales") if quantized else None,
-        rescore_embs=leaf("bank", "rescore_embs") if quantized else None,
+        rescore_embs=rescore,
+        store=store,
     )
     return LiderParams(
         centroid_cm=centroid_cm, centroids=leaf("centroids"), bank=bank

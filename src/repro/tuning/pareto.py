@@ -106,6 +106,11 @@ class SweepResult:
     mrr10: float
     pruned_fraction: float
     storage_dtype: str = "float32"  # bank storage the point ran against
+    # Tier axis (DESIGN.md §Tiered embedding store): which tier held the
+    # rescore table, and the measured host fetch overhead per query (D2H of
+    # the provisional rows + the np.take; 0.0 on the device tier).
+    rescore_tier: str = "device"
+    host_fetch_s: float = 0.0
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -182,7 +187,9 @@ def sweep(
     """
     on_tpu = jax.default_backend() == "tpu"
     storage_dtype = params.bank.storage_dtype
+    rescore_tier = getattr(params.bank, "rescore_tier", "device")
     base_walls: dict[tuple, tuple[float, float]] = {}
+    host_fetch_walls: dict[tuple, float] = {}
     results = []
     for point in grid:
         base_key = (
@@ -226,6 +233,26 @@ def sweep(
         else:
             live = 1.0 - pruned_frac
             aqt = wall_route + max(wall_full - wall_route, 0.0) * live
+        host_fetch_s = 0.0
+        if rescore_tier == "host":
+            # Measured fetch overhead of the tiered pipeline at this point:
+            # D2H of the provisional rows + the host-side np.take (shared
+            # across margin variants — pruning doesn't change k').
+            fetch_key = (point.n_probe, point.rescore_factor, point.block_c)
+            if fetch_key not in host_fetch_walls:
+                prov, _ = lider_lib.host_first_pass(
+                    params, queries, k=k, n_probe=point.n_probe,
+                    r0=point.r0, refine=point.refine, use_fused=use_fused,
+                    rescore_factor=point.rescore_factor,
+                    block_c=point.block_c,
+                )
+                t0 = time.perf_counter()
+                for _ in range(repeats):
+                    lider_lib.host_fetch(params, prov)
+                host_fetch_walls[fetch_key] = (
+                    time.perf_counter() - t0
+                ) / (repeats * queries.shape[0])
+            host_fetch_s = host_fetch_walls[fetch_key]
         ids = np.asarray(out.ids)
         results.append(
             SweepResult(
@@ -238,6 +265,8 @@ def sweep(
                 mrr10=mrr_at_10(ids, relevant) if relevant is not None else -1.0,
                 pruned_fraction=pruned_frac,
                 storage_dtype=storage_dtype,
+                rescore_tier=rescore_tier,
+                host_fetch_s=host_fetch_s,
             )
         )
     return results
@@ -332,6 +361,7 @@ def make_report(
         "k": k,
         "n_queries": n_queries,
         "storage_dtypes": sorted({r.storage_dtype for r in results}),
+        "rescore_tiers": sorted({r.rescore_tier for r in results}),
         "points": [
             {**r.to_json(), "on_frontier": id(r) in frontier_set}
             for r in results
@@ -405,6 +435,14 @@ def main() -> None:
         help="k' = factor*k exact-rescore depths to sweep (int8 banks)",
     )
     ap.add_argument(
+        "--rescore-tiers", nargs="+", default=["device"],
+        choices=["device", "host"],
+        help="storage tiers for the int8 rescore table (DESIGN.md §Tiered "
+        "embedding store): every int8 point is swept per tier, tagged with "
+        "the tier and its measured host fetch overhead (host is skipped "
+        "for float banks, which have no rescore table)",
+    )
+    ap.add_argument(
         "--block-cs", type=int, nargs="+", default=None,
         help="verification-kernel candidate block sizes to sweep",
     )
@@ -436,7 +474,10 @@ def main() -> None:
     )
     block_cs = tuple(args.block_cs) if args.block_cs else (None,)
 
-    # One built index per storage dtype; the frontier spans all of them.
+    # One built index per storage dtype; the frontier spans all of them
+    # (and, for int8, every requested rescore tier — the tier move is a
+    # pure conversion of the same bank, so points differ only in where the
+    # rescore rows live).
     results = []
     for sd in args.storage_dtypes:
         cfg = lider_lib.LiderConfig(
@@ -459,10 +500,17 @@ def main() -> None:
             n_probes=n_probes, margins=margins,
             rescore_factors=rescore_factors, block_cs=block_cs,
         )
-        results.extend(
-            sweep(params, queries, gt.ids, grid, k=args.k, relevant=relevant,
-                  repeats=args.repeats)
-        )
+        for tier in args.rescore_tiers:
+            if tier == "host" and sd != "int8":
+                continue  # float banks have no rescore table to move
+            p_t = (
+                params if tier == "device"
+                else lider_lib.set_rescore_tier(params, "host")
+            )
+            results.extend(
+                sweep(p_t, queries, gt.ids, grid, k=args.k,
+                      relevant=relevant, repeats=args.repeats)
+            )
 
     report = make_report(
         results, k=args.k, n_queries=int(queries.shape[0]),
@@ -478,13 +526,19 @@ def main() -> None:
     for p in report["points"]:
         star = "*" if p["on_frontier"] else " "
         kind = "adapt" if p["adaptive"] else "fixed"
+        fetch = (
+            f" fetch={p['host_fetch_s'] * 1e6:.1f}us"
+            if p["rescore_tier"] == "host"
+            else ""
+        )
         print(
-            f"[pareto]{star} {kind} {p['storage_dtype']:>8} "
+            f"[pareto]{star} {kind} {p['storage_dtype']:>8}"
+            f"/{p['rescore_tier']} "
             f"probe={p['n_probe']:3d} "
             f"margin={p['prune_margin'] if p['prune_margin'] is not None else '-':>5} "
             f"rescore={p['rescore_factor']} "
             f"aqt={p['aqt_s'] * 1e6:9.1f}us recall@{args.k}={p['recall']:.4f} "
-            f"mrr10={p['mrr10']:.4f} pruned={p['pruned_fraction']:.2%}"
+            f"mrr10={p['mrr10']:.4f} pruned={p['pruned_fraction']:.2%}{fetch}"
         )
     sel = report.get("selected")
     if sel:

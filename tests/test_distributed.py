@@ -100,6 +100,45 @@ def test_sharded_search_quantized_bank_matches_single_device():
     assert "INT8_EQUIV_OK" in out
 
 
+def test_sharded_search_host_tier_matches_single_device():
+    """Host-tier bank (DESIGN.md §Tiered embedding store): the two-phase
+    sharded search — compressed shard_map pass + host fetch + top-level
+    rescore — matches the single-device staged search, with the rescore
+    table never device-resident and no change to the collective set."""
+    out = _run(
+        """
+        from repro.core import lider, distributed
+        from repro.core.utils import l2_normalize
+        rng = jax.random.PRNGKey(0)
+        kc, kx, kq, kb = jax.random.split(rng, 4)
+        centers = jax.random.normal(kc, (32, 64))
+        assign = jax.random.randint(kx, (4000,), 0, 32)
+        x = l2_normalize(centers[assign] + 0.3*jax.random.normal(kq, (4000, 64)))
+        q = l2_normalize(x[:64] + 0.05*jax.random.normal(kb, (64, 64)))
+        cfg = lider.LiderConfig(n_clusters=64, n_probe=8, n_arrays=4,
+                                n_leaves=4, kmeans_iters=10,
+                                storage_dtype="int8", rescore_tier="host")
+        params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+        assert params.bank.rescore_tier == "host"
+        assert params.bank.rescore_embs is None  # never a device leaf
+        ref = lider.search_lider(params, q, k=10, n_probe=8, r0=8)
+        sp = distributed.shard_lider_params(mesh, params, ("data",))
+        search = distributed.make_sharded_search(
+            mesh, params, k=10, n_probe=8, r0=8, capacity_factor=3.0)
+        assert hasattr(search, "stage1")  # the lowerable device phase
+        out, dropped = search(sp, q)
+        assert int(dropped) == 0, f"dropped {dropped}"
+        rs = np.sort(np.asarray(ref.scores)); os_ = np.sort(np.asarray(out.scores))
+        assert np.allclose(rs, os_, atol=1e-5), np.abs(rs-os_).max()
+        ov = np.mean([len(set(a[a>=0]) & set(b[b>=0]))/max(len(set(a[a>=0])),1)
+                      for a, b in zip(np.asarray(ref.ids), np.asarray(out.ids))])
+        assert ov == 1.0, ov
+        print("HOST_TIER_EQUIV_OK")
+        """
+    )
+    assert "HOST_TIER_EQUIV_OK" in out
+
+
 def test_capacity_drops_reduce_recall_gracefully():
     out = _run(
         """
