@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
+from .. import faults
 from ..kernels.quant import dequantize_rows, quantize_rows
 from .types import pytree_dataclass
 
@@ -119,6 +120,7 @@ class EmbStore:
         self.dtype = np.dtype(dtype)
         self.gids = None if gids is None else np.ascontiguousarray(gids, np.int32)
         self.version = 0  # bumped on every host-tier content write
+        self._txn = None  # undo journal while a transaction is open
 
     # -- pytree aux-data contract: stable across content mutation ----------
     def _key(self):
@@ -151,6 +153,7 @@ class EmbStore:
         row array as ``out_ids`` downstream, so padded gathers are never
         surfaced (same convention as the device-tier rescore gather).
         """
+        faults.fire(faults.HOST_FETCH)
         rows = np.asarray(rows)
         table = self._concrete().reshape(-1, self.shape[-1])
         return table.take(np.maximum(rows, 0).reshape(-1), axis=0).reshape(
@@ -165,6 +168,53 @@ class EmbStore:
         out = self.gids.reshape(-1).take(np.maximum(rows, 0).reshape(-1))
         return np.where(rows.reshape(-1) < 0, -1, out).reshape(rows.shape)
 
+    # -- transactions -------------------------------------------------------
+    # The index lifecycle mutates the host table IN PLACE (write_rows /
+    # compact_clusters / sync_gids), so an exception mid-``update_fn`` leaves
+    # a mixed-generation store. A transaction keeps an undo journal of
+    # first-touch pre-images; ``rollback`` replays it in reverse, restoring
+    # table bytes, the synced gid copy, and ``version`` exactly. Growth is
+    # already copy-on-grow (``grown`` returns a NEW store), so rolling back
+    # a grown update is just discarding the new params — the journal only
+    # needs to cover in-place writes to *this* store.
+
+    def begin_txn(self) -> None:
+        """Open a transaction; subsequent in-place writes are journaled."""
+        if self._txn is not None:
+            raise RuntimeError("EmbStore transaction already open")
+        self._txn = {
+            "log": [],
+            "gids": None if self.gids is None else self.gids.copy(),
+            "version": self.version,
+        }
+
+    def commit(self) -> None:
+        """Close the transaction, keeping all writes."""
+        if self._txn is None:
+            raise RuntimeError("no open EmbStore transaction")
+        self._txn = None
+
+    def rollback(self) -> None:
+        """Undo every journaled write since ``begin_txn`` (reverse order)."""
+        txn = self._txn
+        if txn is None:
+            raise RuntimeError("no open EmbStore transaction")
+        table = None if self.rescore is None else self.rescore.reshape(
+            -1, self.shape[-1]
+        )
+        for kind, key, old in reversed(txn["log"]):
+            if kind == "rows":
+                table[key] = old
+            else:  # "clusters"
+                self.rescore[key] = old
+        self.gids = txn["gids"]
+        self.version = txn["version"]
+        self._txn = None
+
+    @property
+    def in_txn(self) -> bool:
+        return self._txn is not None
+
     # -- host-tier lifecycle writes (lockstep with the device tier) ---------
     def sync_gids(self, gids: np.ndarray) -> None:
         self.gids = np.ascontiguousarray(gids, np.int32)
@@ -176,8 +226,14 @@ class EmbStore:
         flat_slots = np.asarray(flat_slots).reshape(-1)
         rows = np.asarray(rows, np.float32).reshape(-1, self.shape[-1])
         keep = (flat_slots >= 0) & (flat_slots < table.shape[0])
-        table[flat_slots[keep]] = rows[keep]
+        sel = flat_slots[keep]
+        if self._txn is not None:
+            self._txn["log"].append(("rows", sel.copy(), table[sel].copy()))
+        table[sel] = rows[keep]
         self.version += 1
+        # Fires AFTER the in-place mutation: models an update_fn crash that
+        # leaves the host tier advanced while the device tier is not.
+        faults.fire(faults.HOST_WRITE)
 
     def grown(self, new_capacity: int) -> "EmbStore":
         """A new store with the slot axis ``Lp`` grown (zeros, like the
@@ -213,7 +269,10 @@ class EmbStore:
         repack of live rows to the slot prefix. ``gid_rows`` are the
         *pre-compaction* per-cluster gid rows (live = ``gid >= 0``)."""
         table = self._concrete()
-        for cid, g in zip(np.asarray(cids), np.asarray(gid_rows)):
+        cids = np.asarray(cids)
+        if self._txn is not None:
+            self._txn["log"].append(("clusters", cids.copy(), table[cids].copy()))
+        for cid, g in zip(cids, np.asarray(gid_rows)):
             order = np.argsort(g < 0, kind="stable")
             rows = table[cid][order]
             rows[g[order] < 0] = 0.0

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .. import compat
+from .. import compat, faults
 from .bank import replicated_field_names
 from .clustering import update_centroids
 from .core_model import TopK, search_core_model
@@ -150,6 +150,17 @@ def make_sharded_search(
     (dedup/tie-break by gid, the float-path convention). The returned
     ``search`` is therefore a two-phase callable; its jit'd device phase is
     exposed as ``search.stage1`` (what the dry-run lowers).
+
+    **Degraded mode** (DESIGN.md §Failure model): both tiers accept an
+    optional ``shard_health`` bool mask of length ``n_cluster_shards``
+    (default: all live). A dead shard's local contribution is masked to
+    (-1, -inf) *before* the all-gather, so the merge returns partial
+    results over the live shards instead of aborting — and the mask is a
+    traced input, so flipping shard health never recompiles. The health of
+    the last call is reported as ``search.shard_stats =
+    {"shards_live", "shards_total"}``; an active fault plan
+    (``faults.SHARD_SEARCH``, mode ``kill_shard``) marks shards dead
+    through the same mask.
     """
     caxes = tuple(cluster_axes)
     qaxes = tuple(query_axes)  # may be empty: replicated queries (batch-1)
@@ -200,7 +211,30 @@ def make_sharded_search(
         dropped = jnp.sum(mine) - jnp.sum(sel_valid)
         return my, b_loc, p, sel, sel_valid, sel_b, sel_cid_local, dropped
 
-    def body(local_params: LiderParams, q_loc: jnp.ndarray):
+    def _resolve_health(shard_health) -> np.ndarray:
+        """Host-side health mask: caller's mask + any injected shard kill."""
+        if shard_health is None:
+            health = np.ones(n_cluster_shards, np.bool_)
+        else:
+            health = np.array(shard_health, np.bool_).reshape(-1).copy()
+            if health.shape[0] != n_cluster_shards:
+                raise ValueError(
+                    f"shard_health has {health.shape[0]} entries, expected "
+                    f"{n_cluster_shards} cluster shards"
+                )
+        spec = faults.fire(faults.SHARD_SEARCH)
+        if spec is not None and spec.mode == "kill_shard":
+            payload = spec.payload or {}
+            dead = payload.get("shards")
+            if dead is None:
+                dead = [payload.get("shard", 0)]
+            for s in dead:
+                health[int(s) % n_cluster_shards] = False
+        return health
+
+    def body(
+        local_params: LiderParams, q_loc: jnp.ndarray, shard_health: jnp.ndarray
+    ):
         my, b_loc, p, sel, sel_valid, sel_b, sel_cid_local, dropped = _dispatch(
             local_params, q_loc
         )
@@ -234,6 +268,13 @@ def make_sharded_search(
             ids_buf[:-1].reshape(b_loc, -1), sc_buf[:-1].reshape(b_loc, -1), k
         )
 
+        # Degraded mode: a dead shard contributes nothing to the merge (and
+        # its capacity drops don't count — that work was never owed).
+        alive = shard_health[my]
+        l_ids = jnp.where(alive, l_ids, -1)
+        l_sc = jnp.where(alive, l_sc, -jnp.inf)
+        dropped = jnp.where(alive, dropped, 0)
+
         # The one hot-path collective: merge (B_loc, k) across cluster shards.
         g_ids = jax.lax.all_gather(l_ids, caxes)  # (S, B_loc, k)
         g_sc = jax.lax.all_gather(l_sc, caxes)
@@ -245,7 +286,9 @@ def make_sharded_search(
         dropped = jax.lax.psum(dropped, caxes + qaxes if qaxes else caxes)
         return ids, sc, dropped
 
-    def body_provisional(local_params: LiderParams, q_loc: jnp.ndarray):
+    def body_provisional(
+        local_params: LiderParams, q_loc: jnp.ndarray, shard_health: jnp.ndarray
+    ):
         """Host-tier device phase: compressed pass + provisional merge.
 
         Identical dataflow to ``body`` but stops at the provisional
@@ -290,6 +333,11 @@ def make_sharded_search(
             rows_buf[:-1].reshape(b_loc, -1), sc_buf[:-1].reshape(b_loc, -1), kp
         )
 
+        alive = shard_health[my]
+        l_rows = jnp.where(alive, l_rows, -1)
+        l_sc = jnp.where(alive, l_sc, -jnp.inf)
+        dropped = jnp.where(alive, dropped, 0)
+
         g_rows = jax.lax.all_gather(l_rows, caxes)  # (S, B_loc, k')
         g_sc = jax.lax.all_gather(l_sc, caxes)
         rows, sc = dedup_topk(
@@ -301,25 +349,43 @@ def make_sharded_search(
         return rows, sc, dropped
 
     qspec = P(qaxes, None) if qaxes else P(None, None)
+    # shard_health is a small replicated (S,) bool vector — a *traced*
+    # input, so flipping shard liveness reuses the compiled program.
     sharded = compat.shard_map(
         body_provisional if host_tier else body,
         mesh=mesh,
-        in_specs=(param_specs, qspec),
+        in_specs=(param_specs, qspec, P()),
         out_specs=(qspec, qspec, P()),
     )
+    run = jax.jit(sharded)
+
+    def _note_health(fn, health: np.ndarray) -> None:
+        fn.shard_stats = {
+            "shards_live": int(health.sum()),
+            "shards_total": n_cluster_shards,
+        }
 
     if not host_tier:
-        @jax.jit
-        def search(params: LiderParams, queries: jnp.ndarray):
-            ids, sc, dropped = sharded(params, queries)
+
+        def search(params: LiderParams, queries: jnp.ndarray, shard_health=None):
+            health = _resolve_health(shard_health)
+            _note_health(search, health)
+            ids, sc, dropped = run(params, queries, jnp.asarray(health))
             return TopK(ids=ids, scores=sc), dropped
 
         return search
 
-    stage1 = jax.jit(sharded)
+    def stage1(params: LiderParams, queries: jnp.ndarray, shard_health=None):
+        # Plain wrapper (not the raw jit) so the dry-run can lower it with
+        # the legacy two-argument signature — the default all-live mask
+        # folds to a constant.
+        health = _resolve_health(shard_health)
+        _note_health(stage1, health)
+        return run(params, queries, jnp.asarray(health))
 
-    def search(params: LiderParams, queries: jnp.ndarray):
-        rows, _, dropped = stage1(params, queries)
+    def search(params: LiderParams, queries: jnp.ndarray, shard_health=None):
+        rows, _, dropped = stage1(params, queries, shard_health)
+        search.shard_stats = dict(stage1.shard_stats)
         rows_np = np.asarray(rows)
         store = params.bank.store
         fetched = store.fetch(rows_np)  # host np.take on the local shard

@@ -627,12 +627,15 @@ def host_first_pass(
     prune_margin: float | None = None,
     rescore_factor: int = 4,
     block_c: int | None = None,
-) -> tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[TopK, jnp.ndarray]:
     """Jit'd stage 1+2a of the tiered search: route + prune + compressed
-    first pass. Returns ``(prov_rows (B, k'), pruned_mask (B, n_probe))``;
-    the host fetch and the rescore jit complete the query
-    (:func:`search_lider`, or pipelined across batches by the serving
-    engine)."""
+    first pass. Returns ``(prov, pruned_mask (B, n_probe))`` where ``prov``
+    is the provisional top-k' as ``TopK(ids=flat bank rows (B, k'),
+    scores=compressed-domain scores)``; the host fetch and the rescore jit
+    complete the query (:func:`search_lider`, or pipelined across batches by
+    the serving engine). The provisional scores ride along so a degraded
+    engine can answer compressed-only (:func:`compressed_only_topk`) when
+    the host fetch is unavailable."""
     routed = route_queries(
         params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused,
         block_c=block_c,
@@ -643,7 +646,7 @@ def host_first_pass(
         rescore_factor=rescore_factor, block_c=block_c,
     )
     pruned = (routed.ids >= 0) & (cids < 0)
-    return prov.ids, pruned
+    return prov, pruned
 
 
 def host_fetch(params: LiderParams, prov_rows) -> np.ndarray:
@@ -674,6 +677,23 @@ def host_rescore(
     rows, scores = rescore_fetched_rows(
         fetched, prov_rows, queries, k=k, use_fused=use_fused, block_c=block_c
     )
+    ids = jnp.where(rows >= 0, gids.reshape(-1)[jnp.maximum(rows, 0)], -1)
+    return TopK(ids=ids, scores=scores)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def compressed_only_topk(
+    gids: jnp.ndarray, prov: TopK, *, k: int
+) -> TopK:
+    """Degraded-mode answer from stage 1 alone: no fetch, no exact rescore.
+
+    The provisional top-k' from :func:`host_first_pass` is already sorted
+    descending by compressed-domain score and deduped by flat bank row, so
+    the compressed-only answer is its first ``k`` entries mapped through the
+    bank's (c, Lp) gid table. Quality is the int8 first pass's — the
+    degradation ladder's last rung (DESIGN.md §Failure model)."""
+    rows = prov.ids[..., :k]
+    scores = prov.scores[..., :k]
     ids = jnp.where(rows >= 0, gids.reshape(-1)[jnp.maximum(rows, 0)], -1)
     return TopK(ids=ids, scores=scores)
 
@@ -721,9 +741,9 @@ def search_lider(
             prune_margin=prune_margin, rescore_factor=rescore_factor,
             block_c=block_c,
         )
-        fetched = host_fetch(params, prov)
+        fetched = host_fetch(params, prov.ids)
         out = host_rescore(
-            params.bank.gids, jnp.asarray(fetched), prov, queries, k=k,
+            params.bank.gids, jnp.asarray(fetched), prov.ids, queries, k=k,
             use_fused=use_fused, block_c=block_c,
         )
         return (out, pruned) if with_stats else out

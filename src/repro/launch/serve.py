@@ -23,12 +23,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from .. import faults
 from ..core import lider as lider_lib
 from ..core import update as update_lib
 from ..core.baselines import build_ivfpq, build_mplsh, build_pq, build_sklsh, flat_search
 from ..core.utils import recall_at_k
 from ..data import synthetic
-from ..serving import RetrievalEngine, make_backend
+from ..serving import DegradePolicy, RetrievalEngine, make_backend
 from ..training import checkpoint
 
 
@@ -112,6 +113,18 @@ def main() -> None:
         "--stats-json", default=None, metavar="PATH",
         help="write engine stats + recall + per-tier index bytes as JSON "
         "(what the CI serve smoke job uploads)",
+    )
+    ap.add_argument(
+        "--fault-plan", default=None, metavar="JSON",
+        help="chaos testing: a faults.FaultPlan JSON file (or inline JSON "
+        "object) injected into drain/apply_updates — the engine retries, "
+        "degrades, or rolls back instead of failing (DESIGN.md §Failure "
+        "model)",
+    )
+    ap.add_argument(
+        "--deadline-s", type=float, default=None,
+        help="per-request answer deadline driving the engine's degradation "
+        "controller and deadline-miss accounting",
     )
     args = ap.parse_args()
     use_fused = {"auto": None, "on": True, "off": False}[args.use_fused]
@@ -234,16 +247,26 @@ def main() -> None:
         "ivfpq": dict(n_probe=args.n_probe),
         "mplsh": dict(n_probe=args.n_probe),
     }.get(args.backend, {})
+    fault_plan = None
+    if args.fault_plan:
+        fault_plan = faults.FaultPlan.from_json(args.fault_plan)
+        print(
+            f"[serve] fault plan active: {len(fault_plan.specs)} spec(s), "
+            f"seed={fault_plan.seed}"
+        )
+    policy = DegradePolicy(deadline_s=args.deadline_s)
     if args.backend == "lider":
         search = make_backend("lider", None, updatable=True, **backend_kw)
         engine = RetrievalEngine(
             search, batch_size=args.batch_size, k=args.k,
-            dim=embs.shape[1], params=index,
+            dim=embs.shape[1], params=index, policy=policy,
+            fault_plan=fault_plan,
         )
     else:
         search = make_backend(args.backend, index, embs, **backend_kw)
         engine = RetrievalEngine(
-            search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1]
+            search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1],
+            policy=policy, fault_plan=fault_plan,
         )
     engine.warmup()
 
@@ -267,15 +290,25 @@ def main() -> None:
         half = len(qs) // 2
         serve_chunk(qs[:half])
         t0 = time.time()
-        grew = engine.apply_updates(
-            lambda p: update_lib.upsert(p, held_embs)
-        )
+        try:
+            grew = engine.apply_updates(
+                lambda p: update_lib.upsert(p, held_embs)
+            )
+        except faults.InjectedFault as e:
+            # Transactional apply_updates already rolled the host tier
+            # back; keep serving the pre-update generation, then retry the
+            # upsert once (the fault schedule has moved on).
+            print(f"[serve] update failed ({e}); rolled back, retrying")
+            grew = engine.apply_updates(
+                lambda p: update_lib.upsert(p, held_embs)
+            )
         dt = time.time() - t0
         print(
             f"[serve] upserted {n_held} passages in {dt:.3f}s "
             f"({n_held / max(dt, 1e-9):.0f}/s), generation="
             f"{engine.generation}, capacity_grew={grew} "
-            f"(recompiles={engine.recompiles})"
+            f"(recompiles={engine.recompiles}, "
+            f"rollbacks={engine.stats.n_update_rollbacks})"
         )
         serve_chunk(qs[half:])
     else:
@@ -344,6 +377,16 @@ def main() -> None:
             "recall_at_k": float(rec),
             "k": args.k,
             "tier_bytes": tier_bytes,
+            # Fault-tolerance accounting (DESIGN.md §Failure model).
+            "n_update_rollbacks": s.n_update_rollbacks,
+            "n_fetch_retries": s.n_fetch_retries,
+            "n_fetch_failures": s.n_fetch_failures,
+            "n_degraded": s.n_degraded,
+            "n_shed": s.n_shed,
+            "n_deadline_misses": s.n_deadline_misses,
+            "n_faults_fired": (
+                fault_plan.n_fired if fault_plan is not None else 0
+            ),
         }
         with open(args.stats_json, "w") as f:
             json.dump(record, f, indent=1)

@@ -1,3 +1,17 @@
-from .engine import RetrievalEngine, make_backend
+from .engine import (
+    EVICTED,
+    DegradePolicy,
+    QueryResult,
+    RetrievalEngine,
+    Shed,
+    make_backend,
+)
 
-__all__ = ["RetrievalEngine", "make_backend"]
+__all__ = [
+    "EVICTED",
+    "DegradePolicy",
+    "QueryResult",
+    "RetrievalEngine",
+    "Shed",
+    "make_backend",
+]

@@ -14,13 +14,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import random
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import faults
 from ..core import lider as lider_lib
 from ..core.baselines import (
     flat_search,
@@ -56,6 +58,15 @@ class EngineStats:
     host_fetch_us: float = 0.0
     n_host_fetches: int = 0
     n_overlapped_fetches: int = 0
+    # Fault tolerance (DESIGN.md §Failure model): update transactions,
+    # host-fetch retry/degrade, admission control, deadline accounting.
+    n_update_rollbacks: int = 0  # failed apply_updates rolled back
+    n_fetch_retries: int = 0  # host fetches retried after a failure
+    n_fetch_failures: int = 0  # batches whose fetch exhausted all retries
+    n_degraded: int = 0  # queries answered compressed-only (degraded=True)
+    n_shed: int = 0  # requests rejected by queue-cap admission control
+    n_deadline_misses: int = 0  # answered, but past the per-request deadline
+    n_rung_steps: int = 0  # degradation-ladder step-downs
 
     @property
     def aqt(self) -> float:
@@ -75,6 +86,97 @@ class EngineStats:
     def pruned_probe_fraction(self) -> float:
         """Fraction of routed probes the margin rule pruned (all batches)."""
         return self.n_probes_pruned / max(self.n_probes_total, 1)
+
+
+class QueryResult:
+    """One answered request. Unpacks like the legacy ``(ids, scores)`` pair
+    (``ids, scores = engine.result(rid)`` / ``engine.result(rid)[0]``) and
+    additionally carries the fault-tolerance metadata: ``degraded`` is True
+    when the answer came from the compressed-only fallback (no exact
+    rescore), ``rung`` is the degradation-ladder rung it was served at
+    (0 = nominal), ``latency_s`` is submit-to-answer wall time."""
+
+    __slots__ = ("ids", "scores", "degraded", "rung", "latency_s")
+
+    def __init__(self, ids, scores, *, degraded=False, rung=0, latency_s=0.0):
+        self.ids = ids
+        self.scores = scores
+        self.degraded = degraded
+        self.rung = rung
+        self.latency_s = latency_s
+
+    def __iter__(self):
+        return iter((self.ids, self.scores))
+
+    def __getitem__(self, i):
+        return (self.ids, self.scores)[i]
+
+    def __len__(self):
+        return 2
+
+    def __repr__(self):
+        tag = f", degraded rung={self.rung}" if self.degraded else ""
+        return f"QueryResult(k={len(np.asarray(self.ids))}{tag})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Shed:
+    """Structured rejection: queue-cap admission control refused the
+    request instead of growing the queue without bound. Returned by
+    ``result(rid)`` for shed rids."""
+
+    rid: int
+    reason: str = "queue_full"
+
+
+class _EvictedType:
+    """Singleton sentinel: the answer existed but was evicted by the
+    bounded results map. Falsy, so ``if engine.result(rid):`` treats it
+    like a missing answer, while ``is EVICTED`` distinguishes it from a
+    never-submitted/already-collected rid (``None``)."""
+
+    def __repr__(self):
+        return "EVICTED"
+
+    def __bool__(self):
+        return False
+
+
+EVICTED = _EvictedType()
+
+
+# Operating-point knobs a degradation-ladder rung may override (the PR-3
+# control-plane axes; anything else in a rung dict — e.g. the modeled
+# ``expected_recall`` floor — is bench/report metadata the engine ignores).
+_POINT_KEYS = frozenset(
+    {"n_probe", "r0", "prune_margin", "refine", "rescore_factor", "block_c"}
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """Fault-tolerance policy for :class:`RetrievalEngine`.
+
+    ``ladder`` is a sequence of operating-point override dicts (cheapest
+    last), typically from ``tuning.pareto.degradation_ladder``; under
+    deadline pressure or repeated host-fetch failure the engine steps down
+    one rung at a time, and past the last rung (or when a batch's fetch
+    exhausts its retries) answers compressed-only with ``degraded=True``.
+    ``deadline_s`` is the per-request answer deadline driving both the
+    rung controller (queue age thresholds as fractions of the deadline)
+    and ``n_deadline_misses``. ``max_queue`` enables admission control
+    (:class:`Shed`). Backoff jitter is seeded — replays deterministically.
+    """
+
+    ladder: tuple = ()
+    deadline_s: Optional[float] = None
+    degrade_age_fraction: float = 0.5
+    recover_age_fraction: float = 0.25
+    fetch_retries: int = 2
+    fetch_backoff_s: float = 0.002
+    fetch_backoff_mult: float = 2.0
+    max_queue: Optional[int] = None
+    seed: int = 0
 
 
 # Searchable knobs each backend accepts; anything else in **kw is a typo and
@@ -123,25 +225,38 @@ def make_backend(
         raise ValueError(f"updatable backends require kind='lider', got {kind!r}")
 
     if kind == "lider":
-        prune_margin = kw.get("prune_margin")
 
-        def lider_search(params, q, k):
+        def _effective(point):
+            # A degradation-ladder rung overrides the base operating point
+            # (n_probe / prune_margin / rescore_factor / ...); the nominal
+            # path (point=None) is byte-for-byte the base kwargs.
+            if not point:
+                return kw
+            eff = dict(kw)
+            eff.update(point)
+            return eff
+
+        def lider_search(params, q, k, point=None):
             # With pruning on, the search also returns the (B, P) bool mask
             # of routed-but-pruned probes; the engine folds it into
             # EngineStats (per-batch pruned-probe fraction).
+            eff = _effective(point)
+            margin = eff.get("prune_margin")
             return lider_lib.search_lider(
                 params,
                 q,
                 k=k,
-                n_probe=kw.get("n_probe", 20),
-                r0=kw.get("r0", 4),
-                refine=kw.get("refine", False),
-                use_fused=kw.get("use_fused"),
-                prune_margin=prune_margin,
-                with_stats=prune_margin is not None,
-                rescore_factor=kw.get("rescore_factor", 4),
-                block_c=kw.get("block_c"),
+                n_probe=eff.get("n_probe", 20),
+                r0=eff.get("r0", 4),
+                refine=eff.get("refine", False),
+                use_fused=eff.get("use_fused"),
+                prune_margin=margin,
+                with_stats=margin is not None,
+                rescore_factor=eff.get("rescore_factor", 4),
+                block_c=eff.get("block_c"),
             )
+
+        lider_search.accepts_point = True
 
         if updatable:
             # Staged spelling of the same operating point, for host-tier
@@ -149,22 +264,24 @@ def make_backend(
             # batch i+1 over batch i's host fetch + rescore (DESIGN.md
             # §Tiered embedding store). search_lider composes the identical
             # stages serially, so results match the unpipelined call.
-            def host_stage1(params, q, k):
+            def host_stage1(params, q, k, point=None):
+                eff = _effective(point)
+                margin = eff.get("prune_margin")
                 prov, pruned = lider_lib.host_first_pass(
                     params,
                     q,
                     k=k,
-                    n_probe=kw.get("n_probe", 20),
-                    r0=kw.get("r0", 4),
-                    refine=kw.get("refine", False),
-                    use_fused=kw.get("use_fused"),
-                    prune_margin=prune_margin,
-                    rescore_factor=kw.get("rescore_factor", 4),
-                    block_c=kw.get("block_c"),
+                    n_probe=eff.get("n_probe", 20),
+                    r0=eff.get("r0", 4),
+                    refine=eff.get("refine", False),
+                    use_fused=eff.get("use_fused"),
+                    prune_margin=margin,
+                    rescore_factor=eff.get("rescore_factor", 4),
+                    block_c=eff.get("block_c"),
                 )
                 # Same contract as the serial path: probe stats only when
                 # the margin rule is actually configured.
-                return prov, (pruned if prune_margin is not None else None)
+                return prov, (pruned if margin is not None else None)
 
             def host_stage2(params, fetched, prov_rows, q, k):
                 return lider_lib.host_rescore(
@@ -182,8 +299,10 @@ def make_backend(
             lider_search.host_stage2 = host_stage2
             return lider_search
 
-        def search(q, k):
-            return lider_search(index, q, k)
+        def search(q, k, point=None):
+            return lider_search(index, q, k, point=point)
+
+        search.accepts_point = True
     elif kind == "flat":
         def search(q, k):
             return flat_search(embs, q, k=k)
@@ -221,12 +340,21 @@ class RetrievalEngine:
         dim: int,
         params=None,
         max_results: int = 65536,
+        policy: DegradePolicy | None = None,
+        fault_plan=None,
     ):
         self.search_fn = search_fn
         self.batch_size = batch_size
         self.k = k
         self.dim = dim
         self.params = params
+        # Fault tolerance (DESIGN.md §Failure model): ``policy`` drives
+        # retry/degrade/shed behavior; ``fault_plan`` (a faults.FaultPlan)
+        # is activated around drain/apply_updates for chaos testing.
+        self.policy = policy if policy is not None else DegradePolicy()
+        self.fault_plan = fault_plan
+        self.rung = 0  # current degradation-ladder rung (0 = nominal)
+        self._rng = random.Random(self.policy.seed)  # backoff jitter
         self.generation = 0  # bumped on every apply_updates
         # The tier split (DESIGN.md §Tiered embedding store): device-tier
         # state (pytree leaves) and host-tier state (the EmbStore content)
@@ -246,18 +374,42 @@ class RetrievalEngine:
                 f"({batch_size})"
             )
         self.max_results = max_results
-        self.results: collections.OrderedDict[
-            int, tuple[np.ndarray, np.ndarray]
-        ] = collections.OrderedDict()
+        self.results: collections.OrderedDict[int, object] = (
+            collections.OrderedDict()
+        )
+        # Rids whose answers were computed but evicted by the bound above —
+        # itself bounded, oldest-first, so the eviction metadata cannot
+        # become the leak the bound prevents.
+        self._evicted: collections.OrderedDict[int, None] = (
+            collections.OrderedDict()
+        )
         self.stats = EngineStats()
         self._next_id = 0
         # Preallocated padded batch buffer: drain fills it in place instead
         # of allocating (batch, dim) floats per batch.
         self._batch_buf = np.zeros((batch_size, dim), np.float32)
 
+    @property
+    def _accepts_point(self) -> bool:
+        return getattr(self.search_fn, "accepts_point", False)
+
+    def _rung_point(self) -> dict | None:
+        """Operating-point override for the current ladder rung (None at
+        rung 0 — the nominal path takes zero extra kwargs)."""
+        ladder = self.policy.ladder
+        if self.rung <= 0 or not ladder or not self._accepts_point:
+            return None
+        raw = ladder[min(self.rung, len(ladder)) - 1]
+        return {k: v for k, v in raw.items() if k in _POINT_KEYS}
+
     def _search(self, q: jnp.ndarray):
+        point = self._rung_point()
         if self.params is not None:
+            if point is not None:
+                return self.search_fn(self.params, q, self.k, point=point)
             return self.search_fn(self.params, q, self.k)
+        if point is not None:
+            return self.search_fn(q, self.k, point=point)
         return self.search_fn(q, self.k)
 
     @staticmethod
@@ -267,24 +419,55 @@ class RetrievalEngine:
             return out[0], out[1]
         return out, None
 
-    def warmup(self):
+    def warmup(self, *, warm_ladder: bool = True):
         q = jnp.zeros((self.batch_size, self.dim), jnp.float32)
         out, _ = self._split_out(self._search(q))
         jax.block_until_ready(out.ids)
+        # Pre-compile every ladder rung too: a rung step must never eat a
+        # re-trace on the query path (the ladder is bounded, so this is a
+        # bounded number of compiles).
+        if warm_ladder and self.policy.ladder and self._accepts_point:
+            saved = self.rung
+            try:
+                for r in range(1, len(self.policy.ladder) + 1):
+                    self.rung = r
+                    out, _ = self._split_out(self._search(q))
+                    jax.block_until_ready(out.ids)
+            finally:
+                self.rung = saved
 
     def submit(self, query: np.ndarray) -> int:
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, np.asarray(query, np.float32)))
+        if (
+            self.policy.max_queue is not None
+            and len(self.queue) >= self.policy.max_queue
+        ):
+            # Admission control: refuse now with a structured answer rather
+            # than queueing work we cannot serve within the deadline.
+            self.stats.n_shed += 1
+            self._put_result(rid, Shed(rid=rid))
+            return rid
+        self.queue.append(
+            (rid, np.asarray(query, np.float32), time.perf_counter())
+        )
         return rid
 
     def apply_updates(self, update_fn: Callable) -> bool:
-        """Swap served params to ``update_fn(params)`` between batches.
+        """Transactionally swap served params to ``update_fn(params)``
+        between batches.
 
         ``update_fn`` returns either new params or ``(new_params, stats)``
-        (the ``core.update`` convention). Returns True when leaf shapes
-        changed (capacity growth) — the one case the compiled search must
-        re-trace; the engine eats that recompile here, off the query path.
+        (the ``core.update`` convention). Device-tier state is functional
+        (new leaves), but lifecycle ops mutate the host ``EmbStore`` IN
+        PLACE — so the store is wrapped in a transaction: if ``update_fn``
+        raises, every in-place host write is rolled back (bit-identical
+        table, gids, and ``version``) and the engine keeps serving the old
+        generation; the exception then propagates to the updater. Commit
+        happens atomically with the params swap, between batches. Returns
+        True when leaf shapes changed (capacity growth) — the one case the
+        compiled search must re-trace; the engine eats that recompile here,
+        off the query path.
         """
         if self.params is None:
             raise ValueError(
@@ -297,7 +480,28 @@ class RetrievalEngine:
         # the store in place, so the object identity alone can't tell us
         # whether its content changed.
         old_hver = None if old_store is None else old_store.version
-        out = update_fn(self.params)
+        # Transaction covers the concrete host table only: device leaves
+        # are functional and growth is copy-on-grow (a failed grown update
+        # is rolled back simply by not swapping params).
+        txn_store = (
+            old_store
+            if old_store is not None
+            and old_store.tier == "host"
+            and old_store.rescore is not None
+            else None
+        )
+        if txn_store is not None:
+            txn_store.begin_txn()
+        try:
+            with faults.activate(self.fault_plan):
+                out = update_fn(self.params)
+        except Exception:
+            if txn_store is not None:
+                txn_store.rollback()
+            self.stats.n_update_rollbacks += 1
+            raise
+        if txn_store is not None:
+            txn_store.commit()
         new_params = out[0] if isinstance(out, tuple) else out
         new_leaves = jax.tree_util.tree_leaves(new_params)
         grew = [jnp.shape(l) for l in old_leaves] != [
@@ -336,20 +540,33 @@ class RetrievalEngine:
         n = min(len(self.queue), self.batch_size)
         chunk = [self.queue.popleft() for _ in range(n)]
         q = self._batch_buf
-        for i, (_, vec) in enumerate(chunk):
+        for i, (_, vec, _) in enumerate(chunk):
             q[i] = vec
         if n < self.batch_size:  # zero stale rows from the last batch
             q[n:] = 0.0
         return chunk, n, jnp.array(q)  # jnp.array copies; asarray may alias
 
-    def _record_batch(self, chunk, n, out, pruned) -> None:
+    def _put_result(self, rid: int, value) -> None:
+        """Insert one answer, enforcing the results-map bound."""
+        self.results[rid] = value
+        while len(self.results) > self.max_results:
+            old_rid, _ = self.results.popitem(last=False)  # evict oldest
+            self.stats.n_results_evicted += 1
+            self._evicted[old_rid] = None
+            while len(self._evicted) > self.max_results:
+                self._evicted.popitem(last=False)
+
+    def _record_batch(self, chunk, n, out, pruned, *, degraded=False) -> None:
         """Account one completed batch and route its answers (outside the
         AQT window — this includes the result D2H conversion)."""
+        faults.fire(faults.D2H)  # "delay" here models a slow __array__
         ids = np.asarray(out.ids)
         scores = np.asarray(out.scores)
         self.stats.n_queries += n
         self.stats.n_batches += 1
         self.stats.n_padded += self.batch_size - n
+        if degraded:
+            self.stats.n_degraded += n
         if pruned is not None:
             # Count only the n real queries — padded rows route too, but
             # their probes are not served traffic.
@@ -359,11 +576,22 @@ class RetrievalEngine:
             self.stats.batch_pruned_fraction.append(
                 float(pmask.sum()) / max(pmask.size, 1)
             )
-        for i, (rid, _) in enumerate(chunk):
-            self.results[rid] = (ids[i], scores[i])
-        while len(self.results) > self.max_results:
-            self.results.popitem(last=False)  # evict oldest un-collected
-            self.stats.n_results_evicted += 1
+        now = time.perf_counter()
+        deadline = self.policy.deadline_s
+        for i, (rid, _, t_submit) in enumerate(chunk):
+            latency = now - t_submit
+            if deadline is not None and latency > deadline:
+                self.stats.n_deadline_misses += 1
+            self._put_result(
+                rid,
+                QueryResult(
+                    ids[i],
+                    scores[i],
+                    degraded=degraded,
+                    rung=self.rung,
+                    latency_s=latency,
+                ),
+            )
 
     def _staged_host_serving(self) -> bool:
         """Host-tier LIDER params + a backend exposing the staged search."""
@@ -376,26 +604,52 @@ class RetrievalEngine:
             == "host"
         )
 
+    def _adjust_rung(self) -> None:
+        """Deadline-pressure rung controller, called once per batch.
+
+        Steps down (cheaper operating point) when the oldest queued request
+        has aged past ``degrade_age_fraction`` of the deadline; steps back
+        up when pressure subsides below ``recover_age_fraction``. Bounded
+        by the ladder length; every rung was pre-compiled in warmup."""
+        pol = self.policy
+        if not pol.ladder or pol.deadline_s is None or not self._accepts_point:
+            return
+        if not self.queue:
+            if self.rung > 0:
+                self.rung -= 1
+            return
+        age = time.perf_counter() - self.queue[0][2]
+        if age >= pol.deadline_s * pol.degrade_age_fraction:
+            if self.rung < len(pol.ladder):
+                self.rung += 1
+                self.stats.n_rung_steps += 1
+        elif age <= pol.deadline_s * pol.recover_age_fraction and self.rung > 0:
+            self.rung -= 1
+
     def drain(self) -> None:
         """Execute queued requests in fixed-size (padded) batches.
 
         Host-tier LIDER indexes (``rescore_tier="host"``) drain through the
         double-buffered fetch->rescore pipeline (:meth:`_drain_pipelined`);
-        everything else executes serially.
+        everything else executes serially. The engine's fault plan (chaos
+        testing) is active for the duration of the drain.
         """
-        if self._staged_host_serving():
-            return self._drain_pipelined()
-        while self.queue:
-            chunk, n, q = self._next_batch()
-            t0 = time.perf_counter()
-            out, pruned = self._split_out(self._search(q))
-            # Block on BOTH outputs so AQT covers all device time — blocking
-            # on ids alone under-counts when scores finish later. The AQT
-            # window closes HERE: D2H conversion (np.asarray) is host-side
-            # transfer the paper's efficiency metric must not include.
-            jax.block_until_ready((out.ids, out.scores))
-            self.stats.total_time_s += time.perf_counter() - t0
-            self._record_batch(chunk, n, out, pruned)
+        with faults.activate(self.fault_plan):
+            if self._staged_host_serving():
+                return self._drain_pipelined()
+            while self.queue:
+                self._adjust_rung()
+                chunk, n, q = self._next_batch()
+                t0 = time.perf_counter()
+                out, pruned = self._split_out(self._search(q))
+                # Block on BOTH outputs so AQT covers all device time —
+                # blocking on ids alone under-counts when scores finish
+                # later. The AQT window closes HERE: D2H conversion
+                # (np.asarray) is host-side transfer the paper's efficiency
+                # metric must not include.
+                jax.block_until_ready((out.ids, out.scores))
+                self.stats.total_time_s += time.perf_counter() - t0
+                self._record_batch(chunk, n, out, pruned)
 
     def _drain_pipelined(self) -> None:
         """Double-buffered host-tier drain (§Tiered embedding store).
@@ -415,11 +669,13 @@ class RetrievalEngine:
         while self.queue or pending is not None:
             nxt = None
             if self.queue:
+                self._adjust_rung()
                 chunk, n, q = self._next_batch()
                 # Async dispatch: returns before the device finishes, so the
                 # pending batch's host fetch below overlaps this compute.
+                point = self._rung_point()
                 prov, pruned = self.search_fn.host_stage1(
-                    self.params, q, self.k
+                    self.params, q, self.k, point=point
                 )
                 nxt = (chunk, n, q, prov, pruned)
             if pending is not None:
@@ -429,22 +685,65 @@ class RetrievalEngine:
             pending = nxt
         self.stats.total_time_s += max(time.perf_counter() - t0 - d2h_s, 0.0)
 
+    def _fetch_with_retry(self, prov_rows):
+        """Bounded-retry-with-backoff host fetch; None after exhaustion.
+
+        Backoff is exponential with deterministic (seeded) jitter so chaos
+        runs replay identically."""
+        pol = self.policy
+        for attempt in range(pol.fetch_retries + 1):
+            try:
+                tf0 = time.perf_counter()
+                fetched = self.search_fn.host_fetch(self.params, prov_rows)
+                self.stats.host_fetch_us += (
+                    time.perf_counter() - tf0
+                ) * 1e6
+                return fetched
+            except Exception:
+                if attempt >= pol.fetch_retries:
+                    self.stats.n_fetch_failures += 1
+                    return None
+                self.stats.n_fetch_retries += 1
+                delay = pol.fetch_backoff_s * (
+                    pol.fetch_backoff_mult**attempt
+                )
+                delay *= 1.0 + self._rng.random()
+                if delay > 0:
+                    time.sleep(delay)
+
     def _finish_host_batch(self, entry, *, overlapped: bool) -> float:
         """Fetch + rescore one stage1-dispatched batch; returns the result
-        D2H conversion seconds (excluded from the AQT window)."""
+        D2H conversion seconds (excluded from the AQT window).
+
+        A host fetch that fails all its retries does NOT abort the drain:
+        the batch is answered compressed-only from its provisional top-k'
+        (``degraded=True``) and the rung controller steps down one rung for
+        subsequent batches."""
         chunk, n, q, prov, pruned = entry
         # Close the device wait BEFORE the fetch timer: np.asarray(prov)
         # inside host_fetch would otherwise block on the batch's first pass
         # and charge device compute to the host-fetch stat.
         jax.block_until_ready(prov)
-        tf0 = time.perf_counter()
-        fetched = self.search_fn.host_fetch(self.params, prov)
-        self.stats.host_fetch_us += (time.perf_counter() - tf0) * 1e6
+        fetched = self._fetch_with_retry(prov.ids)
+        if fetched is None:
+            # Degraded answer: stage 1 already holds the compressed-domain
+            # top-k' — no fetch, no exact rescore (DESIGN.md §Failure
+            # model, last ladder rung).
+            if self.policy.ladder and self.rung < len(self.policy.ladder):
+                self.rung += 1
+                self.stats.n_rung_steps += 1
+            out = lider_lib.compressed_only_topk(
+                self.params.bank.gids, prov, k=self.k
+            )
+            jax.block_until_ready((out.ids, out.scores))
+            tc0 = time.perf_counter()
+            self._record_batch(chunk, n, out, pruned, degraded=True)
+            return time.perf_counter() - tc0
         self.stats.n_host_fetches += 1
         if overlapped:
             self.stats.n_overlapped_fetches += 1
         out = self.search_fn.host_stage2(
-            self.params, jnp.asarray(fetched), prov, q, self.k
+            self.params, jnp.asarray(fetched), prov.ids, q, self.k
         )
         jax.block_until_ready((out.ids, out.scores))
         tc0 = time.perf_counter()
@@ -456,9 +755,16 @@ class RetrievalEngine:
 
         Popping on read is what keeps a long-running server's memory flat;
         ``keep=True`` leaves the entry in the map (it then stays until
-        re-read or evicted by the ``max_results`` bound). Returns None for
-        unknown/already-collected/evicted ids.
+        re-read or evicted by the ``max_results`` bound). Return values:
+        a :class:`QueryResult` (unpacks as ``(ids, scores)``), a
+        :class:`Shed` for admission-control rejections, the falsy
+        :data:`EVICTED` sentinel when the answer existed but was evicted by
+        the ``max_results`` bound, or ``None`` for never-submitted /
+        already-collected ids.
         """
-        if keep:
-            return self.results.get(rid)
-        return self.results.pop(rid, None)
+        out = self.results.get(rid) if keep else self.results.pop(rid, None)
+        if out is not None:
+            return out
+        if rid in self._evicted:
+            return EVICTED
+        return None

@@ -17,11 +17,80 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .. import faults
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint leaf failed integrity verification (CRC32 mismatch or
+    unreadable file). Names the bad leaf so operators know *what* is
+    corrupt, not just that something is."""
+
+    def __init__(self, leaf: str, path: str, reason: str = "crc32 mismatch"):
+        super().__init__(f"corrupt checkpoint leaf {leaf!r} at {path}: {reason}")
+        self.leaf = leaf
+        self.path = path
+        self.reason = reason
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _checked_load(d: str, name: str, crc: int | None) -> np.ndarray:
+    """np.load + CRC32 verification (skipped for pre-CRC checkpoints)."""
+    p = os.path.join(d, name + ".npy")
+    try:
+        arr = np.load(p)
+    except Exception as e:  # truncated / unreadable file
+        raise CheckpointCorruptError(name, p, f"unreadable: {e}") from e
+    if crc is not None and _crc(arr) != crc:
+        raise CheckpointCorruptError(name, p)
+    return arr
+
+
+# Orphan-tmp GC: a crash between tempfile.mkdtemp and os.rename leaks the
+# tmp dir forever (it is invisible to step GC and the index swap). Swept at
+# CheckpointManager construction and save_index entry — single-writer
+# discipline assumed, same as the atomic-rename scheme itself.
+_TMP_PREFIXES = (".tmp_ckpt_", ".tmp_index_")
+
+
+def sweep_orphan_tmp(directory: str) -> int:
+    """Remove leaked ``.tmp_ckpt_*`` / ``.tmp_index_*`` dirs; returns the
+    number removed."""
+    if not os.path.isdir(directory):
+        return 0
+    removed = 0
+    for name in os.listdir(directory):
+        if name.startswith(_TMP_PREFIXES):
+            p = os.path.join(directory, name)
+            if os.path.isdir(p):
+                shutil.rmtree(p, ignore_errors=True)
+                removed += 1
+    return removed
+
+
+def _apply_write_fault(tmp: str, leaf_names: list[str]):
+    """Checkpoint-write fault hook: ``truncate``/``torn_write`` corrupts one
+    leaf file in the tmp dir (payload ``{"leaf": name}``, default the last
+    leaf written) *before* the atomic rename — modelling a torn write that
+    survives the rename. Returns the spec for site-specific handling."""
+    spec = faults.fire(faults.CHECKPOINT_WRITE)
+    if spec is not None and spec.mode in ("truncate", "torn_write"):
+        payload = spec.payload or {}
+        leaf = payload.get("leaf") or leaf_names[-1]
+        p = os.path.join(tmp, leaf + ".npy")
+        size = os.path.getsize(p)
+        with open(p, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    return spec
 
 
 def _leaf_name(path) -> str:
@@ -50,10 +119,18 @@ def save(directory: str, step: int, tree: Any) -> str:
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, name + ".npy"), arr)
         manifest["leaves"].append(
-            {"name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                # Per-leaf integrity: verified on restore, so a torn write
+                # is detected by leaf name instead of served silently.
+                "crc32": _crc(arr),
+            }
         )
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    _apply_write_fault(tmp, [m["name"] for m in manifest["leaves"]])
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -73,7 +150,11 @@ def latest_step(directory: str) -> int | None:
 
 def restore(directory: str, step: int, like: Any, shardings: Any | None = None) -> Any:
     """Load ``step`` into the structure of ``like``; optionally device_put
-    each leaf with the matching sharding (elastic restore onto a new mesh)."""
+    each leaf with the matching sharding (elastic restore onto a new mesh).
+
+    Every leaf is CRC32-verified against the manifest (checkpoints written
+    before CRCs existed skip the check); a mismatch raises
+    :class:`CheckpointCorruptError` naming the bad leaf."""
     d = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
@@ -87,7 +168,7 @@ def restore(directory: str, step: int, like: Any, shardings: Any | None = None) 
     )
     out = []
     for i, meta in enumerate(manifest["leaves"]):
-        arr = np.load(os.path.join(d, meta["name"] + ".npy"))
+        arr = _checked_load(d, meta["name"], meta.get("crc32"))
         if shard_leaves is not None:
             out.append(jax.device_put(arr, shard_leaves[i]))
         else:
@@ -116,25 +197,31 @@ def save_index(directory: str, params: Any) -> str:
     An existing index is renamed aside (``index.old``) before the new one is
     renamed in, so no crash window ever leaves zero copies on disk — a kill
     mid-save leaves either the old index in place or, at worst, the finished
-    new index plus a recoverable ``index.old``.
+    new index plus a recoverable ``index.old`` (``load_index`` falls back to
+    it automatically when the new index fails verification).
     """
     os.makedirs(directory, exist_ok=True)
+    sweep_orphan_tmp(directory)
     final = os.path.join(directory, _INDEX_DIRNAME)
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_index_")
+    crcs: dict[str, int] = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, _leaf_name(path) + ".npy"), arr)
+        name = _leaf_name(path)
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        crcs[name] = _crc(arr)
     rescore_tier = getattr(params.bank, "rescore_tier", "device")
     if rescore_tier == "host":
         # The host tier lives outside the pytree (DESIGN.md §Tiered
         # embedding store) — persist it under the SAME leaf name a
         # device-tier index uses, so checkpoints are tier-portable: a
         # device-tier save loads as host-tier and vice versa.
-        np.save(
-            os.path.join(tmp, "bank__rescore_embs.npy"),
-            params.bank.store._concrete(),
-        )
+        host_rows = params.bank.store._concrete()
+        np.save(os.path.join(tmp, "bank__rescore_embs.npy"), host_rows)
+        crcs["bank__rescore_embs"] = _crc(host_rows)
     meta = {
+        # Per-leaf CRC32s, verified by load_index.
+        "leaves": crcs,
         "format": "lider_index_v1",
         # Embedding storage dtype (DESIGN.md §Quantized bank); int8 indexes
         # additionally persist bank__emb_scales / bank__rescore_embs leaves.
@@ -155,12 +242,20 @@ def save_index(directory: str, params: Any) -> str:
     }
     with open(os.path.join(tmp, _INDEX_META), "w") as f:
         json.dump(meta, f)
+    spec = _apply_write_fault(tmp, sorted(crcs))
     old = final + ".old"
     if os.path.exists(final):
         if os.path.exists(old):
             shutil.rmtree(old)
         os.rename(final, old)
     os.rename(tmp, final)
+    if spec is not None and spec.mode == "torn_write":
+        # Simulated crash inside the swap window: the (corrupted) new index
+        # is in place and ``index.old`` survives — exactly the state
+        # load_index recovers from.
+        raise faults.InjectedFault(
+            faults.CHECKPOINT_WRITE, "torn write: crashed in index.old swap"
+        )
     if os.path.exists(old):
         shutil.rmtree(old)
     return final
@@ -173,7 +268,31 @@ def load_index(directory: str, *, rescore_tier: str | None = None) -> Any:
     "host"); default is whatever tier the index was saved from. The on-disk
     format is tier-agnostic (one ``bank__rescore_embs.npy`` either way), so
     a device-tier checkpoint loads as host-tier and vice versa.
+
+    Every leaf is CRC32-verified against the ``leaves`` map in the meta
+    file. If the index fails verification (a torn write) and a leftover
+    ``index.old`` from the swap window exists, the load recovers from it
+    automatically; otherwise :class:`CheckpointCorruptError` names the bad
+    leaf.
     """
+    d = os.path.join(directory, _INDEX_DIRNAME)
+    if not os.path.isdir(d):
+        d = directory  # accept the index dir itself
+    try:
+        return _load_index_dir(d, rescore_tier=rescore_tier)
+    except (CheckpointCorruptError, FileNotFoundError) as e:
+        old = d + ".old"
+        if not os.path.isdir(old):
+            raise
+        params = _load_index_dir(old, rescore_tier=rescore_tier)
+        # Recovery succeeded: promote the survivor back to ``index`` so the
+        # next load doesn't depend on the torn dir again.
+        shutil.rmtree(d, ignore_errors=True)
+        os.rename(old, d)
+        return params
+
+
+def _load_index_dir(d: str, *, rescore_tier: str | None = None) -> Any:
     from ..core.bank import ClusterBank, EmbStore
     from ..core.core_model import CoreModelParams
     from ..core.lider import LiderParams
@@ -181,16 +300,15 @@ def load_index(directory: str, *, rescore_tier: str | None = None) -> Any:
     from ..core.rescale import RescaleParams
     from ..core.rmi import RMIParams
 
-    d = os.path.join(directory, _INDEX_DIRNAME)
-    if not os.path.isdir(d):
-        d = directory  # accept the index dir itself
     with open(os.path.join(d, _INDEX_META)) as f:
         meta = json.load(f)
     if meta.get("format") != "lider_index_v1":
         raise ValueError(f"not a lider index checkpoint: {d}")
+    crcs = meta.get("leaves", {})  # absent on pre-CRC indexes
 
     def leaf(*path: str) -> jnp.ndarray:
-        return jnp.asarray(np.load(os.path.join(d, "__".join(path) + ".npy")))
+        name = "__".join(path)
+        return jnp.asarray(_checked_load(d, name, crcs.get(name)))
 
     def rescale_of(prefix) -> RescaleParams:
         return RescaleParams(
@@ -235,8 +353,10 @@ def load_index(directory: str, *, rescore_tier: str | None = None) -> Any:
         )
     rescore = store = None
     if quantized:
-        gids_arr = np.load(os.path.join(d, "bank__gids.npy"))
-        rescore_arr = np.load(os.path.join(d, "bank__rescore_embs.npy"))
+        gids_arr = _checked_load(d, "bank__gids", crcs.get("bank__gids"))
+        rescore_arr = _checked_load(
+            d, "bank__rescore_embs", crcs.get("bank__rescore_embs")
+        )
         if tier == "host":
             store = EmbStore("host", rescore=rescore_arr, gids=gids_arr)
         else:
@@ -262,11 +382,16 @@ def load_index(directory: str, *, rescore_tier: str | None = None) -> Any:
 
 
 class CheckpointManager:
-    """Keep-last-N manager with preemption-safe atomic saves."""
+    """Keep-last-N manager with preemption-safe atomic saves.
+
+    Construction sweeps orphaned tmp dirs (a crash between mkdtemp and
+    rename would otherwise leak them forever); ``restore_latest`` verifies
+    integrity and falls back to the newest step that passes."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
+        sweep_orphan_tmp(directory)
 
     def save(self, step: int, tree: Any) -> str:
         path = save(self.directory, step, tree)
@@ -276,11 +401,32 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         return latest_step(self.directory)
 
+    def _steps(self) -> list[int]:
+        if not os.path.isdir(self.directory):
+            return []
+        return sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_")
+            and os.path.isdir(os.path.join(self.directory, d))
+        )
+
     def restore_latest(self, like: Any, shardings: Any | None = None):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, restore(self.directory, step, like, shardings)
+        """Restore the newest *verified* step.
+
+        A step whose manifest or leaves fail verification (torn write,
+        CRC mismatch) is skipped and the next-newest is tried; if every
+        step is corrupt the newest step's error propagates."""
+        last_err = None
+        for step in reversed(self._steps()):
+            try:
+                return step, restore(self.directory, step, like, shardings)
+            except (CheckpointCorruptError, OSError, json.JSONDecodeError) as e:
+                if last_err is None:
+                    last_err = e
+        if last_err is not None:
+            raise last_err
+        return None, None
 
     def _gc(self):
         steps = sorted(

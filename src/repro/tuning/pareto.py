@@ -248,7 +248,7 @@ def sweep(
                 )
                 t0 = time.perf_counter()
                 for _ in range(repeats):
-                    lider_lib.host_fetch(params, prov)
+                    lider_lib.host_fetch(params, prov.ids)
                 host_fetch_walls[fetch_key] = (
                     time.perf_counter() - t0
                 ) / (repeats * queries.shape[0])
@@ -301,6 +301,42 @@ def select_operating_point(
     if meeting:
         return min(meeting, key=lambda r: r.aqt_s)
     return max(results, key=lambda r: (r.recall, -r.aqt_s))
+
+
+def degradation_ladder(
+    results: Sequence[SweepResult],
+    *,
+    nominal: SweepResult | None = None,
+    max_rungs: int = 3,
+) -> list[dict]:
+    """Operating-point rungs for the serving degradation ladder
+    (``serving.DegradePolicy.ladder`` — DESIGN.md §Failure model).
+
+    Walks the Pareto frontier *downward* from the nominal point: each rung
+    is strictly cheaper (lower AQT) than the last, ordered best-recall
+    first, capped at ``max_rungs``. Each rung dict carries the search-knob
+    overrides the engine applies (``n_probe`` / ``prune_margin`` /
+    ``rescore_factor`` / ...) plus the swept ``expected_recall`` — the
+    *modeled floor* chaos benchmarks gate recall-under-faults against. The
+    engine itself ignores non-knob keys.
+    """
+    front = pareto_frontier(results)
+    if nominal is None:
+        nominal = front[-1] if front else None
+    if nominal is None:
+        return []
+    cheaper = [r for r in front if r.aqt_s < nominal.aqt_s]
+    cheaper.sort(key=lambda r: -r.recall)  # step down quality gradually
+    if len(cheaper) > max_rungs:
+        # Evenly spaced picks keep the full quality range with few rungs.
+        idx = np.linspace(0, len(cheaper) - 1, max_rungs).round().astype(int)
+        cheaper = [cheaper[i] for i in dict.fromkeys(idx.tolist())]
+    rungs = []
+    for r in cheaper:
+        rung = r.point.search_kwargs()
+        rung["expected_recall"] = r.recall
+        rungs.append(rung)
+    return rungs
 
 
 def dominated_frontier_points(

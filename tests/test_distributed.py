@@ -225,3 +225,52 @@ def test_lm_train_step_runs_sharded():
         """
     )
     assert "LM_SHARD_OK" in out
+
+
+def test_sharded_search_degraded_shard_serves_partial_results():
+    """Shard-health degraded mode (DESIGN.md §Failure model): a dead shard's
+    contribution is masked before the all-gather, so the merge returns
+    partial results over the live shards — no abort, no fabricated ids, and
+    every full-search answer not owned by the dead shard survives. The
+    injected ``kill_shard`` fault drives the exact same mask."""
+    out = _run(
+        """
+        from repro import faults
+        from repro.core import lider, distributed
+        from repro.core.utils import l2_normalize
+        rng = jax.random.PRNGKey(0)
+        kc, kx, kq, kb = jax.random.split(rng, 4)
+        centers = jax.random.normal(kc, (32, 64))
+        assign = jax.random.randint(kx, (4000,), 0, 32)
+        x = l2_normalize(centers[assign] + 0.3*jax.random.normal(kq, (4000, 64)))
+        q = l2_normalize(x[:64] + 0.05*jax.random.normal(kb, (64, 64)))
+        cfg = lider.LiderConfig(n_clusters=64, n_probe=8, n_arrays=4, n_leaves=4, kmeans_iters=10)
+        params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+        sp = distributed.shard_lider_params(mesh, params, ("data",))
+        search = distributed.make_sharded_search(mesh, params, k=10, n_probe=8, r0=8, capacity_factor=3.0)
+        full, _ = search(sp, q)
+        assert search.shard_stats == {"shards_live": 4, "shards_total": 4}
+
+        health = np.array([True, False, True, True])
+        part, _ = search(sp, q, shard_health=health)
+        assert search.shard_stats == {"shards_live": 3, "shards_total": 4}
+        # Shard 1 owns clusters [16, 32): its gids must never be served...
+        dead_gids = set(np.asarray(params.bank.gids)[16:32].ravel().tolist()) - {-1}
+        fids, pids = np.asarray(full.ids), np.asarray(part.ids)
+        assert not (set(pids.ravel().tolist()) & dead_gids)
+        assert set(fids.ravel().tolist()) & dead_gids  # ...and were in the full answer
+        # ...while every live-shard answer from the full search survives the merge.
+        for f, p in zip(fids, pids):
+            assert set(f[f >= 0]) - dead_gids <= set(p[p >= 0])
+
+        # The injected kill drives the same mask -> bit-identical answers.
+        plan = faults.FaultPlan([faults.FaultSpec(
+            "shard_search", mode="kill_shard", payload={"shard": 1}, times=(0,))])
+        with faults.activate(plan):
+            killed, _ = search(sp, q)
+        assert search.shard_stats == {"shards_live": 3, "shards_total": 4}
+        assert np.array_equal(np.asarray(killed.ids), pids)
+        print("DEGRADED_OK")
+        """
+    )
+    assert "DEGRADED_OK" in out

@@ -1,0 +1,457 @@
+"""Serving fault-tolerance layer (DESIGN.md §Failure model): deterministic
+fault injection, EmbStore transactions, engine retry/degrade/shed, checkpoint
+integrity, and the restart harness."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import lider, update
+from repro.core.bank import EmbStore
+from repro.serving import (
+    EVICTED,
+    DegradePolicy,
+    QueryResult,
+    RetrievalEngine,
+    Shed,
+    make_backend,
+)
+from repro.training import checkpoint
+from repro.training.fault_tolerance import Preemption, run_with_restarts
+from repro.core.utils import l2_normalize
+
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Shared small host-tier index (one build; tests that mutate it rebuild).
+# ---------------------------------------------------------------------------
+N, DIM, K, BATCH = 600, 16, 5, 8
+CFG = lider.LiderConfig(
+    n_clusters=8, n_probe=4, n_arrays=4, n_leaves=4, kmeans_iters=5,
+    storage_dtype="int8", rescore_tier="host",
+)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = l2_normalize(jax.random.normal(jax.random.PRNGKey(0), (N + 64, DIM)))
+    base, held = x[:N], x[N:]
+    q = np.asarray(
+        l2_normalize(base[:BATCH] + 0.02), np.float32
+    )
+    return np.asarray(base), np.asarray(held), q
+
+
+def build_params(data):
+    base, _, _ = data
+    return lider.build_lider(jax.random.PRNGKey(1), jnp.asarray(base), CFG)
+
+
+def build_engine(data, *, policy=None, fault_plan=None, max_results=65536):
+    engine = RetrievalEngine(
+        make_backend("lider", None, updatable=True, n_probe=4),
+        batch_size=BATCH, k=K, dim=DIM, params=build_params(data),
+        policy=policy, fault_plan=fault_plan, max_results=max_results,
+    )
+    engine.warmup()
+    return engine
+
+
+def serve(engine, q):
+    rids = [engine.submit(v) for v in q]
+    engine.drain()
+    return [engine.result(r) for r in rids]
+
+
+def ids_of(results):
+    return np.stack([np.asarray(r.ids) for r in results])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan scheduling
+# ---------------------------------------------------------------------------
+def test_fault_plan_times_deterministic_and_json_roundtrip():
+    plan = faults.FaultPlan(
+        [
+            faults.FaultSpec("host_fetch", mode="error", times=(1,)),
+            faults.FaultSpec("d2h", mode="delay", delay_s=0.0, times=(0, 2)),
+        ],
+        seed=3,
+    )
+    rt = faults.FaultPlan.from_json(json.dumps(plan.to_json()))
+    assert rt.seed == plan.seed
+    assert [s.to_dict() for s in rt.specs] == [s.to_dict() for s in plan.specs]
+
+    with faults.activate(plan):
+        assert faults.fire("host_fetch") is None  # call 0: no spec
+        with pytest.raises(faults.InjectedFault) as ei:
+            faults.fire("host_fetch")  # call 1: scheduled error
+        assert ei.value.site == "host_fetch"
+        for _ in range(3):
+            faults.fire("d2h")  # calls 0..2: delays at 0 and 2
+    assert plan.fired == [
+        ("host_fetch", 1, "error"), ("d2h", 0, "delay"), ("d2h", 2, "delay")
+    ]
+    assert plan.n_fired == 3
+    # inactive outside the context: the hook is a no-op
+    assert faults.fire("host_fetch") is None
+    assert plan.n_fired == 3
+
+
+def test_fault_plan_probability_replays_per_site():
+    def firings(interleave):
+        plan = faults.FaultPlan(
+            [faults.FaultSpec("d2h", mode="delay", probability=0.5)], seed=11
+        )
+        with faults.activate(plan):
+            for site in interleave:
+                faults.fire(site)
+        return [f for f in plan.fired if f[0] == "d2h"]
+
+    # Per-site seeded RNGs: the d2h draw sequence is independent of how
+    # calls to other sites interleave with it.
+    a = firings(["d2h"] * 20)
+    b = firings(["host_fetch", "d2h"] * 20)
+    assert a == b and 0 < len(a) < 20
+
+
+def test_fault_plan_count_caps_firings():
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("d2h", mode="delay", probability=1.0, count=2)]
+    )
+    with faults.activate(plan):
+        for _ in range(5):
+            faults.fire("d2h")
+    assert plan.n_fired == 2
+
+
+# ---------------------------------------------------------------------------
+# EmbStore transactions
+# ---------------------------------------------------------------------------
+def _small_store():
+    rng = np.random.default_rng(0)
+    store = EmbStore(
+        "host",
+        rescore=rng.standard_normal((4, 6, 3)).astype(np.float32),
+        gids=rng.integers(0, 100, (4, 6)).astype(np.int32),
+    )
+    return store
+
+
+def test_embstore_rollback_restores_bytes_gids_version():
+    store = _small_store()
+    before = store.rescore.copy()
+    gids_before = store.gids.copy()
+    v0 = store.version
+
+    store.begin_txn()
+    assert store.in_txn
+    store.write_rows(np.array([0, 7, 13]), np.ones((3, 3), np.float32))
+    store.sync_gids(np.full((4, 6), 9, np.int32))
+    store.compact_clusters(
+        np.array([1]), np.array([[3, -1, 5, -1, -1, -1]])
+    )
+    store.write_rows(np.array([7]), np.full((1, 3), 2.0, np.float32))
+    assert not np.array_equal(store.rescore, before)
+    store.rollback()
+
+    np.testing.assert_array_equal(store.rescore, before)
+    np.testing.assert_array_equal(store.gids, gids_before)
+    assert store.version == v0 and not store.in_txn
+
+
+def test_embstore_commit_keeps_writes_and_txn_misuse_raises():
+    store = _small_store()
+    store.begin_txn()
+    with pytest.raises(RuntimeError):
+        store.begin_txn()  # nested transactions are a bug
+    store.write_rows(np.array([2]), np.full((1, 3), 5.0, np.float32))
+    store.commit()
+    assert store.rescore.reshape(-1, 3)[2][0] == 5.0
+    for op in (store.commit, store.rollback):
+        with pytest.raises(RuntimeError):
+            op()  # no open transaction
+
+
+# ---------------------------------------------------------------------------
+# Engine: transactional updates
+# ---------------------------------------------------------------------------
+def test_apply_updates_rolls_back_on_injected_fault(data):
+    _, held, q = data
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("host_write", mode="error", times=(0,))]
+    )
+    engine = build_engine(data, fault_plan=plan)
+    before = serve(engine, q)
+
+    with pytest.raises(faults.InjectedFault):
+        engine.apply_updates(lambda p: update.upsert(p, jnp.asarray(held)))
+    assert engine.stats.n_update_rollbacks == 1
+    assert engine.generation == 0  # still serving the old generation
+    assert not engine.params.bank.store.in_txn
+
+    after = serve(engine, q)
+    np.testing.assert_array_equal(ids_of(before), ids_of(after))
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a.scores), np.asarray(b.scores))
+
+    # The schedule has moved on: the retried update commits cleanly and the
+    # new passages become searchable.
+    engine.apply_updates(lambda p: update.upsert(p, jnp.asarray(held)))
+    assert engine.generation == 1
+    hq = np.asarray(l2_normalize(jnp.asarray(held[:BATCH])), np.float32)
+    got = ids_of(serve(engine, hq))
+    assert (got >= N).any()  # upserted gids start at N
+
+
+# ---------------------------------------------------------------------------
+# Engine: host-fetch retry and degraded answers
+# ---------------------------------------------------------------------------
+def test_fetch_fault_retried_transparently(data):
+    _, _, q = data
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("host_fetch", mode="error", times=(0,))]
+    )
+    engine = build_engine(
+        data, policy=DegradePolicy(fetch_retries=2, fetch_backoff_s=0.0),
+        fault_plan=plan,
+    )
+    out = serve(engine, q)
+    assert engine.stats.n_fetch_retries == 1
+    assert engine.stats.n_fetch_failures == 0
+    assert not any(r.degraded for r in out)
+    ref = lider.search_lider(engine.params, jnp.asarray(q), k=K, n_probe=4)
+    np.testing.assert_array_equal(ids_of(out), np.asarray(ref.ids))
+
+
+def test_fetch_exhaustion_degrades_instead_of_raising(data):
+    _, _, q = data
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("host_fetch", mode="error", times=(0, 1, 2))]
+    )
+    engine = build_engine(
+        data, policy=DegradePolicy(fetch_retries=2, fetch_backoff_s=0.0),
+        fault_plan=plan,
+    )
+    out = serve(engine, q)  # must not raise
+    assert engine.stats.n_fetch_failures == 1
+    assert all(r.degraded for r in out)
+    assert engine.stats.n_degraded == BATCH
+    got = ids_of(out)
+    assert ((got >= 0) & (got < N)).all()  # compressed-only, still real gids
+
+    # Outage over: the next batch is full quality again.
+    out2 = serve(engine, q)
+    assert not any(r.degraded for r in out2)
+    ref = lider.search_lider(engine.params, jnp.asarray(q), k=K, n_probe=4)
+    np.testing.assert_array_equal(ids_of(out2), np.asarray(ref.ids))
+
+
+def test_deadline_pressure_steps_down_ladder(data):
+    _, _, q = data
+    ladder = ({"n_probe": 2, "expected_recall": 0.5},)
+    engine = build_engine(
+        data,
+        policy=DegradePolicy(
+            ladder=ladder, deadline_s=1e-6, degrade_age_fraction=0.5
+        ),
+    )
+    out = serve(engine, q)
+    # Any queue age exceeds a 1us deadline: the controller steps to rung 1
+    # before the batch executes, and the answer IS the rung-1 operating
+    # point (expected_recall is report metadata the engine must ignore).
+    assert engine.stats.n_rung_steps >= 1
+    assert all(r.rung == 1 and not r.degraded for r in out)
+    assert engine.stats.n_deadline_misses == BATCH
+    ref = lider.search_lider(engine.params, jnp.asarray(q), k=K, n_probe=2)
+    np.testing.assert_array_equal(ids_of(out), np.asarray(ref.ids))
+
+
+def test_queue_cap_sheds_with_structured_answer(data):
+    _, _, q = data
+    engine = build_engine(data, policy=DegradePolicy(max_queue=4))
+    rids = [engine.submit(v) for v in np.repeat(q, 2, axis=0)[:6]]
+    engine.drain()
+    served = [engine.result(r) for r in rids[:4]]
+    shed = [engine.result(r) for r in rids[4:]]
+    assert all(isinstance(r, QueryResult) for r in served)
+    assert all(isinstance(r, Shed) and r.reason == "queue_full" for r in shed)
+    assert engine.stats.n_shed == 2
+    assert engine.stats.n_queries == 4
+
+
+def test_result_edge_semantics(data):
+    _, _, q = data
+    engine = build_engine(data, max_results=BATCH)
+    assert engine.result(999) is None  # never submitted
+
+    rids = [engine.submit(v) for v in q]
+    engine.drain()
+    r0 = engine.result(rids[0], keep=True)
+    assert isinstance(r0, QueryResult)
+    assert engine.result(rids[0]) is r0  # keep=True left it readable; pops now
+    assert engine.result(rids[0]) is None  # already collected
+
+    # A second batch overflows max_results=BATCH: the uncollected answers
+    # from batch 1 are evicted -> the falsy EVICTED sentinel, distinct from
+    # None.
+    rids2 = [engine.submit(v) for v in q]
+    engine.drain()
+    for r in rids[1:]:
+        assert engine.result(r) is EVICTED
+        assert not engine.result(r)
+    assert isinstance(engine.result(rids2[-1]), QueryResult)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity
+# ---------------------------------------------------------------------------
+def test_crc_detects_corrupt_leaf_and_restore_latest_falls_back(tmp_path):
+    d = str(tmp_path)
+    mgr = checkpoint.CheckpointManager(d, keep=4)
+    state = {"w": np.arange(16, dtype=np.float32), "b": np.ones(3, np.float32)}
+    mgr.save(1, state)
+    mgr.save(2, {"w": state["w"] + 1, "b": state["b"] + 1})
+
+    # Corrupt step 2's "w" leaf on disk (bit rot / partial write), located
+    # through the manifest rather than assuming leaf ordering.
+    step_dir = os.path.join(d, "step_00000002")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        name = next(
+            m["name"] for m in json.load(f)["leaves"] if m["name"].endswith("w")
+        )
+    np.save(os.path.join(step_dir, f"{name}.npy"), np.zeros(16, np.float32))
+    with pytest.raises(checkpoint.CheckpointCorruptError) as ei:
+        checkpoint.restore(d, 2, state)
+    assert "w" in ei.value.leaf
+
+    step, rec = mgr.restore_latest(
+        {"w": np.zeros(16, np.float32), "b": np.zeros(3, np.float32)}
+    )
+    assert step == 1
+    np.testing.assert_array_equal(rec["w"], state["w"])
+
+
+def test_injected_truncation_is_detected(tmp_path):
+    d = str(tmp_path)
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("checkpoint_write", mode="truncate", times=(0,))]
+    )
+    state = {"w": np.arange(64, dtype=np.float32)}
+    with faults.activate(plan):
+        checkpoint.save(d, 1, state)
+    assert plan.n_fired == 1
+    with pytest.raises(checkpoint.CheckpointCorruptError):
+        checkpoint.restore(d, 1, state)
+
+
+def test_torn_index_write_auto_recovers(data, tmp_path):
+    params = build_params(data)
+    d = os.path.join(str(tmp_path), "idx")
+    checkpoint.save_index(d, params)
+    want = lider.search_lider(params, jnp.asarray(data[2]), k=K, n_probe=4)
+
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("checkpoint_write", mode="torn_write", times=(0,))]
+    )
+    with pytest.raises(faults.InjectedFault):
+        with faults.activate(plan):
+            checkpoint.save_index(d, params)  # crashes inside the swap window
+
+    # load_index detects the corrupt new generation and promotes index.old.
+    loaded = checkpoint.load_index(d)
+    got = lider.search_lider(loaded, jnp.asarray(data[2]), k=K, n_probe=4)
+    np.testing.assert_array_equal(np.asarray(want.ids), np.asarray(got.ids))
+    assert not os.path.exists(os.path.join(d, "index.old"))
+    # The recovered checkpoint is fully healthy: a fresh save + load works.
+    checkpoint.save_index(d, loaded)
+    checkpoint.load_index(d)
+
+
+def test_orphan_tmp_dirs_are_swept(tmp_path):
+    d = str(tmp_path)
+    for name in (".tmp_ckpt_dead", ".tmp_index_dead"):
+        os.makedirs(os.path.join(d, name))
+        with open(os.path.join(d, name, "leaf.npy"), "wb") as f:
+            f.write(b"x")
+    assert checkpoint.sweep_orphan_tmp(d) == 2
+    assert not any(n.startswith(".tmp") for n in os.listdir(d))
+
+    # CheckpointManager.__init__ and save_index both sweep on entry.
+    os.makedirs(os.path.join(d, ".tmp_ckpt_dead2"))
+    checkpoint.CheckpointManager(d)
+    assert not os.path.exists(os.path.join(d, ".tmp_ckpt_dead2"))
+
+
+# ---------------------------------------------------------------------------
+# Restart harness
+# ---------------------------------------------------------------------------
+def _counting_step(fail_at, exc, calls):
+    def step_fn(state, i):
+        calls.append(i)
+        if i == fail_at and not any(c == fail_at for c in calls[:-1]):
+            raise exc
+        return {"x": state["x"] + 1}
+
+    return step_fn
+
+
+def test_run_with_restarts_retries_configured_exceptions(tmp_path):
+    mgr = checkpoint.CheckpointManager(str(tmp_path))
+    calls = []
+    state, restarts = run_with_restarts(
+        lambda: {"x": np.zeros(1, np.float32)},
+        _counting_step(5, OSError("flaky storage"), calls),
+        n_steps=8, manager=mgr, checkpoint_every=2, retryable=(OSError,),
+    )
+    assert restarts == 1
+    # Restored from step 4 and replayed: the step-indexed stream is exact.
+    assert float(state["x"][0]) == 8.0
+    assert calls.count(4) == 2  # steps 4..5 re-executed after the restart
+
+
+def test_run_with_restarts_propagates_non_retryable(tmp_path):
+    mgr = checkpoint.CheckpointManager(str(tmp_path))
+    with pytest.raises(ValueError):
+        run_with_restarts(
+            lambda: {"x": np.zeros(1, np.float32)},
+            _counting_step(3, ValueError("real bug"), []),
+            n_steps=8, manager=mgr, checkpoint_every=2, retryable=(OSError,),
+        )
+
+
+def test_run_with_restarts_backoff_is_deterministic(tmp_path, monkeypatch):
+    sleeps = []
+    monkeypatch.setattr(
+        "repro.training.fault_tolerance.time.sleep", sleeps.append
+    )
+
+    def run(sub):
+        mgr = checkpoint.CheckpointManager(os.path.join(str(tmp_path), sub))
+        calls = []
+
+        def step_fn(state, i):
+            calls.append(i)
+            if len(calls) in (2, 5):  # two transient failures
+                raise Preemption()
+            return {"x": state["x"] + 1}
+
+        return run_with_restarts(
+            lambda: {"x": np.zeros(1, np.float32)}, step_fn,
+            n_steps=4, manager=mgr, checkpoint_every=2,
+            backoff_s=0.1, backoff_mult=2.0, jitter_seed=7,
+        )
+
+    _, restarts = run("a")
+    assert restarts == 2
+    first = list(sleeps)
+    assert len(first) == 2
+    assert 0.1 <= first[0] < 0.2  # base * jitter in [1, 2)
+    assert 0.2 <= first[1] < 0.4  # doubled
+    sleeps.clear()
+    run("b")
+    assert sleeps == first  # seeded jitter: same schedule every replay

@@ -133,8 +133,11 @@ def test_results_map_bounded_when_never_collected(corpus):
         engine.drain()
     assert len(engine.results) == 32
     assert engine.stats.n_results_evicted == 32
-    for rid in rids[:32]:  # oldest evicted
-        assert engine.result(rid) is None
+    from repro.serving import EVICTED
+
+    for rid in rids[:32]:  # oldest evicted -> falsy sentinel, not None
+        assert engine.result(rid) is EVICTED
+        assert not engine.result(rid)
     for rid in rids[32:]:  # newest retained
         assert engine.result(rid) is not None
 
