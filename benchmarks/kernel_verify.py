@@ -22,17 +22,23 @@ recorded per commit (CI runs ``--smoke``). Three measurements:
    dtype, with an exact top-k id equality check, plus the measured rescore
    overhead of the int8 second stage.
 
-3. **Recall floor** (measured, smoke shapes) — recall@k of the int8+rescore
-   two-stage verification against exact f32 over the same candidates, and
-   the same for bf16. CI fails when any parity check is false or when
-   int8+rescore recall drops below bf16 recall − eps (the acceptance
-   criterion's regression guard).
+3. **Recall floor** (measured, smoke shapes) — recall@k of the quantized
+   (int8 / packed int4) +rescore two-stage verification against exact f32
+   over the same candidates, and the same for bf16. CI fails when any
+   parity check is false, when int8+rescore recall drops below bf16
+   recall − eps, or when int4+rescore drops below int8+rescore − eps.
+
+4. **Cluster-major schedule** (measured, smoke shapes) — bit parity of the
+   cluster-major multi-query loop order against the per-query one, plus the
+   measured cluster-tile DMA-sharing ratio under Zipf-skewed probe traffic
+   (CI gates ratio > 1.5 and the modeled int4 first-pass total ≥ 1.7x
+   below int8 at the paper shape).
 
 Usage:
     PYTHONPATH=src python -m benchmarks.kernel_verify [--smoke]
         [--out BENCH_verify.json] [--b 32] [--p 20] [--h-arrays 10]
         [--r 400] [--d 768] [--k 100] [--rescore-factor 4]
-        [--dtypes float32 bfloat16 int8]
+        [--storage-dtypes float32 bfloat16 int8 int4] [--block-q 8]
 """
 from __future__ import annotations
 
@@ -41,8 +47,16 @@ import json
 import sys
 import time
 
-STORAGE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1}
+STORAGE_BYTES = {"float32": 4, "bfloat16": 2, "int8": 1, "int4": 0.5}
+QUANTIZED_DTYPES = ("int8", "int4")
 RECALL_EPS = 0.02  # int8+rescore may trail bf16 recall by at most this
+# (and int4+rescore may trail int8+rescore by the same eps)
+# Modeled int4 first-pass total traffic must be at least this far below int8
+# at the paper shape (the sub-int8 floor's acceptance gate).
+INT4_VS_INT8_TOTAL_MIN = 1.7
+# Measured cluster-tile DMA-sharing ratio of the cluster-major schedule vs
+# the per-query schedule under Zipf-skewed probe traffic.
+SHARED_DMA_RATIO_MIN = 1.5
 # int8+host device-resident embedding-store bytes must stay at or below
 # this fraction of the f32 store (the tier dimension's CI gate; actual
 # ratio at d=768 is (d+4)/(4d) ~ 0.25 — DESIGN.md §Tiered embedding store).
@@ -55,17 +69,17 @@ def storage_tier_model(
 ) -> dict[str, float]:
     """Embedding-store bytes by tier for an ``n x d`` corpus.
 
-    Codes at the storage width, plus (int8 only) the per-row f32 scales and
-    the full-precision rescore table — device-resident on the "device" tier,
-    host RAM on the "host" tier (DESIGN.md §Tiered embedding store). The
-    learned-index arrays (sorted keys/positions, RMI fits) are
-    tier-independent and excluded, matching the paper's index-memory
-    convention.
+    Codes at the storage width, plus (quantized dtypes only) the per-row
+    f32 scales and the full-precision rescore table — device-resident on
+    the "device" tier, host RAM on the "host" tier (DESIGN.md §Tiered
+    embedding store). The learned-index arrays (sorted keys/positions, RMI
+    fits) are tier-independent and excluded, matching the paper's
+    index-memory convention.
     """
     s = STORAGE_BYTES[storage_dtype]
     device = float(n * d * s)
     host = 0.0
-    if storage_dtype == "int8":
+    if storage_dtype in QUANTIZED_DTYPES:
         device += n * 4  # per-row symmetric scales
         if rescore_tier == "device":
             device += n * d * 4
@@ -82,10 +96,13 @@ def traffic_model(
     ``c`` is candidates per query (P*H*R). Id/score words are 4 B; top-k
     rows are 8 B (id + score). ``DEDUP_PASSES`` approximates the argsort +
     take_along_axis + top_k round-trips dedup_topk makes over the (B, C)
-    id/score arrays. For int8 the model adds the per-candidate scale array
-    (one gather read + one write + one kernel read), the provisional top-k'
-    round-trip, and the exact-rescore gather of k' full-precision rows —
-    k'/C (~1% at paper shape) of the first-pass row traffic.
+    id/score arrays. For quantized dtypes the model adds the per-candidate
+    scale array (one gather read + one write + one kernel read), the
+    provisional top-k' round-trip, and the exact-rescore gather of k'
+    full-precision rows — k'/C (~1% at paper shape) of the first-pass row
+    traffic. int4 halves only the candidate-row term (codes are packed two
+    per byte; scales, ids, and the f32 rescore gather are width-independent),
+    which is exactly why its total-traffic win over int8 lands below 2x.
     """
     DEDUP_PASSES = 10  # argsort r/w + 3x take_along_axis r/w + top_k read
     s = STORAGE_BYTES[storage_dtype]
@@ -99,7 +116,7 @@ def traffic_model(
 
     quant_extra_emitted = 0.0
     quant_extra_shared = 0.0
-    if storage_dtype == "int8":
+    if storage_dtype in QUANTIZED_DTYPES:
         kp = min(rescore_factor * k, c)
         # gathered (B, C) f32 combined-scale array: scale-table read + write
         # + kernel read
@@ -145,14 +162,14 @@ def _time(fn, iters=3):
 
 
 def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
-    """Fused-vs-oracle wall + parity for one storage dtype (+ the int8
+    """Fused-vs-oracle wall + parity for one storage dtype (+ the quantized
     rescore stage's overhead, measured as its own fused pass)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
     from repro.kernels import fused_verify, ref
-    from repro.kernels.quant import quantize_rows
+    from repro.kernels.quant import quantize_rows, quantize_rows_int4
 
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     embs_f = jax.random.normal(k1, (n, d))
@@ -160,16 +177,22 @@ def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
     q = jax.random.normal(k3, (b, d))
 
     scales = None
+    code_dtype = "int8"
     if dtype_name == "int8":
         table, scales = quantize_rows(embs_f)
+    elif dtype_name == "int4":
+        table, scales = quantize_rows_int4(embs_f)
+        code_dtype = "int4"
     else:
         table = embs_f.astype(jnp.dtype(dtype_name))
 
     def run_fused():
-        return fused_verify(table, ids, q, k=k, scales=scales, block_c=block_c)
+        return fused_verify(table, ids, q, k=k, scales=scales,
+                            block_c=block_c, code_dtype=code_dtype)
 
     def run_unfused():
-        return ref.verify_topk_ref(table, ids, q, k=k, scales=scales)
+        return ref.verify_topk_ref(table, ids, q, k=k, scales=scales,
+                                   code_dtype=code_dtype)
 
     out = {}
     ids_by_path = {}
@@ -179,7 +202,7 @@ def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
     out["ids_match"] = bool(
         (ids_by_path["fused"] == ids_by_path["unfused"]).all()
     )
-    if dtype_name == "int8":
+    if dtype_name in QUANTIZED_DTYPES:
         # The exact second stage: rescore the provisional top-k' rows from
         # the full-precision table (k'/c the gather of the first pass). The
         # provisional set comes from a k'-deep first pass — the pipeline
@@ -189,7 +212,7 @@ def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
 
         def run_first_kp():
             return fused_verify(table, ids, q, k=kp, scales=scales,
-                                block_c=block_c)
+                                block_c=block_c, code_dtype=code_dtype)
 
         prov = run_first_kp()[0]
 
@@ -211,7 +234,9 @@ def _measure(b, c, n, d, k, dtype_name, block_c, rescore_factor, iters=3):
     return out
 
 
-def _measure_host_tier(b, c, n, d, k, block_c, rescore_factor, iters=3):
+def _measure_host_tier(
+    b, c, n, d, k, block_c, rescore_factor, iters=3, code_dtype="int8"
+):
     """The tiered search's staged rescore vs the device-resident one: bit
     parity of (ids, scores) plus the measured host fetch (D2H of the
     provisional rows + the np.take) and staged-rescore walls."""
@@ -220,19 +245,22 @@ def _measure_host_tier(b, c, n, d, k, block_c, rescore_factor, iters=3):
     import numpy as np
 
     from repro.kernels.ops import verify_topk_op
-    from repro.kernels.quant import quantize_rows
+    from repro.kernels.quant import quantize_rows, quantize_rows_int4
 
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     embs_f = jax.random.normal(k1, (n, d))
     ids = jax.random.randint(k2, (b, c), -1, n)
     q = jax.random.normal(k3, (b, d))
-    table, scales = quantize_rows(embs_f)
+    if code_dtype == "int4":
+        table, scales = quantize_rows_int4(embs_f)
+    else:
+        table, scales = quantize_rows(embs_f)
     host_table = np.ascontiguousarray(np.asarray(embs_f, np.float32))
     kp = min(rescore_factor * k, c)
 
     def first_pass():
         return verify_topk_op(table, ids, q, k=kp, scales=scales,
-                              block_c=block_c)
+                              block_c=block_c, code_dtype=code_dtype)
 
     prov = first_pass()[0]
 
@@ -279,7 +307,7 @@ def _recall_floor(n, d, b, k, rescore_factor):
 
     from repro.core.utils import l2_normalize, recall_at_k
     from repro.kernels.ops import verify_topk_op
-    from repro.kernels.quant import quantize_rows
+    from repro.kernels.quant import quantize_rows, quantize_rows_int4
 
     k1, k2 = jax.random.split(jax.random.PRNGKey(1), 2)
     x = l2_normalize(jax.random.normal(k1, (n, d)))
@@ -288,12 +316,16 @@ def _recall_floor(n, d, b, k, rescore_factor):
     gt_ids, _ = verify_topk_op(x, cand, q, k=k, use_pallas=False)
 
     out = {}
-    for dtype_name in ("bfloat16", "int8"):
-        if dtype_name == "int8":
-            codes, scales = quantize_rows(x)
+    for dtype_name in ("bfloat16", "int8", "int4"):
+        if dtype_name in QUANTIZED_DTYPES:
+            if dtype_name == "int4":
+                codes, scales = quantize_rows_int4(x)
+            else:
+                codes, scales = quantize_rows(x)
             kp = min(rescore_factor * k, n)
             prov, _ = verify_topk_op(
-                codes, cand, q, k=kp, scales=scales, use_pallas=False
+                codes, cand, q, k=kp, scales=scales, use_pallas=False,
+                code_dtype=dtype_name,
             )
             ids, _ = verify_topk_op(
                 x, jnp.maximum(prov, 0), q, k=k, out_ids=prov, use_pallas=False
@@ -303,6 +335,105 @@ def _recall_floor(n, d, b, k, rescore_factor):
                 x.astype(jnp.bfloat16), cand, q, k=k, use_pallas=False
             )
         out[dtype_name] = float(np.asarray(recall_at_k(ids, gt_ids)))
+    return out
+
+
+def _measure_shared_dma(
+    b, n_clusters, lp, d, k, n_probe, block_q, zipf_a=1.3, iters=3
+):
+    """Cluster-major vs per-query schedule under Zipf-skewed probe traffic.
+
+    Routed probe lists are sampled from a Zipf(``zipf_a``) cluster
+    popularity (production query traffic concentrates on hot clusters —
+    the regime the cluster-major schedule exists for), then BOTH loop
+    orders are built from the same lists and run through the same grouped
+    kernel: ``block_q=1`` *is* the per-query loop order (one cluster-tile
+    stream per (query, probe) pair), so the measured cluster-tile rows of
+    the two schedules are directly comparable and the shared-DMA ratio is
+    ``pair streams / step streams``. Every pair's per-cluster top-k'
+    scatters back through its (step, slot) coordinates and merges per
+    query — the final (ids, scores) of the two schedules must match
+    bit-for-bit (the ISSUE's schedule-parity acceptance gate, measured
+    here on top of the unit tests).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core.utils import dedup_topk
+    from repro.kernels.ops import verify_topk_grouped_op
+    from repro.kernels.quant import quantize_rows
+    from repro.kernels.schedule import build_cluster_schedule
+
+    rng = np.random.default_rng(0)
+    weights = 1.0 / np.arange(1, n_clusters + 1) ** zipf_a
+    weights /= weights.sum()
+    cids = np.stack(
+        [
+            rng.choice(n_clusters, size=n_probe, replace=False, p=weights)
+            for _ in range(b)
+        ]
+    ).astype(np.int32)
+
+    embs_f = jax.random.normal(jax.random.PRNGKey(2), (n_clusters, lp, d))
+    q = jax.random.normal(jax.random.PRNGKey(3), (b, d))
+    table, scales = quantize_rows(embs_f)  # codes (c,lp,d), scales (c,lp)
+    kp = min(4 * k, lp)
+
+    def dense_step_slot_ids(sched):
+        # Every scheduled pair's candidate set = its cluster's full Lp rows
+        # (flat ids cid*lp + local), the densest sharing case.
+        out = np.full((sched.n_padded_steps, sched.block_q, lp), -1, np.int64)
+        qs, ps = np.nonzero(sched.pair_step >= 0)
+        st, sl = sched.pair_step[qs, ps], sched.pair_slot[qs, ps]
+        out[st, sl, :] = (
+            cids[qs, ps][:, None].astype(np.int64) * lp + np.arange(lp)[None]
+        )
+        return out.astype(np.int32)
+
+    import jax.numpy as jnp
+
+    def run(sched):
+        ssi = dense_step_slot_ids(sched)
+        ids_g, sc_g = verify_topk_grouped_op(
+            table,
+            scales,
+            q,
+            jnp.asarray(sched.sched_cids),
+            jnp.asarray(sched.sched_qids),
+            jnp.asarray(ssi),
+            kp=kp,
+            block_q=sched.block_q,
+        )
+        # Scatter-back + per-query merge, same semantics as the search path.
+        safe_st = jnp.maximum(jnp.asarray(sched.pair_step), 0)
+        safe_sl = jnp.maximum(jnp.asarray(sched.pair_slot), 0)
+        pids = ids_g[safe_st, safe_sl]
+        psc = sc_g[safe_st, safe_sl]
+        dead = (jnp.asarray(sched.pair_step) < 0)[..., None]
+        pids = jnp.where(dead, -1, pids)
+        psc = jnp.where(dead, -jnp.inf, psc)
+        return dedup_topk(pids.reshape(b, -1), psc.reshape(b, -1), k)
+
+    sched_g = build_cluster_schedule(cids, block_q=block_q)
+    sched_1 = build_cluster_schedule(cids, block_q=1)
+    gi, gs = run(sched_g)
+    pi, ps_ = run(sched_1)
+    out = {
+        "ids_match": bool((np.asarray(gi) == np.asarray(pi)).all()),
+        "scores_match": bool((np.asarray(gs) == np.asarray(ps_)).all()),
+        # Cluster-tile rows each schedule streams for the same routed batch.
+        "rows_per_query_schedule": sched_1.n_steps * lp,
+        "rows_cluster_major": sched_g.n_steps * lp,
+        "shared_dma_ratio": sched_1.n_steps / max(sched_g.n_steps, 1),
+        "wall_s_cluster_major": _time(lambda: run(sched_g), iters),
+        "wall_s_per_query": _time(lambda: run(sched_1), iters),
+        "n_pairs": sched_g.n_pairs,
+        "n_steps": sched_g.n_steps,
+        "shape": {
+            "B": b, "clusters": n_clusters, "Lp": lp, "d": d, "k": k,
+            "n_probe": n_probe, "block_q": block_q, "zipf_a": zipf_a,
+        },
+    }
     return out
 
 
@@ -323,9 +454,15 @@ def main() -> None:
         help="corpus rows for the storage-tier byte model (default: the "
         "paper's MS-MARCO scale)",
     )
-    ap.add_argument("--dtypes", nargs="+",
-                    default=["float32", "bfloat16", "int8"],
+    ap.add_argument("--dtypes", "--storage-dtypes", nargs="+",
+                    default=["float32", "bfloat16", "int8", "int4"],
                     choices=list(STORAGE_BYTES))
+    ap.add_argument("--block-q", type=int, default=8,
+                    help="query-tile width of the measured cluster-major "
+                    "schedule (DESIGN.md §Cluster-major schedule)")
+    ap.add_argument("--zipf-a", type=float, default=1.3,
+                    help="Zipf exponent of the probe-popularity skew the "
+                    "shared-DMA measurement samples")
     args = ap.parse_args()
 
     c = args.p * args.h_arrays * args.r
@@ -336,8 +473,9 @@ def main() -> None:
     # Storage-tier dimension (DESIGN.md §Tiered embedding store): where the
     # embedding-store bytes live per (dtype, tier) config at paper scale.
     tier_configs = [(sd, "device") for sd in args.dtypes]
-    if "int8" in args.dtypes:
-        tier_configs.append(("int8", "host"))
+    for sd in QUANTIZED_DTYPES:
+        if sd in args.dtypes:
+            tier_configs.append((sd, "host"))
     storage_tiers = {
         f"{sd}_{tier}": storage_tier_model(args.corpus_n, args.d, sd, tier)
         for sd, tier in tier_configs
@@ -378,29 +516,38 @@ def main() -> None:
                 b=4, c=608, n=4096, d=64, k=10, dtype_name=sd, block_c=128,
                 rescore_factor=args.rescore_factor,
             )
-    if "int8" in args.dtypes:
+    for sd in QUANTIZED_DTYPES:
+        if sd not in args.dtypes:
+            continue
         if full_measure:
-            measured["int8_host"] = _measure_host_tier(
+            measured[f"{sd}_host"] = _measure_host_tier(
                 b=args.b, c=c, n=200_000, d=args.d, k=args.k, block_c=256,
-                rescore_factor=args.rescore_factor,
+                rescore_factor=args.rescore_factor, code_dtype=sd,
             )
         else:
-            measured["int8_host"] = _measure_host_tier(
+            measured[f"{sd}_host"] = _measure_host_tier(
                 b=4, c=608, n=4096, d=64, k=10, block_c=128,
-                rescore_factor=args.rescore_factor,
+                rescore_factor=args.rescore_factor, code_dtype=sd,
             )
     recall = _recall_floor(
         n=4096, d=64, b=32, k=10, rescore_factor=args.rescore_factor
+    )
+    # Cluster-major schedule: parity + shared-DMA ratio under Zipf probes
+    # (shape-independent of the dtype sweep; int8 codes, small bank).
+    shared = _measure_shared_dma(
+        b=32, n_clusters=64, lp=128, d=64, k=10, n_probe=8,
+        block_q=args.block_q, zipf_a=args.zipf_a,
     )
 
     checks = {
         f"parity_{sd}": measured[sd]["ids_match"] for sd in args.dtypes
     }
-    if "int8" in args.dtypes:
-        checks["parity_int8_host_vs_device_rescore"] = (
-            measured["int8_host"]["ids_match"]
-            and measured["int8_host"]["scores_match"]
-        )
+    for sd in QUANTIZED_DTYPES:
+        if sd in args.dtypes:
+            checks[f"parity_{sd}_host_vs_device_rescore"] = (
+                measured[f"{sd}_host"]["ids_match"]
+                and measured[f"{sd}_host"]["scores_match"]
+            )
     if "int8" in args.dtypes and "float32" in args.dtypes:
         checks["int8_host_device_bytes_le_045x_f32"] = (
             storage_tiers["int8_host"]["device_bytes"]
@@ -415,6 +562,24 @@ def main() -> None:
         checks["int8_total_traffic_at_least_2x_below_f32"] = (
             ratios["int8"]["fused_total_vs_f32_fused"] >= 2.0
         )
+    if "int4" in args.dtypes:
+        # int4's quality floor is gated against int8 (both run the exact
+        # f32 rescore; only the first pass got narrower).
+        checks["int4_rescore_recall_floor_vs_int8"] = (
+            recall["int4"] >= recall["int8"] - RECALL_EPS
+        )
+        if "int8" in args.dtypes:
+            checks["int4_total_traffic_at_least_1p7x_below_int8"] = (
+                model["int8"]["fused"]["total_bytes"]
+                >= INT4_VS_INT8_TOTAL_MIN
+                * model["int4"]["fused"]["total_bytes"]
+            )
+    checks["cluster_major_schedule_parity"] = (
+        shared["ids_match"] and shared["scores_match"]
+    )
+    checks["shared_dma_ratio_above_1p5_zipf"] = (
+        shared["shared_dma_ratio"] > SHARED_DMA_RATIO_MIN
+    )
 
     report = {
         "paper_shape": {
@@ -433,6 +598,16 @@ def main() -> None:
         "measured": measured,
         "recall_vs_exact": recall,
         "recall_eps": RECALL_EPS,
+        "cluster_major": {
+            **shared,
+            "min_shared_dma_ratio": SHARED_DMA_RATIO_MIN,
+        },
+        "int4_vs_int8_total_ratio": (
+            model["int8"]["fused"]["total_bytes"]
+            / model["int4"]["fused"]["total_bytes"]
+            if "int8" in model and "int4" in model
+            else None
+        ),
         "checks": checks,
     }
     with open(args.out, "w") as f:
@@ -441,10 +616,10 @@ def main() -> None:
     for sd in args.dtypes:
         m, r = model[sd], ratios[sd]
         extra = ""
-        if sd == "int8":
+        if sd in QUANTIZED_DTYPES:
             extra = (
                 f" rescore_overhead={measured[sd]['rescore_overhead_frac']:.1%}"
-                f" recall={recall['int8']:.4f}"
+                f" recall={recall[sd]:.4f}"
             )
         print(
             f"[verify] {sd:>8}: fused total {m['fused']['total_bytes']/2**30:7.2f} GiB "
@@ -465,15 +640,25 @@ def main() -> None:
             f"[verify] store {name:>15}: device {tb['device_bytes']/2**30:6.2f} GiB"
             f", host {tb['host_bytes']/2**30:6.2f} GiB{ratio}"
         )
-    if "int8_host" in measured:
-        mh = measured["int8_host"]
+    for sd in QUANTIZED_DTYPES:
+        if f"{sd}_host" not in measured:
+            continue
+        mh = measured[f"{sd}_host"]
         print(
-            f"[verify] int8_host staged rescore: ids_match={mh['ids_match']} "
+            f"[verify] {sd}_host staged rescore: ids_match={mh['ids_match']} "
             f"scores_match={mh['scores_match']} "
             f"fetch={mh['host_fetch_us']:.0f}us "
             f"rescore={mh['wall_s_host_rescore']*1e3:.2f}ms "
             f"(device-resident rescore {mh['wall_s_device_rescore']*1e3:.2f}ms)"
         )
+    print(
+        f"[verify] cluster-major (zipf a={shared['shape']['zipf_a']}, "
+        f"block_q={shared['shape']['block_q']}): "
+        f"shared-DMA ratio {shared['shared_dma_ratio']:.2f}x "
+        f"({shared['n_pairs']} pair streams -> {shared['n_steps']} step "
+        f"streams), ids_match={shared['ids_match']} "
+        f"scores_match={shared['scores_match']}"
+    )
     print(f"[verify] checks: {checks} -> {args.out}")
     failed = [name for name, ok in checks.items() if not ok]
     if failed:

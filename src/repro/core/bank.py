@@ -42,17 +42,27 @@ import numpy as np
 
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
 from .. import faults
-from ..kernels.quant import dequantize_rows, quantize_rows
+from ..kernels.quant import (
+    dequantize_codes,
+    dequantize_rows,
+    quantize_rows,
+    quantize_rows_int4,
+)
 from .types import pytree_dataclass
 
 # dataclasses.field metadata key: leading cluster axis (int) or None for
 # replicated leaves. core.distributed reads this to build PartitionSpecs.
 CLUSTER_AXIS = "cluster_axis"
 
-# Supported embedding storage dtypes (LiderConfig.storage_dtype). "int8"
-# additionally populates ``emb_scales`` + ``rescore_embs`` (DESIGN.md
-# §Quantized bank).
-STORAGE_DTYPES = ("float32", "bfloat16", "int8")
+# Supported embedding storage dtypes (LiderConfig.storage_dtype). The
+# quantized dtypes ("int8", and "int4" — packed two-nibbles-per-byte in an
+# int8 carrier of width d//2) additionally populate ``emb_scales`` +
+# ``rescore_embs`` (DESIGN.md §Quantized bank).
+STORAGE_DTYPES = ("float32", "bfloat16", "int8", "int4")
+
+# The quantized subset: storage dtypes that carry per-row scales + an exact
+# rescore table and run the two-stage compressed-first search.
+QUANTIZED_DTYPES = ("int8", "int4")
 
 # Where the full-precision rescore side table lives
 # (LiderConfig.rescore_tier; DESIGN.md §Tiered embedding store).
@@ -286,21 +296,21 @@ def _f(cluster_axis: int | None, default=dataclasses.MISSING):
     )
 
 
-@pytree_dataclass(meta_fields=("store",))
+@pytree_dataclass(meta_fields=("store", "code_dtype"))
 class ClusterBank:
     lsh: lsh_lib.LSHParams = _f(None)  # shared across clusters (DESIGN.md §2)
     rescale: rescale_lib.RescaleParams = _f(0)  # leaves (c, H)
     rmi: rmi_lib.RMIParams = _f(0)  # leaves (c, H) / (c, H, W)
     sorted_keys: jnp.ndarray = _f(0)  # (c, H, Lp) uint32
     sorted_pos: jnp.ndarray = _f(0)  # (c, H, Lp) int32
-    embs: jnp.ndarray = _f(0)  # (c, Lp, d) — storage dtype (f32/bf16/int8)
+    embs: jnp.ndarray = _f(0)  # (c, Lp, d) — storage dtype (d//2 for int4)
     gids: jnp.ndarray = _f(0)  # (c, Lp) int32
     sizes: jnp.ndarray = _f(0)  # (c,) int32 — live rows
     tombstones: jnp.ndarray = _f(0)  # (c,) int32 — dead rows awaiting compaction
     next_gid: jnp.ndarray = _f(None)  # () int32 — bank metadata, replicated
-    # int8 storage only (None otherwise): per-row symmetric scales and the
-    # full-precision side table the exact-rescore pass gathers its top-k'
-    # rows from (DESIGN.md §Quantized bank).
+    # Quantized storage only (None otherwise): per-row symmetric scales and
+    # the full-precision side table the exact-rescore pass gathers its
+    # top-k' rows from (DESIGN.md §Quantized bank).
     emb_scales: jnp.ndarray | None = _f(0, default=None)  # (c, Lp) f32
     rescore_embs: jnp.ndarray | None = _f(0, default=None)  # (c, Lp, d)
     # Host-tier handle (DESIGN.md §Tiered embedding store). None = device
@@ -309,6 +319,12 @@ class ClusterBank:
     # two jit'd stages — and EmbStore hashes by (tier, shape, dtype), so
     # host-content writes never invalidate a compiled search.
     store: EmbStore | None = _f(None, default=None)
+    # Code representation of ``embs`` when quantized: "int8" (one code per
+    # byte) or "int4" (two nibbles per byte — embs width is d//2). Static
+    # pytree aux data like ``store``: it selects a compiled kernel variant,
+    # so two banks differing only here must not share a compilation.
+    # Ignored (kept at the default) for float banks.
+    code_dtype: str = _f(None, default="int8")
 
     @property
     def n_clusters(self) -> int:
@@ -320,6 +336,10 @@ class ClusterBank:
 
     @property
     def dim(self) -> int:
+        """Embedding dimensionality d (NOT the stored row width — int4 packs
+        two elements per stored byte, so ``embs.shape[-1]`` is d//2)."""
+        if self.quantized and self.code_dtype == "int4":
+            return self.embs.shape[-1] * 2
         return self.embs.shape[-1]
 
     @property
@@ -328,7 +348,7 @@ class ClusterBank:
 
     @property
     def storage_dtype(self) -> str:
-        return "int8" if self.quantized else str(self.embs.dtype)
+        return self.code_dtype if self.quantized else str(self.embs.dtype)
 
     @property
     def rescore_tier(self) -> str:
@@ -350,13 +370,13 @@ class ClusterBank:
 
     def float_rows(self) -> jnp.ndarray:
         """(c, Lp, d) rows as first-pass verification scores them —
-        dequantized codes for int8 storage, the stored rows otherwise.
+        dequantized codes for quantized storage, the stored rows otherwise.
         Convenience accessor for consumers/tests; the fit paths apply the
-        same ``dequantize_rows`` to their gathered sub-banks (build_bank,
+        same ``dequantize_codes`` to their gathered sub-banks (build_bank,
         update._refit_clusters, update._compact_clusters) rather than
         materializing the whole bank through here."""
         if self.quantized:
-            return dequantize_rows(self.embs, self.emb_scales)
+            return dequantize_codes(self.embs, self.emb_scales, self.code_dtype)
         return self.embs
 
 
@@ -436,11 +456,15 @@ def store_rows(
     The single conversion point from float rows to bank storage, shared by
     the offline build and the upsert append (so both quantize identically —
     the scheme is row-local, which is what keeps upsert slot-identical to a
-    rebuild). For int8 the raw rows are also kept as the full-precision
-    rescore side table; zero (padded) rows quantize to exact zeros.
+    rebuild). For the quantized dtypes the raw rows are also kept as the
+    full-precision rescore side table; zero (padded) rows quantize to exact
+    zeros (int4 rows additionally pack to exact zero bytes).
     """
     if storage_dtype == "int8":
         codes, scales = quantize_rows(raw_rows)
+        return codes, scales, raw_rows
+    if storage_dtype == "int4":
+        codes, scales = quantize_rows_int4(raw_rows)
         return codes, scales, raw_rows
     if storage_dtype == "bfloat16":
         return raw_rows.astype(jnp.bfloat16), None, None
@@ -466,8 +490,8 @@ def set_rescore_tier(bank: ClusterBank, tier: str) -> ClusterBank:
         return bank
     if not bank.quantized:
         raise ValueError(
-            "rescore_tier='host' requires int8 storage — float banks have "
-            "no rescore side table to move off-device"
+            "rescore_tier='host' requires quantized (int8/int4) storage — "
+            "float banks have no rescore side table to move off-device"
         )
     if tier == "host":
         store = EmbStore(
@@ -537,10 +561,11 @@ def build_bank(
         raise ValueError(
             f"rescore_tier must be one of {RESCORE_TIERS}, got {rescore_tier!r}"
         )
-    if rescore_tier == "host" and storage_dtype != "int8":
+    if rescore_tier == "host" and storage_dtype not in QUANTIZED_DTYPES:
         raise ValueError(
-            "rescore_tier='host' requires storage_dtype='int8' — float "
-            "banks have no rescore side table to move off-device"
+            "rescore_tier='host' requires quantized storage "
+            f"({QUANTIZED_DTYPES}) — float banks have no rescore side "
+            "table to move off-device"
         )
     raw_sizes = jnp.bincount(assignment, length=n_clusters)
     n_dropped = int(
@@ -553,7 +578,9 @@ def build_bank(
     stored, emb_scales, rescore_embs = store_rows(raw_rows, storage_dtype)
     lsh = lsh_lib.make_lsh(rng, embs.shape[-1], n_arrays, key_len)
     fit_rows = (
-        dequantize_rows(stored, emb_scales) if emb_scales is not None else stored
+        dequantize_codes(stored, emb_scales, storage_dtype)
+        if emb_scales is not None
+        else stored
     )
     sorted_keys, sorted_pos, resc, r = _fit_all_clusters(
         lsh, fit_rows, gids >= 0, n_leaves=n_leaves
@@ -580,6 +607,7 @@ def build_bank(
         emb_scales=emb_scales,
         rescore_embs=rescore_embs,
         store=store,
+        code_dtype=storage_dtype if storage_dtype in QUANTIZED_DTYPES else "int8",
     )
     return bank, n_dropped
 

@@ -28,10 +28,11 @@ import numpy as np
 
 from . import bank as bank_lib
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
-from ..kernels.ops import verify_topk_op
+from ..kernels.ops import verify_topk_grouped_op, verify_topk_op
 from .bank import ClusterBank
 from .core_model import CoreModelParams, TopK, build_core_model, search_core_model
 from .types import pytree_dataclass
+from .utils import dedup_topk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,13 +59,14 @@ class LiderConfig:
     # launchers feed it from the config (DESIGN.md §Verification-kernel).
     use_fused: bool | None = None
     # Embedding storage dtype (DESIGN.md §Quantized bank): "float32",
-    # "bfloat16", or "int8". int8 cuts the compulsory candidate-row gather
-    # 4x vs f32 and adds an exact rescore pass over the provisional
+    # "bfloat16", "int8", or "int4". int8 cuts the compulsory candidate-row
+    # gather 4x vs f32; int4 packs two codes per byte (8x, 0.5 B/elem).
+    # Both quantized dtypes add an exact rescore pass over the provisional
     # top-(rescore_factor * k) from the full-precision side table.
     storage_dtype: str = "float32"
-    rescore_factor: int = 4  # k' = rescore_factor * k (int8 storage only)
-    # Where the full-precision rescore side table lives (int8 storage only;
-    # DESIGN.md §Tiered embedding store). "device": a pytree leaf next to
+    rescore_factor: int = 4  # k' = rescore_factor * k (quantized storage only)
+    # Where the full-precision rescore side table lives (quantized storage
+    # only; DESIGN.md §Tiered embedding store). "device": a pytree leaf next to
     # the codes (PR-4 layout — costs ~25% more HBM than f32). "host": a
     # process-local pinned host array outside the pytree; search becomes
     # the staged fetch->rescore pipeline and the device-resident index
@@ -73,6 +75,13 @@ class LiderConfig:
     # Verification-kernel candidate block size; None -> kernel default (256).
     # Swept by the Pareto autotuner alongside the quantization knobs.
     block_c: int | None = None
+    # Cluster-major multi-query batching (DESIGN.md §Cluster-major schedule;
+    # quantized banks only): queries in a batch probing the same cluster are
+    # grouped into block_q-wide tiles so the cluster's rows are streamed
+    # once per tile instead of once per query — the big first-pass DMA win
+    # under Zipf-skewed traffic. None keeps the per-query schedule.
+    # Bit-identical results either way; swept by the Pareto autotuner.
+    block_q: int | None = None
     # Adaptive probe pruning (DESIGN.md §Adaptive speed-quality control
     # plane): probes whose layer-1 centroid score falls more than this
     # margin below the per-query best are masked to -1 before layer 2.
@@ -380,6 +389,7 @@ def _verify_bank_rows(
         out_ids=out_rows,
         scales=bank.emb_scales.reshape(-1),
         block_c=block_c,
+        code_dtype=bank.code_dtype,
         use_pallas=use_pallas,
     )
     rescore_table = bank.rescore_embs.reshape(c * lp, -1)
@@ -552,7 +562,7 @@ def provisional_rows(
     """
     bank = params.bank
     if not bank.quantized:
-        raise ValueError("provisional_rows needs a quantized (int8) bank")
+        raise ValueError("provisional_rows needs a quantized (int8/int4) bank")
     b, p = cids.shape
     flat_emb, gids = _bank_candidates(
         bank, queries, cids, k=k, r0=r0, refine=refine
@@ -573,7 +583,7 @@ def provisional_rows(
     kp = min(max(rescore_factor, 1) * k, fr.shape[-1])
     rows, sc = verify_topk_op(
         flat_table, fr, q, k=kp, out_ids=out_rows, scales=scales,
-        block_c=block_c, use_pallas=use_fused,
+        block_c=block_c, code_dtype=bank.code_dtype, use_pallas=use_fused,
     )
     if not merge:
         return TopK(ids=rows.reshape(b, p, kp), scores=sc.reshape(b, p, kp))
@@ -698,6 +708,266 @@ def compressed_only_topk(
     return TopK(ids=ids, scores=scores)
 
 
+# ---------------------------------------------------------------------------
+# Cluster-major multi-query search (DESIGN.md §Cluster-major schedule)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_probe", "r0_centroid", "use_fused", "block_c"),
+)
+def _route_pruned(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    n_probe: int,
+    r0_centroid: int = 4,
+    use_fused: bool | None = None,
+    prune_margin: float | None = None,
+    block_c: int | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Jit'd routing stage of the cluster-major search: layer-1 route +
+    margin prune. Returns ``(cids (B, P), pruned_mask (B, P))`` — the probe
+    lists the host schedule pre-pass groups by cluster."""
+    routed = route_queries(
+        params, queries, n_probe=n_probe, r0=r0_centroid, use_fused=use_fused,
+        block_c=block_c,
+    )
+    cids = prune_probes(routed.ids, routed.scores, prune_margin)
+    pruned = (routed.ids >= 0) & (cids < 0)
+    return cids, pruned
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "r0", "refine", "use_fused", "rescore_factor", "block_c",
+        "block_q",
+    ),
+)
+def _cluster_major_first_pass(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    cids: jnp.ndarray,
+    sched_cids: jnp.ndarray,
+    sched_qids: jnp.ndarray,
+    pair_step: jnp.ndarray,
+    pair_slot: jnp.ndarray,
+    *,
+    k: int,
+    r0: int = 4,
+    refine: bool = False,
+    use_fused: bool | None = None,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
+    block_q: int = 8,
+) -> TopK:
+    """Jit'd compressed first pass on the cluster-major schedule.
+
+    Candidate generation is the same ``_bank_candidates`` the per-query path
+    runs; its (B, P, H, R) windows are scattered into the dense per-(step,
+    query-slot) candidate masks the grouped kernel scores
+    (``step_slot_ids``), each (query, probe) pair's per-cluster top-k' is
+    gathered back through ``pair_step``/``pair_slot``, and a final
+    ``dedup_topk`` merge yields the provisional top-k' — bit-identical ids
+    AND scores to the per-query first pass (every global top-k' winner from
+    a cluster is inside that pair's per-cluster top-k'; flat rows are unique
+    across clusters; the selection order and smallest-id tie-break are
+    shared — tests/test_fused_verify.py gates this).
+    """
+    bank = params.bank
+    b, p = cids.shape
+    c, lp = bank.gids.shape
+    flat_emb, gids = _bank_candidates(
+        bank, queries, cids, k=k, r0=r0, refine=refine
+    )
+    out_rows = jnp.where(gids >= 0, flat_emb, -1)  # (B, P, H, R)
+    s_steps = sched_cids.shape[0]
+
+    # Dense per-(step, slot) candidate mask over the step cluster's Lp rows:
+    # the union of each pair's H·R window candidates (duplicates collapse).
+    # Invalid candidates / unscheduled (pruned) pairs scatter out of range.
+    local = flat_emb % lp
+    st = pair_step[:, :, None, None]
+    sl = pair_slot[:, :, None, None]
+    valid = (out_rows >= 0) & (st >= 0)
+    tgt = jnp.where(
+        valid, (st * block_q + sl) * lp + local, s_steps * block_q * lp
+    )
+    step_slot_ids = (
+        jnp.full((s_steps * block_q * lp,), -1, jnp.int32)
+        .at[tgt.reshape(-1)]
+        .set(out_rows.reshape(-1), mode="drop")
+        .reshape(s_steps, block_q, lp)
+    )
+
+    kp = min(
+        max(rescore_factor, 1) * k,
+        p * flat_emb.shape[2] * flat_emb.shape[3],
+    )
+    kp_pair = min(kp, lp)  # a pair has at most Lp distinct rows
+    ids_g, sc_g = verify_topk_grouped_op(
+        bank.embs,
+        bank.emb_scales,
+        queries,
+        sched_cids,
+        sched_qids,
+        step_slot_ids,
+        kp=kp_pair,
+        block_q=block_q,
+        block_c=block_c,
+        code_dtype=bank.code_dtype,
+        use_pallas=use_fused,
+    )
+
+    # Scatter-back: gather each query's pairs' per-cluster top-k' streams
+    # and merge. Dead pairs (pruned probes / padding) contribute (-1, -inf).
+    safe_st = jnp.maximum(pair_step, 0)
+    safe_sl = jnp.maximum(pair_slot, 0)
+    pids = ids_g[safe_st, safe_sl]  # (B, P, kp_pair)
+    psc = sc_g[safe_st, safe_sl]
+    dead = (pair_step < 0)[..., None]
+    pids = jnp.where(dead, -1, pids)
+    psc = jnp.where(dead, -jnp.inf, psc)
+    # dedup_topk pads (-1, -inf) past the candidate count, so degenerate
+    # tiny-bank shapes (kp > P·kp_pair) match the per-query pass's padding.
+    prov_rows, prov_sc = dedup_topk(
+        pids.reshape(b, -1), psc.reshape(b, -1), kp
+    )
+    return TopK(ids=prov_rows, scores=prov_sc)
+
+
+@partial(jax.jit, static_argnames=("k", "use_fused", "block_c"))
+def _rescore_provisional(
+    gids: jnp.ndarray,
+    rescore_embs: jnp.ndarray,
+    prov_rows: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    use_fused: bool | None = None,
+    block_c: int | None = None,
+) -> TopK:
+    """Device-tier exact rescore of a provisional top-k' (the same stage-2
+    math as ``_verify_bank_rows``, split out so the cluster-major first pass
+    can feed it between jits)."""
+    rescore_table = rescore_embs.reshape(-1, rescore_embs.shape[-1])
+    rows, scores = verify_topk_op(
+        rescore_table,
+        jnp.maximum(prov_rows, 0),
+        queries,
+        k=k,
+        out_ids=prov_rows,
+        block_c=block_c,
+        use_pallas=use_fused,
+    )
+    ids = jnp.where(rows >= 0, gids.reshape(-1)[jnp.maximum(rows, 0)], -1)
+    return TopK(ids=ids, scores=scores)
+
+
+def host_first_pass_cluster_major(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    n_probe: int = 20,
+    r0: int = 4,
+    r0_centroid: int = 4,
+    refine: bool = False,
+    use_fused: bool | None = None,
+    prune_margin: float | None = None,
+    rescore_factor: int = 4,
+    block_c: int | None = None,
+    block_q: int = 8,
+) -> tuple[TopK, jnp.ndarray]:
+    """Cluster-major spelling of :func:`host_first_pass` — same
+    ``(prov, pruned)`` contract, so the serving engine's double-buffered
+    fetch->rescore pipeline works unchanged with ``block_q`` set.
+
+    Not one jit (the schedule pre-pass is host-side and data-dependent), but
+    both device stages inside it are jits, so stage-1 dispatch still returns
+    before the device finishes and the pipeline's overlap is preserved.
+    """
+    from ..kernels.schedule import build_cluster_schedule
+
+    cids, pruned = _route_pruned(
+        params, queries, n_probe=n_probe, r0_centroid=r0_centroid,
+        use_fused=use_fused, prune_margin=prune_margin, block_c=block_c,
+    )
+    sched = build_cluster_schedule(
+        np.asarray(jax.device_get(cids)), block_q=block_q
+    )
+    prov = _cluster_major_first_pass(
+        params,
+        queries,
+        cids,
+        jnp.asarray(sched.sched_cids),
+        jnp.asarray(sched.sched_qids),
+        jnp.asarray(sched.pair_step),
+        jnp.asarray(sched.pair_slot),
+        k=k,
+        r0=r0,
+        refine=refine,
+        use_fused=use_fused,
+        rescore_factor=rescore_factor,
+        block_c=block_c,
+        block_q=block_q,
+    )
+    return prov, pruned
+
+
+def _search_lider_cluster_major(
+    params: LiderParams,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    n_probe: int,
+    r0: int,
+    r0_centroid: int,
+    refine: bool,
+    use_fused: bool | None,
+    prune_margin: float | None,
+    with_stats: bool,
+    rescore_factor: int,
+    block_c: int | None,
+    block_q: int,
+) -> TopK | tuple[TopK, jnp.ndarray]:
+    """Staged cluster-major search: route (jit) -> host schedule pre-pass ->
+    grouped first pass (jit) -> exact rescore (tier-appropriate).
+
+    The schedule is data-dependent (it groups the batch's routed probe lists
+    by cluster), so it cannot live inside one jit — the same staging pattern
+    as the host-tier search. Step counts are padded to powers of two, so the
+    grouped kernel's compile count stays O(log batch-pairs).
+    """
+    bank = params.bank
+    if not bank.quantized:
+        raise ValueError(
+            "block_q (cluster-major schedule) requires a quantized "
+            "(int8/int4) bank — the grouped kernel streams code tiles; "
+            "use the per-query schedule (block_q=None) for float banks"
+        )
+    prov, pruned = host_first_pass_cluster_major(
+        params, queries, k=k, n_probe=n_probe, r0=r0,
+        r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
+        prune_margin=prune_margin, rescore_factor=rescore_factor,
+        block_c=block_c, block_q=block_q,
+    )
+    if bank.rescore_tier == "host":
+        fetched = host_fetch(params, prov.ids)
+        out = host_rescore(
+            bank.gids, jnp.asarray(fetched), prov.ids, queries, k=k,
+            use_fused=use_fused, block_c=block_c,
+        )
+    else:
+        out = _rescore_provisional(
+            bank.gids, bank.rescore_embs, prov.ids, queries, k=k,
+            use_fused=use_fused, block_c=block_c,
+        )
+    return (out, pruned) if with_stats else out
+
+
 def search_lider(
     params: LiderParams,
     queries: jnp.ndarray,
@@ -712,6 +982,7 @@ def search_lider(
     with_stats: bool = False,
     rescore_factor: int = 4,
     block_c: int | None = None,
+    block_q: int | None = None,
 ) -> TopK | tuple[TopK, jnp.ndarray]:
     """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device.
 
@@ -733,7 +1004,20 @@ def search_lider(
     process-local tier, H2D of only ``B·k'·d`` floats), jit'd fused rescore
     (:func:`host_rescore`) — returning bit-identical (ids, scores) to the
     device tier on the same bank.
+
+    ``block_q`` (quantized banks only) switches the first pass to the
+    cluster-major multi-query schedule (§Cluster-major schedule): queries
+    probing the same cluster share one DMA of its rows. Results are
+    bit-identical to the per-query schedule; only the loop order — and the
+    HBM traffic under skewed probe distributions — changes.
     """
+    if block_q is not None:
+        return _search_lider_cluster_major(
+            params, queries, k=k, n_probe=n_probe, r0=r0,
+            r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
+            prune_margin=prune_margin, with_stats=with_stats,
+            rescore_factor=rescore_factor, block_c=block_c, block_q=block_q,
+        )
     if params.bank.rescore_tier == "host":
         prov, pruned = host_first_pass(
             params, queries, k=k, n_probe=n_probe, r0=r0,

@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.quant import dequantize_rows
+from ..kernels.quant import dequantize_codes
 from . import bank as bank_lib
 from . import clustering
 from .bank import ClusterBank
@@ -105,7 +105,7 @@ def _refit_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
         # Fit on what verification scores: the dequantized stored rows —
         # identical to the rows the offline build fit (DESIGN.md §Quantized
         # bank), so online and offline fits cannot drift.
-        rows = dequantize_rows(rows, bank.emb_scales[safe])
+        rows = dequantize_codes(rows, bank.emb_scales[safe], bank.code_dtype)
     valid = bank.gids[safe] >= 0
     sk, sp, resc, rmi = jax.vmap(
         partial(bank_lib.refit_cluster, bank.lsh, n_leaves=bank.rmi.n_leaves)
@@ -319,7 +319,7 @@ def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
                 ),
                 0,
             ).astype(bank.rescore_embs.dtype)
-        fit_rows = dequantize_rows(emb_p, scl_p)
+        fit_rows = dequantize_codes(emb_p, scl_p, bank.code_dtype)
     else:
         scl_p = res_p = None
         fit_rows = emb_p

@@ -12,7 +12,15 @@
 """
 from .lsh_hash import lsh_hash
 from .kmeans_assign import kmeans_assign
-from .fused_verify import fused_verify
-from . import ops, ref
+from .fused_verify import fused_verify, fused_verify_grouped
+from . import ops, ref, schedule
 
-__all__ = ["lsh_hash", "kmeans_assign", "fused_verify", "ops", "ref"]
+__all__ = [
+    "lsh_hash",
+    "kmeans_assign",
+    "fused_verify",
+    "fused_verify_grouped",
+    "ops",
+    "ref",
+    "schedule",
+]

@@ -18,7 +18,9 @@ This kernel makes verification a single VMEM-resident pass per query:
 - scoring runs on the MXU in the embedding storage dtype (bf16 stays bf16;
   int8 code tables run **int8×int8→int32** with the per-candidate combined
   scale folded in afterwards — DESIGN.md §Quantized bank) with full-width
-  accumulation;
+  accumulation; packed int4 tables (``code_dtype="int4"``) DMA half the
+  bytes and unpack to int8 **in VMEM** (two arithmetic shifts) before the
+  same int8×int8→int32 pass — the HBM stream is 0.5 B/elem;
 - a masked **streaming top-k accumulator** lives in VMEM and merges each
   block with duplicate suppression (same semantics as
   ``core.utils.dedup_topk``: duplicates of one id carry equal scores, so
@@ -52,6 +54,31 @@ from .common import resolve_interpret
 NEG_INF = float("-inf")  # python float: jnp scalars would init the backend
 
 
+def _unpack_int4_vmem(rows: jnp.ndarray) -> jnp.ndarray:
+    """In-VMEM nibble unpack: ``(..., d//2)`` packed int8 -> ``(..., d)`` int8.
+
+    Emits the *deinterleaved* element order ``[x0, x2, ..., x1, x3, ...]``
+    (``concat([low_nibbles, high_nibbles], -1)``) — two arithmetic shifts and
+    a concat, no lane-crossing re-interleave. The query side is permuted to
+    match outside the kernel (``quant.deinterleave_query_codes``), so the
+    dot product over the full width is exact.
+    """
+    lo = jnp.right_shift(jnp.left_shift(rows, 4).astype(jnp.int8), 4)
+    hi = jnp.right_shift(rows, 4)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def _clamp_block_c(block_c: int, c: int) -> int:
+    """Effective candidate-block width: ``min(block_c, c)`` rounded down to a
+    sublane-aligned multiple of 8 (floor 8). The round-down keeps the VMEM
+    scratch and the MXU operand shapes aligned when ``c`` is not a multiple
+    of the requested ``block_c``; the wrapper pads the candidate axis up to a
+    multiple of the result, so a ragged last block is always well-formed
+    rather than relying on caller-side padding being exact.
+    """
+    return max(8, (min(block_c, c) // 8) * 8)
+
+
 def _fused_verify_kernel(
     # scalar prefetch
     row_ids_s,
@@ -64,6 +91,7 @@ def _fused_verify_kernel(
     k: int,
     n_blocks: int,
     quantized: bool,
+    code_dtype: str,
 ):
     # Quantized banks carry one extra blocked input: the (1, block_c)
     # combined per-candidate scale (row scale × query scale) folded into the
@@ -129,10 +157,13 @@ def _fused_verify_kernel(
         # with int32 accumulation on a quantized bank (the per-candidate
         # scale is folded in after, one f32 multiply per score), fp32
         # accumulation otherwise.
-        q = q_ref[...].astype(cand.dtype)  # (1, d)
+        rows = cand[slot]  # (block_c, d_store)
+        if code_dtype == "int4":
+            rows = _unpack_int4_vmem(rows)  # (block_c, d) deinterleaved
+        q = q_ref[...].astype(rows.dtype)  # (1, d)
         scores = jax.lax.dot_general(
             q,
-            cand[slot],
+            rows,
             (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.int32 if quantized else jnp.float32,
         )  # (1, block_c)
@@ -180,7 +211,9 @@ def _fused_verify_kernel(
         sc_out[...] = acc_sc[...]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_c", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_c", "code_dtype", "interpret")
+)
 def fused_verify(
     embs: jnp.ndarray,
     row_ids: jnp.ndarray,
@@ -190,6 +223,7 @@ def fused_verify(
     out_ids: jnp.ndarray | None = None,
     scales: jnp.ndarray | None = None,
     block_c: int = 256,
+    code_dtype: str = "int8",
     interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(N, d) table, (B, C) rows, (B, d) queries -> ((B, k) ids, (B, k) f32).
@@ -206,6 +240,13 @@ def fused_verify(
     score inside the merge — candidate row traffic drops to 1 byte/elem
     while dedup/top-k semantics are unchanged.
 
+    With ``code_dtype="int4"`` (requires ``scales``), ``embs`` is a *packed*
+    int4 code table of width ``d//2`` (two nibbles per byte —
+    ``quant.pack_int4``): row DMAs move half the bytes again (0.5 B/elem),
+    the block is unpacked to int8 in VMEM, and the query codes are
+    deinterleaved outside the kernel so the same int8×int8→int32 MXU pass
+    applies unchanged.
+
     Blocks whose candidates are *all* invalid — e.g. every probe feeding them
     was pruned by the adaptive margin rule, or they are pure C-padding — are
     skipped entirely (no DMA, no MXU pass): a per-block valid count rides the
@@ -213,15 +254,20 @@ def fused_verify(
     Output is bit-identical with or without skipping (dead candidates score
     -inf either way); an all-invalid row returns all (-1, -inf).
     """
-    from .quant import quantize_rows
+    from .quant import deinterleave_query_codes, quantize_rows
 
     interpret = resolve_interpret(interpret)
     if out_ids is None:
         out_ids = row_ids
     quantized = scales is not None
+    if code_dtype not in ("int8", "int4"):
+        raise ValueError(f"code_dtype must be 'int8' or 'int4', got {code_dtype!r}")
+    if code_dtype == "int4" and not quantized:
+        raise ValueError("code_dtype='int4' requires scales (a packed code table)")
     b, c = row_ids.shape
-    n, d = embs.shape
-    bc = min(block_c, c)
+    n, d = embs.shape  # d is the STORED width (d_model//2 for packed int4)
+    d_q = d * 2 if code_dtype == "int4" else d  # query/logical width
+    bc = _clamp_block_c(block_c, c)
     pad = (-c) % bc
     if pad:
         row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)))
@@ -237,12 +283,17 @@ def fused_verify(
     idx_q = lambda bi, cj, ids, live: (bi, 0)
     idx_blk = lambda bi, cj, ids, live: (bi, cj)
     in_specs = [
-        pl.BlockSpec((1, d), idx_q),
+        pl.BlockSpec((1, d_q), idx_q),
         pl.BlockSpec((1, bc), idx_blk),
     ]
     inputs = [queries, out_ids]
     if quantized:
         q_codes, q_scales = quantize_rows(queries)
+        if code_dtype == "int4":
+            # Match the kernel's concat([lo, hi]) unpack order (see
+            # _unpack_int4_vmem) — queries stay int8-quantized, only their
+            # element order changes, so the int32 dot is still exact.
+            q_codes = deinterleave_query_codes(q_codes)
         inputs[0] = q_codes
         # Combined per-candidate scale, gathered outside the kernel: O(B·C)
         # f32 against the O(B·C·d) row bytes the int8 path saves. Invalid
@@ -275,6 +326,7 @@ def fused_verify(
             k=k,
             n_blocks=n_blocks,
             quantized=quantized,
+            code_dtype=code_dtype,
         ),
         grid_spec=grid_spec,
         out_shape=[
@@ -283,4 +335,249 @@ def fused_verify(
         ],
         interpret=interpret,
     )(safe_rows, blk_live, *inputs)
+    return ids, scores
+
+
+# ---------------------------------------------------------------------------
+# Cluster-major multi-query schedule (DESIGN.md §Cluster-major schedule)
+# ---------------------------------------------------------------------------
+
+
+def _fused_verify_grouped_kernel(
+    # scalar prefetch
+    sched_cids_s,
+    blk_live_s,
+    # blocked inputs
+    emb_ref,  # (1, bc, d_store) — steered to cluster sched_cids[s], block j
+    scl_ref,  # (1, bc) per-row scales of the same block
+    q_ref,  # (1, block_q, d_q) query-code tile of step s
+    qscl_ref,  # (1, block_q) query scales of step s
+    oid_ref,  # (1, block_q, bc) per-(slot, row) candidate ids (-1 = not cand)
+    # outputs
+    ids_out,
+    sc_out,
+    # scratch
+    acc_ids,
+    acc_sc,
+    *,
+    block_q: int,
+    kp: int,
+    n_blocks: int,
+    code_dtype: str,
+):
+    s = pl.program_id(0)
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _():
+        acc_sc[...] = jnp.full_like(acc_sc, NEG_INF)
+        acc_ids[...] = jnp.full_like(acc_ids, -1)
+
+    # Dead step-blocks (no candidate of any query in this tile touches these
+    # rows — e.g. pruned probes or schedule padding) skip the MXU pass; the
+    # block's rows still stream through the automatic pipeline, but scoring
+    # and the k' merge are the dominant per-block cost at block_q > 1.
+    @pl.when(blk_live_s[s, cj] > 0)
+    def _():
+        rows = emb_ref[0]  # (bc, d_store)
+        if code_dtype == "int4":
+            rows = _unpack_int4_vmem(rows)  # (bc, d) deinterleaved
+        qt = q_ref[0].astype(rows.dtype)  # (block_q, d)
+        # ONE MXU pass scores the whole query tile against the resident
+        # cluster block — this is the DMA-sharing win: per-query scheduling
+        # would re-stream these rows once per query in the tile.
+        int_scores = jax.lax.dot_general(
+            qt,
+            rows,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (block_q, bc)
+        # Combined scale as an in-kernel outer product (f32 multiply is
+        # commutative, so this is bit-identical to the per-query path's
+        # pre-gathered row×query scale).
+        comb = qscl_ref[0][:, None] * scl_ref[0][None, :]
+        scores = int_scores.astype(jnp.float32) * comb
+        oid = oid_ref[0]  # (block_q, bc)
+        scores = jnp.where(oid >= 0, scores, NEG_INF)
+
+        # Row-vectorized streaming top-k' merge: same selection order and
+        # smallest-id tie-break as the per-query kernel / dedup_topk, applied
+        # to all block_q slots at once.
+        csc0 = jnp.concatenate([acc_sc[...], scores], axis=1)  # (bq, kp+bc)
+        cid0 = jnp.concatenate([acc_ids[...], oid], axis=1)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (block_q, kp), 1)
+
+        def sel_body(i, carry):
+            csc, asc, aid = carry
+            m = jnp.max(csc, axis=1, keepdims=True)  # (bq, 1)
+            tie = csc == m
+            sid = jnp.min(
+                jnp.where(tie, cid0, jnp.int32(2**31 - 1)),
+                axis=1,
+                keepdims=True,
+            )
+            sid = jnp.where(jnp.isneginf(m), jnp.int32(-1), sid).astype(
+                jnp.int32
+            )
+            kill = (cid0 == sid) & (sid >= 0)
+            csc = jnp.where(kill, NEG_INF, csc)
+            asc = jnp.where(iota_k == i, m, asc)
+            aid = jnp.where(iota_k == i, sid, aid)
+            return csc, asc, aid
+
+        init = (
+            csc0,
+            jnp.full((block_q, kp), NEG_INF, jnp.float32),
+            jnp.full((block_q, kp), -1, jnp.int32),
+        )
+        _, asc, aid = jax.lax.fori_loop(0, kp, sel_body, init)
+        acc_sc[...] = asc
+        acc_ids[...] = aid
+
+    @pl.when(cj == n_blocks - 1)
+    def _():
+        ids_out[0] = acc_ids[...]
+        sc_out[0] = acc_sc[...]
+
+
+def _grouped_block_c(block_c: int, lp: int) -> int:
+    """Cluster-row tile width for the grouped kernel: the largest multiple
+    of 8 that DIVIDES ``lp`` and is <= min(block_c, lp). ``lp`` (the bank
+    slot capacity) is always a multiple of 8 (``pad_multiple``), so a
+    sublane-aligned divisor exists and no table padding is ever needed —
+    the BlockSpec can slice ``embs[(cid, j)]`` directly. Falls back to any
+    divisor for oddly-shaped test tables.
+    """
+    cap = min(block_c, lp)
+    for v in range(cap - cap % 8, 7, -8):
+        if lp % v == 0:
+            return v
+    for v in range(cap, 0, -1):
+        if lp % v == 0:
+            return v
+    return lp
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kp", "block_q", "block_c", "code_dtype", "interpret"),
+)
+def fused_verify_grouped(
+    embs: jnp.ndarray,
+    row_scales: jnp.ndarray,
+    queries: jnp.ndarray,
+    sched_cids: jnp.ndarray,
+    sched_qids: jnp.ndarray,
+    step_slot_ids: jnp.ndarray,
+    *,
+    kp: int,
+    block_q: int,
+    block_c: int = 256,
+    code_dtype: str = "int8",
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Cluster-major first pass: one cluster DMA serves a whole query tile.
+
+    The per-query ``fused_verify`` grid re-streams a cluster's rows once per
+    (query, probe) that touches it. This kernel flips the grid to
+    **cluster-major**: a host pre-pass (``schedule.build_cluster_schedule``)
+    groups the batch's (query, probe) pairs by cluster into steps of
+    ``block_q`` query slots, and each grid step streams one ``block_c`` row
+    tile of ONE cluster and scores it against the step's whole query tile on
+    the MXU — under skewed (Zipf) probe traffic the same rows serve many
+    queries per DMA (DESIGN.md §Cluster-major schedule).
+
+    Quantized banks only (int8 / packed int4 codes + per-row scales):
+
+    - ``embs``: ``(c, Lp, d_store)`` stored codes (``d_store = d//2`` packed
+      int4); ``row_scales``: ``(c, Lp)`` f32.
+    - ``sched_cids``: ``(S,)`` int32 — the cluster each step scores.
+    - ``sched_qids``: ``(S, block_q)`` int32 — query per tile slot (-1 pad).
+    - ``step_slot_ids``: ``(S, block_q, Lp)`` int32 — per (step, slot,
+      cluster row) the id to report, or -1 where that row is not a candidate
+      of that query (the dense union of the pair's H·R window candidates —
+      duplicates collapse for free).
+
+    Returns ``(ids, scores)`` of shape ``(S, block_q, kp)``: each (query,
+    cluster) pair's dedup-top-k' *within that cluster*, same ordering and
+    tie-break as ``fused_verify``. Because every global top-k' winner from a
+    cluster is inside its pair's per-cluster top-k', scattering these back
+    per query and merging with ``dedup_topk`` reproduces the per-query
+    schedule's provisional top-k' bit-exactly (tests/test_fused_verify.py).
+
+    Rows are streamed by BlockSpec index maps steered with the
+    scalar-prefetched ``sched_cids`` — cluster rows are contiguous in
+    ``embs``, so the automatic pipeline double-buffers tiles with no manual
+    DMA loop.
+    """
+    from .quant import deinterleave_query_codes, quantize_rows
+
+    interpret = resolve_interpret(interpret)
+    if code_dtype not in ("int8", "int4"):
+        raise ValueError(f"code_dtype must be 'int8' or 'int4', got {code_dtype!r}")
+    c, lp, d_store = embs.shape
+    s_steps = sched_cids.shape[0]
+    d_q = d_store * 2 if code_dtype == "int4" else d_store
+    bc = _grouped_block_c(block_c, lp)
+    n_blocks = lp // bc
+
+    q_codes, q_scales = quantize_rows(queries)
+    if code_dtype == "int4":
+        q_codes = deinterleave_query_codes(q_codes)
+    safe_q = jnp.maximum(sched_qids, 0)
+    q_tiles = q_codes[safe_q]  # (S, block_q, d_q)
+    # Pad slots get scale 1.0 (their candidates are all -1 -> -inf anyway).
+    qscl_tiles = jnp.where(sched_qids >= 0, q_scales[safe_q], 1.0).astype(
+        jnp.float32
+    )
+    step_slot_ids = step_slot_ids.astype(jnp.int32)
+    sched_cids = jnp.clip(sched_cids, 0, c - 1).astype(jnp.int32)
+    # Per-(step, block) candidate counts: a block is dead if no query in the
+    # tile has a candidate among its rows.
+    blk_live = jnp.sum(
+        (step_slot_ids >= 0).reshape(s_steps, block_q, n_blocks, bc),
+        axis=(1, 3),
+        dtype=jnp.int32,
+    )
+
+    idx_emb = lambda s, j, cids, live: (cids[s], j, 0)
+    idx_scl = lambda s, j, cids, live: (cids[s], j)
+    idx_step = lambda s, j, cids, live: (s, 0, 0)
+    idx_qscl = lambda s, j, cids, live: (s, 0)
+    idx_oid = lambda s, j, cids, live: (s, 0, j)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s_steps, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bc, d_store), idx_emb),
+            pl.BlockSpec((1, bc), idx_scl),
+            pl.BlockSpec((1, block_q, d_q), idx_step),
+            pl.BlockSpec((1, block_q), idx_qscl),
+            pl.BlockSpec((1, block_q, bc), idx_oid),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, kp), idx_step),
+            pl.BlockSpec((1, block_q, kp), idx_step),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, kp), jnp.int32),
+            pltpu.VMEM((block_q, kp), jnp.float32),
+        ],
+    )
+    ids, scores = pl.pallas_call(
+        functools.partial(
+            _fused_verify_grouped_kernel,
+            block_q=block_q,
+            kp=kp,
+            n_blocks=n_blocks,
+            code_dtype=code_dtype,
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((s_steps, block_q, kp), jnp.int32),
+            jax.ShapeDtypeStruct((s_steps, block_q, kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sched_cids, blk_live, embs, row_scales, q_tiles, qscl_tiles, step_slot_ids)
     return ids, scores

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .common import on_tpu as _on_tpu
-from .fused_verify import fused_verify
+from .fused_verify import fused_verify, fused_verify_grouped
 from .kmeans_assign import kmeans_assign
 from .lsh_hash import lsh_hash
 
@@ -51,6 +51,7 @@ def verify_topk_op(
     out_ids: jnp.ndarray | None = None,
     scales: jnp.ndarray | None = None,
     block_c: int | None = None,
+    code_dtype: str = "int8",
     use_pallas: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Candidate verification -> deduplicated top-k, (B, k) ids + scores.
@@ -62,9 +63,11 @@ def verify_topk_op(
     semantics — dedup by ``out_ids`` (< 0 == padding), descending scores,
     (-1, -inf) fill past the unique-valid count.
 
-    ``scales`` ((N,) f32) marks ``embs`` as an int8 code table with per-row
-    symmetric scales; both paths then score int8×int8→int32 with the
-    combined scale folded in afterwards (DESIGN.md §Quantized bank).
+    ``scales`` ((N,) f32) marks ``embs`` as a quantized code table with
+    per-row symmetric scales; both paths then score int8×int8→int32 with
+    the combined scale folded in afterwards (DESIGN.md §Quantized bank).
+    ``code_dtype="int4"`` marks the table as *packed* int4 (width d//2;
+    unpacked in VMEM by the kernel / on gather by the reference).
     ``block_c`` is the kernel's candidate-block size (None -> the kernel
     default) — a tunable the Pareto autotuner sweeps.
     """
@@ -79,8 +82,66 @@ def verify_topk_op(
             out_ids=out_ids,
             scales=scales,
             block_c=block_c if block_c is not None else 256,
+            code_dtype=code_dtype,
             interpret=not _on_tpu(),
         )
     return ref.verify_topk_ref(
-        embs, row_ids, queries, k=k, out_ids=out_ids, scales=scales
+        embs,
+        row_ids,
+        queries,
+        k=k,
+        out_ids=out_ids,
+        scales=scales,
+        code_dtype=code_dtype,
+    )
+
+
+def verify_topk_grouped_op(
+    embs: jnp.ndarray,
+    row_scales: jnp.ndarray,
+    queries: jnp.ndarray,
+    sched_cids: jnp.ndarray,
+    sched_qids: jnp.ndarray,
+    step_slot_ids: jnp.ndarray,
+    *,
+    kp: int,
+    block_q: int,
+    block_c: int | None = None,
+    code_dtype: str = "int8",
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Cluster-major verification -> per-(step, slot) dedup top-k'.
+
+    Pallas: ``fused_verify_grouped`` — each grid step streams ONE cluster's
+    rows once and scores them against a ``block_q`` query tile, so queries
+    probing the same cluster share its DMA (DESIGN.md §Cluster-major
+    schedule). Reference: ``ref.verify_topk_grouped_ref``. The schedule
+    arrays come from ``schedule.build_cluster_schedule``; quantized banks
+    only (``row_scales`` required, ``code_dtype`` int8/int4).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return fused_verify_grouped(
+            embs,
+            row_scales,
+            queries,
+            sched_cids,
+            sched_qids,
+            step_slot_ids,
+            kp=kp,
+            block_q=block_q,
+            block_c=block_c if block_c is not None else 256,
+            code_dtype=code_dtype,
+            interpret=not _on_tpu(),
+        )
+    return ref.verify_topk_grouped_ref(
+        embs,
+        row_scales,
+        queries,
+        sched_cids,
+        sched_qids,
+        step_slot_ids,
+        kp=kp,
+        code_dtype=code_dtype,
     )

@@ -1,4 +1,5 @@
-"""Per-row symmetric int8 quantization (the bank storage scheme).
+"""Per-row symmetric int8 / packed int4 quantization (the bank storage
+schemes).
 
 One scheme, one home: the quantized :class:`~repro.core.bank.ClusterBank`
 representation, the fused kernel's query-side quantization, and the CPU
@@ -18,12 +19,22 @@ and a dot product of two quantized rows is exact int arithmetic:
 The scheme is *stateless per row* — no global calibration — which is what
 makes incremental upsert exactly equivalent to a full rebuild: quantizing a
 row depends on nothing but the row.
+
+int4 (``storage_dtype="int4"``) is the same scheme at 4-bit resolution:
+``scale = max|x|/7``, codes in [-7, 7], packed two-nibbles-per-byte into an
+int8 carrier of width ``d//2`` (element ``2j`` in the low nibble of byte
+``j``, element ``2j+1`` in the high nibble). Unpacking is two arithmetic
+shifts per byte, which the fused kernel performs in VMEM — the HBM stream
+stays at 0.5 B/elem. Queries are never stored, so the query side of an int4
+dot product keeps the int8 scheme: the MXU pass is still int8×int8→int32
+(exact), only the *table* side carries 4-bit resolution.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 INT8_MAX = 127.0
+INT4_MAX = 7.0
 
 
 def quantize_rows(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -51,3 +62,86 @@ def quantize_rows(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
 def dequantize_rows(codes: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
     """Inverse of :func:`quantize_rows` (up to rounding): f32 rows."""
     return codes.astype(jnp.float32) * scales[..., None].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# int4: the same per-row symmetric scheme at 4-bit, packed 2 nibbles/byte
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """``(..., d)`` int8 codes in [-8, 7] -> ``(..., d//2)`` packed int8.
+
+    Byte ``j`` carries element ``2j`` in its low nibble and element ``2j+1``
+    in its high nibble (two's-complement nibbles). ``d`` must be even.
+    """
+    if codes.shape[-1] % 2:
+        raise ValueError(
+            f"int4 packing needs an even row width, got d={codes.shape[-1]}"
+        )
+    lo = jnp.bitwise_and(codes[..., 0::2], jnp.int8(0x0F))
+    hi = jnp.left_shift(codes[..., 1::2], 4).astype(jnp.int8)
+    return jnp.bitwise_or(hi, lo).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """``(..., d//2)`` packed int8 -> ``(..., d)`` int8 codes in [-8, 7].
+
+    Arithmetic shifts recover the signed nibbles: ``lo = (b << 4) >> 4``,
+    ``hi = b >> 4`` (jnp right shifts are arithmetic on signed ints).
+    Exact inverse of :func:`pack_int4`.
+    """
+    packed = packed.astype(jnp.int8)
+    lo = jnp.right_shift(jnp.left_shift(packed, 4).astype(jnp.int8), 4)
+    hi = jnp.right_shift(packed, 4)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def quantize_rows_int4(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``(..., d)`` float -> (packed codes ``(..., d//2)`` int8, scales f32).
+
+    Per-row symmetric scaling to ±7 with the identical pre-rounded-reciprocal
+    trick as :func:`quantize_rows` (``amax * float32(1/7)``), so the eager
+    offline build and the jit'd upsert append quantize bit-identically.
+    All-zero rows get scale 1.0 and pack to exact zero bytes.
+    """
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scales = jnp.where(
+        amax > 0, amax * jnp.float32(1.0 / INT4_MAX), 1.0
+    ).astype(jnp.float32)
+    codes = jnp.clip(
+        jnp.round(x / scales[..., None]), -INT4_MAX, INT4_MAX
+    ).astype(jnp.int8)
+    return pack_int4(codes), scales
+
+
+def dequantize_rows_int4(packed: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_rows_int4` (up to rounding): f32 rows."""
+    return dequantize_rows(unpack_int4(packed), scales)
+
+
+def dequantize_codes(
+    codes: jnp.ndarray, scales: jnp.ndarray, code_dtype: str = "int8"
+) -> jnp.ndarray:
+    """Dequantize stored bank codes, dispatching on the code dtype.
+
+    The one helper the fit paths (build / refit / compaction) call so they
+    never need to know whether ``ClusterBank.embs`` holds int8 codes or
+    packed int4 nibbles.
+    """
+    if code_dtype == "int4":
+        return dequantize_rows_int4(codes, scales)
+    return dequantize_rows(codes, scales)
+
+
+def deinterleave_query_codes(q_codes: jnp.ndarray) -> jnp.ndarray:
+    """Reorder query codes to match in-VMEM int4 unpacking.
+
+    The fused kernel unpacks a packed block as ``concat([low_nibbles,
+    high_nibbles], -1)`` — i.e. ``[x0, x2, ..., x1, x3, ...]`` — instead of
+    re-interleaving along the minor axis (a lane-crossing shuffle the VPU
+    would pay for). Deinterleaving the *query* outside the kernel makes the
+    dot product exact against that layout: ``concat([q_even, q_odd], -1)``.
+    """
+    return jnp.concatenate([q_codes[..., 0::2], q_codes[..., 1::2]], axis=-1)

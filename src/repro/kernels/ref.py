@@ -44,6 +44,7 @@ def verify_topk_ref(
     k: int,
     out_ids: jnp.ndarray | None = None,
     scales: jnp.ndarray | None = None,
+    code_dtype: str = "int8",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Materialize-then-einsum verification: the oracle for ``fused_verify``.
 
@@ -60,18 +61,25 @@ def verify_topk_ref(
     (row × query) is folded in as a single f32 multiply — the identical op
     sequence to the fused kernel's quantized path, so ids match exactly.
 
+    ``code_dtype="int4"`` (with ``scales``): ``embs`` is a packed int4 table
+    (width d//2); candidates are unpacked to int8 here in natural element
+    order — int32 accumulation is exact regardless of summation order, so
+    this matches the kernel's deinterleaved in-VMEM unpack bit-for-bit.
+
     Block-skip semantics mirror: the fused kernel skips blocks whose
     candidates are all invalid (adaptive probe pruning); here they are
     simply scored -inf — the outputs are bit-identical, including the
     all-candidates-invalid row, which returns all (-1, -inf).
     """
     from ..core.utils import NEG_INF, dedup_topk
-    from .quant import quantize_rows
+    from .quant import quantize_rows, unpack_int4
 
     if out_ids is None:
         out_ids = row_ids
     safe = jnp.maximum(row_ids, 0)
     cand = embs[safe]  # (B, C, d) — the materialization being eliminated
+    if scales is not None and code_dtype == "int4":
+        cand = unpack_int4(cand)
     if scales is None:
         scores = jnp.einsum(
             "bcd,bd->bc",
@@ -88,3 +96,53 @@ def verify_topk_ref(
         scores = int_scores.astype(jnp.float32) * comb
     scores = jnp.where(out_ids < 0, NEG_INF, scores)
     return dedup_topk(out_ids, scores, k)
+
+
+def verify_topk_grouped_ref(
+    embs: jnp.ndarray,
+    row_scales: jnp.ndarray,
+    queries: jnp.ndarray,
+    sched_cids: jnp.ndarray,
+    sched_qids: jnp.ndarray,
+    step_slot_ids: jnp.ndarray,
+    *,
+    kp: int,
+    code_dtype: str = "int8",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialized oracle for ``fused_verify_grouped`` (identical signature
+    semantics; see that docstring for the schedule-array contract).
+
+    Gathers each step's whole cluster ``(S, Lp, d)``, scores it against the
+    step's query tile with exact int8×int8→int32 accumulation, folds the
+    (query × row) scale product, masks non-candidates via ``step_slot_ids``,
+    and dedup-top-k's each (step, slot) stream — the same math in
+    materialized form, so ids AND scores match the kernel bit-for-bit.
+    """
+    from ..core.utils import NEG_INF, dedup_topk
+    from .quant import quantize_rows, unpack_int4
+
+    c = embs.shape[0]
+    s_steps, block_q, lp = step_slot_ids.shape
+    safe_c = jnp.clip(sched_cids, 0, c - 1)
+    rows = embs[safe_c]  # (S, Lp, d_store)
+    if code_dtype == "int4":
+        rows = unpack_int4(rows)
+    q_codes, q_scales = quantize_rows(queries)
+    safe_q = jnp.maximum(sched_qids, 0)
+    qt = q_codes[safe_q]  # (S, block_q, d) — natural order; int32 dot exact
+    qscl = jnp.where(sched_qids >= 0, q_scales[safe_q], 1.0).astype(jnp.float32)
+    int_scores = jnp.einsum(
+        "sqd,sld->sql", qt, rows, preferred_element_type=jnp.int32
+    )
+    comb = qscl[:, :, None] * row_scales[safe_c][:, None, :].astype(jnp.float32)
+    scores = int_scores.astype(jnp.float32) * comb
+    scores = jnp.where(step_slot_ids >= 0, scores, NEG_INF)
+    ids, scores = dedup_topk(
+        step_slot_ids.reshape(s_steps * block_q, lp),
+        scores.reshape(s_steps * block_q, lp),
+        kp,
+    )
+    return (
+        ids.reshape(s_steps, block_q, kp),
+        scores.reshape(s_steps, block_q, kp),
+    )

@@ -61,22 +61,22 @@ def main() -> None:
     )
     ap.add_argument(
         "--storage-dtype",
-        choices=["float32", "bfloat16", "int8"],
+        choices=["float32", "bfloat16", "int8", "int4"],
         default="float32",
         help="embedding storage dtype for the LIDER bank (DESIGN.md "
-        "§Quantized bank); int8 adds an exact rescore of the provisional "
-        "top-(rescore_factor*k)",
+        "§Quantized bank); int8/int4 add an exact rescore of the "
+        "provisional top-(rescore_factor*k); int4 packs two codes per byte",
     )
     ap.add_argument(
         "--rescore-factor", type=int, default=4,
         help="k' = rescore_factor * k provisional candidates exactly "
-        "rescored on int8 banks (LIDER only)",
+        "rescored on quantized (int8/int4) banks (LIDER only)",
     )
     ap.add_argument(
         "--rescore-tier",
         choices=["device", "host"],
         default=None,
-        help="where the int8 bank's full-precision rescore table lives "
+        help="where the quantized bank's full-precision rescore table lives "
         "(DESIGN.md §Tiered embedding store): device (resident next to the "
         "codes) or host (process-local RAM; the engine pipelines the "
         "fetch->rescore stages). Default: device on build, the saved tier "
@@ -86,6 +86,12 @@ def main() -> None:
         "--block-c", type=int, default=None,
         help="verification-kernel candidate block size (default: kernel "
         "default, 256)",
+    )
+    ap.add_argument(
+        "--block-q", type=int, default=None,
+        help="cluster-major query-tile width: queries probing the same "
+        "cluster share one DMA of its rows (quantized banks only; "
+        "DESIGN.md §Cluster-major schedule). Default: per-query schedule",
     )
     ap.add_argument(
         "--use-fused",
@@ -138,12 +144,20 @@ def main() -> None:
         raise SystemExit("--rescore-tier needs --backend lider")
     if (
         args.rescore_tier == "host"
-        and args.storage_dtype != "int8"
+        and args.storage_dtype not in ("int8", "int4")
         and not args.load_index
     ):
         # Build path only: a loaded checkpoint carries its own storage dtype
         # (load_index validates the tier against it).
-        raise SystemExit("--rescore-tier host needs --storage-dtype int8")
+        raise SystemExit("--rescore-tier host needs --storage-dtype int8/int4")
+    if args.block_q is not None and args.backend != "lider":
+        raise SystemExit("--block-q needs --backend lider")
+    if (
+        args.block_q is not None
+        and args.storage_dtype not in ("int8", "int4")
+        and not args.load_index
+    ):
+        raise SystemExit("--block-q needs --storage-dtype int8/int4")
     if not 0.0 <= args.update_fraction < 1.0:
         raise SystemExit("--update-fraction must be in [0, 1)")
 
@@ -223,6 +237,7 @@ def main() -> None:
             refine=args.refine,
             rescore_factors=(args.rescore_factor,),
             block_cs=(args.block_c,),
+            block_qs=(args.block_q,),
         )
         t0 = time.time()
         results = pareto_lib.sweep(
@@ -242,7 +257,7 @@ def main() -> None:
         "lider": dict(
             n_probe=n_probe, refine=args.refine, use_fused=use_fused,
             prune_margin=prune_margin, rescore_factor=args.rescore_factor,
-            block_c=args.block_c,
+            block_c=args.block_c, block_q=args.block_q,
         ),
         "ivfpq": dict(n_probe=args.n_probe),
         "mplsh": dict(n_probe=args.n_probe),
@@ -376,6 +391,7 @@ def main() -> None:
             "recompiles": engine.recompiles,
             "recall_at_k": float(rec),
             "k": args.k,
+            "block_q": args.block_q,
             "tier_bytes": tier_bytes,
             # Fault-tolerance accounting (DESIGN.md §Failure model).
             "n_update_rollbacks": s.n_update_rollbacks,

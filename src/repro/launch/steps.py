@@ -526,22 +526,29 @@ def lider_param_structs(
     """Abstract LiderParams for the dry-run (no 38 GB corpus allocation).
 
     ``storage_dtype`` (default: the arch config's ``lider.storage_dtype``)
-    shapes the bank's storage representation; "int8" adds the abstract
-    ``emb_scales``/``rescore_embs`` leaves so the quantized sharded search
-    lowers and compiles in the dry-run (DESIGN.md §Quantized bank).
+    shapes the bank's storage representation; "int8" / "int4" add the
+    abstract ``emb_scales``/``rescore_embs`` leaves so the quantized sharded
+    search lowers and compiles in the dry-run (DESIGN.md §Quantized bank) —
+    int4 codes are packed two per byte, so the abstract ``embs`` leaf is
+    (c, Lp, d//2) int8.
 
-    ``rescore_tier="host"`` (int8 only) attaches an *abstract* host-tier
-    ``EmbStore`` instead of the ``rescore_embs`` leaf — the pytree the jit'd
-    device program sees shrinks to codes + scales, which is exactly what the
-    dry-run's ``memory_analysis`` / per-tier accounting should reflect
-    (DESIGN.md §Tiered embedding store).
+    ``rescore_tier="host"`` (quantized only) attaches an *abstract*
+    host-tier ``EmbStore`` instead of the ``rescore_embs`` leaf — the pytree
+    the jit'd device program sees shrinks to codes + scales, which is
+    exactly what the dry-run's ``memory_analysis`` / per-tier accounting
+    should reflect (DESIGN.md §Tiered embedding store).
     """
     cfg: lider_lib.LiderConfig = rcfg.lider
     storage_dtype = storage_dtype or cfg.storage_dtype
     rescore_tier = rescore_tier or cfg.rescore_tier
-    if rescore_tier == "host" and storage_dtype != "int8":
-        raise ValueError("rescore_tier='host' requires storage_dtype='int8'")
+    quantized = storage_dtype in ("int8", "int4")
+    if rescore_tier == "host" and not quantized:
+        raise ValueError(
+            "rescore_tier='host' requires storage_dtype='int8' or 'int4'"
+        )
     c, d, lp = cfg.n_clusters, rcfg.dim, rcfg.capacity
+    if storage_dtype == "int4" and d % 2:
+        raise ValueError(f"int4 packing requires even dim, got d={d}")
     h, hc = cfg.n_arrays, cfg.n_arrays_centroid
     m, mc = cfg.key_len, cfg.key_len_centroid
     w, wc = cfg.n_leaves, cfg.n_leaves_centroid
@@ -585,26 +592,25 @@ def lider_param_structs(
             sorted_keys=SDS((c, h, lp), jnp.uint32),
             sorted_pos=SDS((c, h, lp), jnp.int32),
             embs=SDS(
-                (c, lp, d),
-                jnp.int8 if storage_dtype == "int8" else emb_dtype,
+                (c, lp, d // 2 if storage_dtype == "int4" else d),
+                jnp.int8 if quantized else emb_dtype,
             ),
             gids=SDS((c, lp), jnp.int32),
             sizes=SDS((c,), jnp.int32),
             tombstones=SDS((c,), jnp.int32),
             next_gid=SDS((), jnp.int32),
-            emb_scales=(
-                SDS((c, lp), jnp.float32) if storage_dtype == "int8" else None
-            ),
+            emb_scales=(SDS((c, lp), jnp.float32) if quantized else None),
             rescore_embs=(
                 SDS((c, lp, d), emb_dtype)
-                if storage_dtype == "int8" and rescore_tier == "device"
+                if quantized and rescore_tier == "device"
                 else None
             ),
             store=(
                 bank_lib.EmbStore("host", shape=(c, lp, d))
-                if storage_dtype == "int8" and rescore_tier == "host"
+                if quantized and rescore_tier == "host"
                 else None
             ),
+            code_dtype=storage_dtype if quantized else "int8",
         ),
     )
 
@@ -623,11 +629,12 @@ def _lider_flops(rcfg, batch: int) -> float:
 
 
 def lider_tier_memory(rcfg) -> dict:
-    """Per-tier index bytes for the three storage configs the memory story
-    compares at this arch's shape: f32 (the baseline), int8 with a
-    device-resident rescore table (PR-4 layout — *more* HBM than f32), and
-    int8 with the host tier (codes + scales only on device). Asserts the
-    tiering actually pays: int8+host device bytes must drop vs both."""
+    """Per-tier index bytes for the storage configs the memory story
+    compares at this arch's shape: f32 (the baseline), int8/int4 with a
+    device-resident rescore table (*more* HBM than f32), and int8/int4 with
+    the host tier (codes + scales only on device). Asserts the tiering
+    actually pays: quantized+host device bytes must drop vs both, and the
+    packed int4 codes must halve the code table vs int8+host."""
     variants = {
         "float32_device": lider_param_structs(
             rcfg, storage_dtype="float32", rescore_tier="device"
@@ -638,6 +645,12 @@ def lider_tier_memory(rcfg) -> dict:
         "int8_host": lider_param_structs(
             rcfg, storage_dtype="int8", rescore_tier="host"
         ),
+        "int4_device": lider_param_structs(
+            rcfg, storage_dtype="int4", rescore_tier="device"
+        ),
+        "int4_host": lider_param_structs(
+            rcfg, storage_dtype="int4", rescore_tier="host"
+        ),
     }
     out = {name: p.bank.nbytes_by_tier() for name, p in variants.items()}
     assert out["int8_host"]["device"] < out["int8_device"]["device"], (
@@ -645,6 +658,9 @@ def lider_tier_memory(rcfg) -> dict:
     )
     assert out["int8_host"]["device"] < out["float32_device"]["device"], (
         "int8+host must beat the f32 device footprint"
+    )
+    assert out["int4_host"]["device"] < out["int8_host"]["device"], (
+        "packed int4 codes must shrink the device-resident index vs int8"
     )
     return out
 

@@ -16,6 +16,7 @@ import collections
 import dataclasses
 import random
 import time
+from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -149,7 +150,10 @@ EVICTED = _EvictedType()
 # control-plane axes; anything else in a rung dict — e.g. the modeled
 # ``expected_recall`` floor — is bench/report metadata the engine ignores).
 _POINT_KEYS = frozenset(
-    {"n_probe", "r0", "prune_margin", "refine", "rescore_factor", "block_c"}
+    {
+        "n_probe", "r0", "prune_margin", "refine", "rescore_factor",
+        "block_c", "block_q",
+    }
 )
 
 
@@ -185,7 +189,7 @@ class DegradePolicy:
 _BACKEND_KWARGS: dict[str, frozenset[str]] = {
     "lider": frozenset({
         "n_probe", "r0", "refine", "use_fused", "prune_margin",
-        "rescore_factor", "block_c",
+        "rescore_factor", "block_c", "block_q",
     }),
     "flat": frozenset(),
     "pq": frozenset(),
@@ -254,6 +258,7 @@ def make_backend(
                 with_stats=margin is not None,
                 rescore_factor=eff.get("rescore_factor", 4),
                 block_c=eff.get("block_c"),
+                block_q=eff.get("block_q"),
             )
 
         lider_search.accepts_point = True
@@ -267,7 +272,19 @@ def make_backend(
             def host_stage1(params, q, k, point=None):
                 eff = _effective(point)
                 margin = eff.get("prune_margin")
-                prov, pruned = lider_lib.host_first_pass(
+                block_q = eff.get("block_q")
+                # block_q flips stage 1 to the cluster-major spelling; the
+                # (prov, pruned) contract — and therefore the fetch/rescore
+                # pipeline downstream — is identical.
+                stage1_fn = (
+                    lider_lib.host_first_pass
+                    if block_q is None
+                    else partial(
+                        lider_lib.host_first_pass_cluster_major,
+                        block_q=block_q,
+                    )
+                )
+                prov, pruned = stage1_fn(
                     params,
                     q,
                     k=k,

@@ -342,14 +342,15 @@ def _load_index_dir(d: str, *, rescore_tier: str | None = None) -> Any:
         sorted_keys=leaf("centroid_cm", "sorted_keys"),
         sorted_ids=leaf("centroid_cm", "sorted_ids"),
     )
-    quantized = meta.get("storage_dtype", "float32") == "int8"
+    storage_dtype = meta.get("storage_dtype", "float32")
+    quantized = storage_dtype in ("int8", "int4")
     tier = rescore_tier or meta.get("rescore_tier", "device")
     if tier not in ("device", "host"):
         raise ValueError(f"rescore_tier must be 'device' or 'host', got {tier!r}")
     if tier == "host" and not quantized:
         raise ValueError(
-            "rescore_tier='host' requires an int8 index (float banks have "
-            "no rescore table)"
+            "rescore_tier='host' requires a quantized (int8/int4) index "
+            "(float banks have no rescore table)"
         )
     rescore = store = None
     if quantized:
@@ -375,6 +376,7 @@ def _load_index_dir(d: str, *, rescore_tier: str | None = None) -> Any:
         emb_scales=leaf("bank", "emb_scales") if quantized else None,
         rescore_embs=rescore,
         store=store,
+        code_dtype=storage_dtype if quantized else "int8",
     )
     return LiderParams(
         centroid_cm=centroid_cm, centroids=leaf("centroids"), bank=bank

@@ -55,10 +55,13 @@ from ..core.utils import mrr_at_10, recall_at_k
 class OperatingPoint:
     """One point of the speed-quality control plane.
 
-    ``rescore_factor`` only affects int8-storage indexes (k' = factor * k
-    provisional candidates exactly rescored); ``block_c`` is the
-    verification kernel's candidate block size (None -> kernel default).
-    Both are static search knobs, so each distinct pair is one compile.
+    ``rescore_factor`` only affects quantized (int8/int4) indexes
+    (k' = factor * k provisional candidates exactly rescored); ``block_c``
+    is the verification kernel's candidate block size (None -> kernel
+    default); ``block_q`` switches the first pass to the cluster-major
+    multi-query schedule with that many query slots per cluster tile
+    (None -> per-query schedule; quantized banks only). All are static
+    search knobs, so each distinct combo is one compile.
     """
 
     n_probe: int
@@ -67,6 +70,7 @@ class OperatingPoint:
     refine: bool = False
     rescore_factor: int = 4
     block_c: int | None = None
+    block_q: int | None = None
 
     @property
     def adaptive(self) -> bool:
@@ -80,6 +84,7 @@ class OperatingPoint:
             prune_margin=self.prune_margin,
             rescore_factor=self.rescore_factor,
             block_c=self.block_c,
+            block_q=self.block_q,
         )
 
     def label(self) -> str:
@@ -92,6 +97,8 @@ class OperatingPoint:
             tag += f"/rescore{self.rescore_factor}"
         if self.block_c is not None:
             tag += f"/blk{self.block_c}"
+        if self.block_q is not None:
+            tag += f"/bq{self.block_q}"
         return tag
 
 
@@ -126,26 +133,30 @@ def default_grid(
     refine: bool = False,
     rescore_factors: Sequence[int] = (4,),
     block_cs: Sequence[int | None] = (None,),
+    block_qs: Sequence[int | None] = (None,),
 ) -> list[OperatingPoint]:
     """Fixed baselines (margin=None) plus adaptive variants per n_probe.
 
-    ``rescore_factors``/``block_cs`` extend the sweep over the quantized
-    bank's rescore depth and the kernel block size (defaults keep the grid
-    size unchanged); every (n_probe, margin) combo is crossed with them.
+    ``rescore_factors``/``block_cs``/``block_qs`` extend the sweep over the
+    quantized bank's rescore depth, the kernel block size, and the
+    cluster-major query-tile width (defaults keep the grid size unchanged);
+    every (n_probe, margin) combo is crossed with them.
     """
     fixed = [
-        OperatingPoint(p, r0, None, refine, rf, bc)
+        OperatingPoint(p, r0, None, refine, rf, bc, bq)
         for p in n_probes
         for rf in rescore_factors
         for bc in block_cs
+        for bq in block_qs
     ]
     adaptive = [
-        OperatingPoint(p, r0, m, refine, rf, bc)
+        OperatingPoint(p, r0, m, refine, rf, bc, bq)
         for p in n_probes
         if p > 1  # pruning a single probe can only be a no-op
         for m in margins
         for rf in rescore_factors
         for bc in block_cs
+        for bq in block_qs
     ]
     return fixed + adaptive
 
@@ -194,7 +205,7 @@ def sweep(
     for point in grid:
         base_key = (
             point.n_probe, point.r0, point.refine,
-            point.rescore_factor, point.block_c,
+            point.rescore_factor, point.block_c, point.block_q,
         )
         if base_key not in base_walls:
             route = jax.jit(
@@ -206,7 +217,7 @@ def sweep(
             full = lambda q, p=point: lider_lib.search_lider(
                 params, q, k=k, n_probe=p.n_probe, r0=p.r0, refine=p.refine,
                 use_fused=use_fused, rescore_factor=p.rescore_factor,
-                block_c=p.block_c,
+                block_c=p.block_c, block_q=p.block_q,
             )
             base_walls[base_key] = (
                 _time_fn(route, queries, repeats),
@@ -238,14 +249,26 @@ def sweep(
             # Measured fetch overhead of the tiered pipeline at this point:
             # D2H of the provisional rows + the host-side np.take (shared
             # across margin variants — pruning doesn't change k').
-            fetch_key = (point.n_probe, point.rescore_factor, point.block_c)
+            fetch_key = (
+                point.n_probe, point.rescore_factor, point.block_c,
+                point.block_q,
+            )
             if fetch_key not in host_fetch_walls:
-                prov, _ = lider_lib.host_first_pass(
-                    params, queries, k=k, n_probe=point.n_probe,
-                    r0=point.r0, refine=point.refine, use_fused=use_fused,
+                stage1_kwargs = dict(
+                    k=k, n_probe=point.n_probe, r0=point.r0,
+                    refine=point.refine, use_fused=use_fused,
                     rescore_factor=point.rescore_factor,
                     block_c=point.block_c,
                 )
+                if point.block_q is None:
+                    prov, _ = lider_lib.host_first_pass(
+                        params, queries, **stage1_kwargs
+                    )
+                else:
+                    prov, _ = lider_lib.host_first_pass_cluster_major(
+                        params, queries, block_q=point.block_q,
+                        **stage1_kwargs,
+                    )
                 t0 = time.perf_counter()
                 for _ in range(repeats):
                     lider_lib.host_fetch(params, prov.ids)
@@ -462,7 +485,7 @@ def main() -> None:
     ap.add_argument("--margins", type=float, nargs="+", default=None)
     ap.add_argument(
         "--storage-dtypes", nargs="+", default=["float32"],
-        choices=["float32", "bfloat16", "int8"],
+        choices=["float32", "bfloat16", "int8", "int4"],
         help="build + sweep one index per storage dtype; the frontier spans "
         "all of them (DESIGN.md §Quantized bank)",
     )
@@ -481,6 +504,13 @@ def main() -> None:
     ap.add_argument(
         "--block-cs", type=int, nargs="+", default=None,
         help="verification-kernel candidate block sizes to sweep",
+    )
+    ap.add_argument(
+        "--block-qs", type=int, nargs="+", default=None,
+        help="cluster-major query-tile widths to sweep IN ADDITION to the "
+        "per-query schedule (quantized banks only; float banks always run "
+        "per-query — DESIGN.md §Cluster-major schedule), so a cluster-major "
+        "point must beat its per-query twin to reach the frontier",
     )
     ap.add_argument("--no-check", action="store_true",
                     help="report only; do not exit non-zero when a check "
@@ -509,6 +539,7 @@ def main() -> None:
         (0.05, 0.1, 0.2) if args.smoke else (0.02, 0.05, 0.1, 0.2)
     )
     block_cs = tuple(args.block_cs) if args.block_cs else (None,)
+    block_qs = (None, *args.block_qs) if args.block_qs else (None,)
 
     # One built index per storage dtype; the frontier spans all of them
     # (and, for int8, every requested rescore tier — the tier move is a
@@ -524,9 +555,10 @@ def main() -> None:
         params = lider_lib.build_lider(jax.random.PRNGKey(0), corpus, cfg)
         print(f"[pareto] built n={args.corpus_size} c={n_clusters} "
               f"storage={sd} in {time.time() - t0:.1f}s")
-        # rescore_factor is a no-op on float banks — crossing it in would
-        # only duplicate (and re-time/re-compile) identical points.
-        if sd == "int8":
+        # rescore_factor and block_q are no-ops (resp. errors) on float
+        # banks — crossing them in would only duplicate identical points.
+        quantized = sd in ("int8", "int4")
+        if quantized:
             rescore_factors = (
                 tuple(args.rescore_factors) if args.rescore_factors else (2, 4)
             )
@@ -535,9 +567,10 @@ def main() -> None:
         grid = default_grid(
             n_probes=n_probes, margins=margins,
             rescore_factors=rescore_factors, block_cs=block_cs,
+            block_qs=block_qs if quantized else (None,),
         )
         for tier in args.rescore_tiers:
-            if tier == "host" and sd != "int8":
+            if tier == "host" and not quantized:
                 continue  # float banks have no rescore table to move
             p_t = (
                 params if tier == "device"
@@ -580,7 +613,7 @@ def main() -> None:
     if sel:
         sel_point = OperatingPoint(
             sel["n_probe"], sel["r0"], sel["prune_margin"], sel["refine"],
-            sel["rescore_factor"], sel["block_c"],
+            sel["rescore_factor"], sel["block_c"], sel.get("block_q"),
         )
         print(
             f"[pareto] operating point for recall>={args.recall_target}: "

@@ -1,6 +1,8 @@
 """Fused gather-score-reduce verification kernel: parity with the
-materialized reference across padding/dtype/blocking edge cases, plus the
-end-to-end LIDER regression (DESIGN.md §Verification-kernel)."""
+materialized reference across padding/dtype/blocking edge cases, the
+cluster-major grouped kernel and its schedule pre-pass, plus the end-to-end
+LIDER regressions (DESIGN.md §Verification-kernel, §Cluster-major
+schedule)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +10,9 @@ import pytest
 
 from repro.core import lider
 from repro.core.utils import l2_normalize
-from repro.kernels import fused_verify, ref
+from repro.kernels import fused_verify, fused_verify_grouped, ref
+from repro.kernels.quant import quantize_rows, quantize_rows_int4
+from repro.kernels.schedule import build_cluster_schedule
 
 
 def _case(seed, n, d, b, c, dtype, id_lo=-1):
@@ -89,6 +93,182 @@ def test_parity_large_shape_sweep(dtype):
     embs, ids, q = _case(6, 200, 64, 4, 70, dtype)
     rtol = 1e-6 if dtype == jnp.float32 else 2e-2
     _assert_parity(embs, ids, q, k=10, block_c=16, rtol=rtol)
+
+
+@pytest.mark.parametrize("code_dtype", ["int8", "int4"])
+def test_quantized_parity_block_c_exceeds_c(code_dtype):
+    """Regression for the lane-aligned clamp ``bc = min(block_c, c)``: a
+    block size larger than the candidate count (the kernel default 256 vs a
+    tiny provisional list) must clamp, not pad the grid with out-of-range
+    reads — and the clamp must stay exact on the quantized paths where the
+    table width differs from the logical width (packed int4)."""
+    embs_f, ids, q = _case(9, 40, 32, 3, 10, jnp.float32)
+    quant = quantize_rows if code_dtype == "int8" else quantize_rows_int4
+    table, scales = quant(embs_f)
+    gi, gs = fused_verify(
+        table, ids, q, k=4, scales=scales, block_c=64,
+        code_dtype=code_dtype, interpret=True,
+    )
+    wi, ws = ref.verify_topk_ref(
+        table, ids, q, k=4, scales=scales, code_dtype=code_dtype
+    )
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+# ---------------------------------------------------------------------------
+# Cluster-major schedule (DESIGN.md §Cluster-major schedule)
+# ---------------------------------------------------------------------------
+
+
+def _zipf_cids(rng, b, p, n_clusters, a=1.3):
+    w = 1.0 / np.arange(1, n_clusters + 1) ** a
+    w /= w.sum()
+    return np.stack(
+        [rng.choice(n_clusters, size=p, replace=False, p=w) for _ in range(b)]
+    ).astype(np.int32)
+
+
+def test_build_cluster_schedule_invariants():
+    """The schedule is a bijection over kept pairs: every kept (query,
+    probe) pair lands in exactly one (step, slot) that points back at it,
+    pruned pairs are excluded, steps stream clusters in ascending order, and
+    Zipf-skewed probe lists actually share steps (ratio > 1)."""
+    rng = np.random.default_rng(3)
+    cids = _zipf_cids(rng, 24, 4, 16)
+    pruned = rng.random(cids.shape) < 0.2
+    sched = build_cluster_schedule(cids, block_q=8, pruned=pruned)
+    keep = ~pruned
+    qs, ps = np.nonzero(keep)
+    st, sl = sched.pair_step[qs, ps], sched.pair_slot[qs, ps]
+    assert (st >= 0).all() and (sl >= 0).all() and (sl < 8).all()
+    np.testing.assert_array_equal(sched.sched_cids[st], cids[qs, ps])
+    np.testing.assert_array_equal(sched.sched_qids[st, sl], qs)
+    assert (sched.pair_step[pruned] == -1).all()
+    assert (sched.pair_slot[pruned] == -1).all()
+    # each scheduled (step, slot) is used by at most one pair
+    assert len(set(zip(st.tolist(), sl.tolist()))) == len(st)
+    real = sched.sched_cids[: sched.n_steps]
+    assert (np.diff(real) >= 0).all()
+    assert sched.n_pairs == int(keep.sum())
+    assert sched.sharing_ratio > 1.0
+    # padding steps carry empty query tiles
+    assert (sched.sched_qids[sched.n_steps :] == -1).all()
+    # block_q=1 degenerates to the per-query loop order: one pair per step
+    s1 = build_cluster_schedule(cids, block_q=1, pruned=pruned)
+    assert s1.n_steps == s1.n_pairs == int(keep.sum())
+
+
+def _dense_slot_ids(sched, lp):
+    """Every scheduled slot scores its cluster's full Lp flat rows."""
+    s = sched.sched_cids.shape[0]
+    out = np.full((s, sched.block_q, lp), -1, np.int32)
+    step, slot = np.nonzero(sched.sched_qids >= 0)
+    out[step, slot] = sched.sched_cids[step, None] * lp + np.arange(lp)
+    return out
+
+
+@pytest.mark.parametrize("code_dtype", ["int8", "int4"])
+def test_grouped_kernel_matches_ref(code_dtype):
+    """fused_verify_grouped (interpret) is bit-exact — ids AND scores —
+    against the materialized grouped oracle on a Zipf-skewed schedule, for
+    both code dtypes."""
+    c, lp, d, b, p, block_q = 6, 16, 32, 5, 3, 4
+    k1, k2 = jax.random.split(jax.random.PRNGKey(17), 2)
+    embs_f = jax.random.normal(k1, (c, lp, d))
+    q = jax.random.normal(k2, (b, d))
+    quant = quantize_rows if code_dtype == "int8" else quantize_rows_int4
+    codes, scales = quant(embs_f)
+    sched = build_cluster_schedule(
+        _zipf_cids(np.random.default_rng(5), b, p, c), block_q=block_q
+    )
+    slot_ids = jnp.asarray(_dense_slot_ids(sched, lp))
+    args = (
+        codes, scales, q,
+        jnp.asarray(sched.sched_cids), jnp.asarray(sched.sched_qids),
+        slot_ids,
+    )
+    gi, gs = fused_verify_grouped(
+        *args, kp=6, block_q=block_q, block_c=8, code_dtype=code_dtype,
+        interpret=True,
+    )
+    wi, ws = ref.verify_topk_grouped_ref(*args, kp=6, code_dtype=code_dtype)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+@pytest.fixture(scope="module", params=["int8", "int4"])
+def quantized_lider(request):
+    rng = jax.random.PRNGKey(7)
+    kc, kx, kq, kb = jax.random.split(rng, 4)
+    centers = jax.random.normal(kc, (16, 32))
+    assign = jax.random.randint(kx, (1500,), 0, 16)
+    x = l2_normalize(centers[assign] + 0.3 * jax.random.normal(kq, (1500, 32)))
+    q = l2_normalize(x[:8] + 0.05 * jax.random.normal(kb, (8, 32)))
+    cfg = lider.LiderConfig(
+        n_clusters=16, n_probe=4, n_arrays=2, n_leaves=2, kmeans_iters=5,
+        storage_dtype=request.param,
+    )
+    params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+    return params, q
+
+
+def test_cluster_major_matches_per_query_schedule(quantized_lider):
+    """Acceptance: the cluster-major search is bit-exact — ids AND scores —
+    against the per-query schedule; block_q is a pure loop-order change."""
+    params, q = quantized_lider
+    base = lider.search_lider(params, q, k=10, n_probe=4, r0=8)
+    for bq in (1, 4, 8):
+        got = lider.search_lider(params, q, k=10, n_probe=4, r0=8, block_q=bq)
+        np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(base.ids))
+        np.testing.assert_array_equal(
+            np.asarray(got.scores), np.asarray(base.scores)
+        )
+
+
+def test_cluster_major_invariant_to_query_order(quantized_lider):
+    """Shuffling the batch only permutes the outputs: the schedule's
+    determinism contract (cluster asc, query asc, probe asc) means a query's
+    results cannot depend on where it sits in the batch or which other
+    queries share its steps."""
+    params, q = quantized_lider
+    base = lider.search_lider(params, q, k=10, n_probe=4, r0=8, block_q=4)
+    perm = np.random.default_rng(0).permutation(q.shape[0])
+    got = lider.search_lider(
+        params, q[jnp.asarray(perm)], k=10, n_probe=4, r0=8, block_q=4
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.ids), np.asarray(base.ids)[perm]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got.scores), np.asarray(base.scores)[perm]
+    )
+
+
+def test_cluster_major_parity_under_prune_margin(quantized_lider):
+    """Pruned probes drop out of the schedule (pair_step = -1) instead of
+    being masked in-kernel; outputs and the pruned-stats mask must still
+    match the per-query path exactly."""
+    params, q = quantized_lider
+    base, pruned_b = lider.search_lider(
+        params, q, k=10, n_probe=4, r0=8, prune_margin=0.15, with_stats=True
+    )
+    got, pruned_g = lider.search_lider(
+        params, q, k=10, n_probe=4, r0=8, prune_margin=0.15, with_stats=True,
+        block_q=4,
+    )
+    np.testing.assert_array_equal(np.asarray(pruned_g), np.asarray(pruned_b))
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(base.ids))
+    np.testing.assert_array_equal(
+        np.asarray(got.scores), np.asarray(base.scores)
+    )
+    assert np.asarray(pruned_g).any()  # the margin actually pruned probes
+
+
+def test_cluster_major_rejects_float_banks(small_lider):
+    params, q = small_lider
+    with pytest.raises(ValueError, match="quantized"):
+        lider.search_lider(params, q, k=10, n_probe=4, r0=8, block_q=4)
 
 
 @pytest.fixture(scope="module")

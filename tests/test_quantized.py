@@ -1,7 +1,8 @@
-"""Quantized ClusterBank (DESIGN.md §Quantized bank): int8 round-trip error
-bounds, kernel-vs-oracle parity across storage dtypes and dead/mixed blocks,
-lifecycle (upsert/delete/checkpoint) consistency of the code + scale +
-rescore tables, and the int8+rescore recall-parity acceptance check."""
+"""Quantized ClusterBank (DESIGN.md §Quantized bank): int8/int4 round-trip
+error bounds, packed-nibble idempotence, kernel-vs-oracle parity across
+storage dtypes and dead/mixed blocks, lifecycle (upsert/delete/checkpoint)
+consistency of the code + scale + rescore tables, and the quantized+rescore
+recall-parity acceptance checks."""
 import dataclasses
 
 import jax
@@ -14,7 +15,16 @@ from repro.core.bank import store_rows
 from repro.core.baselines import flat_search
 from repro.core.utils import l2_normalize, recall_at_k
 from repro.kernels import fused_verify, ref
-from repro.kernels.quant import INT8_MAX, dequantize_rows, quantize_rows
+from repro.kernels.quant import (
+    INT4_MAX,
+    INT8_MAX,
+    dequantize_rows,
+    dequantize_rows_int4,
+    pack_int4,
+    quantize_rows,
+    quantize_rows_int4,
+    unpack_int4,
+)
 from repro.serving import RetrievalEngine, make_backend
 from repro.training import checkpoint
 
@@ -47,6 +57,59 @@ def test_int8_roundtrip_score_error_bounded_hypothesis():
         assert np.abs(np.asarray(codes, np.int32)).max() <= INT8_MAX
 
     check()
+
+
+def test_int4_roundtrip_score_error_bounded_hypothesis():
+    """The 4-bit analogue of the §Quantized bank error model: per-element
+    round-to-nearest error is <= scale/2 (with scale = max|x|/7), so a
+    quantized row's score error against an exact query is bounded by
+    ||q||_1 * scale/2 — identical bound shape, coarser scale."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(0, 10_000), st.integers(1, 48), st.floats(0.01, 100.0))
+    @settings(max_examples=60, deadline=None)
+    def check(seed, half_d, magnitude):
+        d = 2 * half_d  # packing needs an even row width
+        rng = np.random.default_rng(seed)
+        x = (rng.normal(size=(4, d)) * magnitude).astype(np.float32)
+        q = rng.normal(size=(d,)).astype(np.float32)
+        packed, scales = quantize_rows_int4(jnp.asarray(x))
+        assert packed.shape == (4, d // 2) and packed.dtype == jnp.int8
+        dq = np.asarray(dequantize_rows_int4(packed, scales))
+        bound = np.abs(q).sum() * (np.asarray(scales) / 2.0) + 1e-4
+        assert (np.abs(dq @ q - x @ q) <= bound).all()
+        # unpacked nibbles stay in the symmetric range (-8 never appears)
+        codes = np.asarray(unpack_int4(packed), np.int32)
+        assert np.abs(codes).max() <= INT4_MAX
+
+    check()
+
+
+def test_int4_pack_unpack_idempotent():
+    """pack/unpack are exact inverses over the full nibble range [-8, 7]
+    (the packed carrier can hold -8 even though the quantizer never emits
+    it), across arbitrary leading dims; odd widths are rejected."""
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(5, 3, 24)), jnp.int8)
+    packed = pack_int4(codes)
+    assert packed.shape == (5, 3, 12) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(packed)), np.asarray(codes))
+    np.testing.assert_array_equal(
+        np.asarray(pack_int4(unpack_int4(packed))), np.asarray(packed)
+    )
+    with pytest.raises(ValueError, match="even"):
+        pack_int4(jnp.zeros((2, 7), jnp.int8))
+
+
+def test_int4_zero_rows_pack_to_zero_bytes():
+    """All-zero (padded-slot) rows must pack to exact zero bytes, scale 1."""
+    packed, scales = quantize_rows_int4(jnp.zeros((3, 16)))
+    np.testing.assert_array_equal(np.asarray(packed), 0)
+    np.testing.assert_array_equal(np.asarray(scales), 1.0)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_rows_int4(packed, scales)), 0.0
+    )
 
 
 def test_quantize_zero_rows_are_exact_padding():
@@ -84,7 +147,7 @@ def _mask(ids, pattern, block_c):
     raise ValueError(pattern)
 
 
-@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8", "int4"])
 @pytest.mark.parametrize(
     "pattern", ["all_live", "mixed", "dead_block", "all_pruned_row"]
 )
@@ -92,15 +155,20 @@ def test_fused_parity_across_dtypes_and_block_liveness(dtype, pattern):
     block_c = 8
     embs_f, ids, q = _case(11, 64, 32, 3, 4 * block_c)
     ids = _mask(ids, pattern, block_c)
-    if dtype == "int8":
-        table, scales = quantize_rows(embs_f)
+    if dtype in ("int8", "int4"):
+        quant = quantize_rows if dtype == "int8" else quantize_rows_int4
+        table, scales = quant(embs_f)
     else:
         table = embs_f.astype(jnp.dtype(dtype))
         scales = None
+    code_dtype = "int4" if dtype == "int4" else "int8"
     gi, gs = fused_verify(
-        table, ids, q, k=6, scales=scales, block_c=block_c, interpret=True
+        table, ids, q, k=6, scales=scales, block_c=block_c,
+        code_dtype=code_dtype, interpret=True,
     )
-    wi, ws = ref.verify_topk_ref(table, ids, q, k=6, scales=scales)
+    wi, ws = ref.verify_topk_ref(
+        table, ids, q, k=6, scales=scales, code_dtype=code_dtype
+    )
     np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
     np.testing.assert_allclose(
         np.asarray(gs), np.asarray(ws), rtol=2e-2 if dtype == "bfloat16" else 1e-6
@@ -153,7 +221,7 @@ def built(corpus):
     x, q, gt = corpus
     params = {
         sd: lider.build_lider(jax.random.PRNGKey(0), x, _cfg(sd))
-        for sd in ("float32", "bfloat16", "int8")
+        for sd in ("float32", "bfloat16", "int8", "int4")
     }
     return x, q, gt, params
 
@@ -169,6 +237,13 @@ def test_bank_storage_dtypes(built):
     assert b.emb_scales.shape == b.gids.shape
     assert b.rescore_embs.shape == b.embs.shape
     assert b.storage_dtype == "int8"
+    b4 = params["int4"].bank
+    assert b4.embs.dtype == jnp.int8 and b4.quantized
+    assert b4.storage_dtype == "int4" and b4.code_dtype == "int4"
+    # packed carrier is half the logical width; rescore table stays full
+    assert b4.embs.shape[-1] * 2 == b4.rescore_embs.shape[-1]
+    assert b4.dim == b.dim
+    assert b4.emb_scales.shape == b4.gids.shape
 
 
 def test_int8_rescore_recall_parity(built):
@@ -188,11 +263,32 @@ def test_int8_rescore_recall_parity(built):
     assert float(r8) >= float(r32) - 0.03
 
 
-def test_rescore_scores_are_exact(built):
+def test_int4_rescore_recall_parity(built):
+    """Acceptance: int4 first pass + exact rescore recall@k within 0.02 of
+    the int8 path. The 4-bit codes only pick the rescore candidates, but
+    their coarser ordering needs roughly twice the rescore window
+    (rescore_factor 8 vs int8's default 4) to surface the same winners —
+    still a traffic win: the wider exact gather is B·k'·d while the first
+    pass streams half the bytes (DESIGN.md §Quantized bank, int4 column)."""
+    _, q, gt, params = built
+    r8 = recall_at_k(
+        lider.search_lider(params["int8"], q, k=10, n_probe=8, r0=8).ids, gt
+    )
+    r4 = recall_at_k(
+        lider.search_lider(
+            params["int4"], q, k=10, n_probe=8, r0=8, rescore_factor=8
+        ).ids, gt,
+    )
+    assert float(r4) >= float(r8) - 0.02
+
+
+@pytest.mark.parametrize("sd", ["int8", "int4"])
+def test_rescore_scores_are_exact(built, sd):
     """Returned scores come from the full-precision side table: every
-    (id, score) the int8 path surfaces equals the exact f32 inner product."""
+    (id, score) the quantized path surfaces equals the exact f32 inner
+    product."""
     x, q, _, params = built
-    out = lider.search_lider(params["int8"], q, k=10, n_probe=8, r0=8)
+    out = lider.search_lider(params[sd], q, k=10, n_probe=8, r0=8)
     ids = np.asarray(out.ids)
     scores = np.asarray(out.scores)
     exact = np.asarray(jnp.einsum("nd,bd->bn", jnp.asarray(x), q))
@@ -285,16 +381,18 @@ def _assert_bank_consistent(bank):
     np.testing.assert_allclose(scales, np.asarray(s2), rtol=1e-6)
 
 
-def test_int8_upsert_matches_full_rebuild(corpus):
+@pytest.mark.parametrize("sd", ["int8", "int4"])
+def test_quantized_upsert_matches_full_rebuild(corpus, sd):
     """build(80%) -> upsert(20%) is slot- and byte-identical to build(100%)
-    on the quantized tables (quantization is row-local)."""
+    on the quantized tables (quantization is row-local — for int4 the packed
+    nibble bytes themselves must match)."""
     x, q, _ = corpus
     n80 = int(x.shape[0] * 0.8)
     km = clustering.kmeans(jax.random.PRNGKey(2), x[:n80], CFG.n_clusters, iters=10)
     assignment, _ = clustering.assign_chunked(x, km.centroids)
     max_size = int(jnp.bincount(assignment, length=CFG.n_clusters).max())
     cfg = _cfg(
-        "int8",
+        sd,
         capacity=lider.padded_capacity(max_size, None, CFG.pad_multiple),
     )
     full = lider.build_lider(jax.random.PRNGKey(2), x, cfg, centroids=km.centroids)
@@ -310,7 +408,18 @@ def test_int8_upsert_matches_full_rebuild(corpus):
             np.asarray(getattr(full.bank, name)),
             err_msg=name,
         )
-    _assert_bank_consistent(up.bank)
+    if sd == "int8":
+        _assert_bank_consistent(up.bank)
+    else:
+        # stored packed nibbles re-quantize to themselves from the rescore
+        # table (row-local scheme, no drift through the upsert path)
+        c2, s2 = quantize_rows_int4(jnp.asarray(up.bank.rescore_embs))
+        np.testing.assert_array_equal(
+            np.asarray(up.bank.embs), np.asarray(c2)
+        )
+        np.testing.assert_allclose(
+            np.asarray(up.bank.emb_scales), np.asarray(s2), rtol=1e-6
+        )
     a = lider.search_lider(up, q, k=10, n_probe=8, r0=8)
     b = lider.search_lider(full, q, k=10, n_probe=8, r0=8)
     np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
@@ -361,12 +470,14 @@ def test_int8_capacity_growth_preserves_tables(corpus):
     )
 
 
-def test_int8_checkpoint_roundtrip(tmp_path, corpus):
+@pytest.mark.parametrize("sd", ["int8", "int4"])
+def test_quantized_checkpoint_roundtrip(tmp_path, corpus, sd):
     x, q, _ = corpus
-    p = lider.build_lider(jax.random.PRNGKey(0), x, _cfg("int8"))
+    p = lider.build_lider(jax.random.PRNGKey(0), x, _cfg(sd))
     checkpoint.save_index(str(tmp_path), p)
     p2 = checkpoint.load_index(str(tmp_path))
     assert p2.bank.quantized and p2.bank.embs.dtype == jnp.int8
+    assert p2.bank.code_dtype == sd
     flat_a = jax.tree_util.tree_leaves(p)
     flat_b = jax.tree_util.tree_leaves(p2)
     assert len(flat_a) == len(flat_b)
@@ -410,3 +521,25 @@ def test_serving_engine_serves_int8_with_rescore(corpus):
     got = np.stack([eng.result(r)[0] for r in rids])
     rec = float(recall_at_k(jnp.asarray(got), gt[:32]))
     assert rec > 0.85
+
+
+def test_serving_engine_serves_int4_cluster_major(corpus):
+    """int4 bank + cluster-major schedule threaded through backend kwargs:
+    the serving path with ``block_q`` set returns the same ids the direct
+    per-query search does, at serving recall."""
+    x, q, gt = corpus
+    p = lider.build_lider(jax.random.PRNGKey(0), x, _cfg("int4"))
+    search = make_backend(
+        "lider", None, updatable=True, n_probe=8, r0=8, rescore_factor=4,
+        block_c=128, block_q=4,
+    )
+    eng = RetrievalEngine(search, batch_size=16, k=10, dim=x.shape[1], params=p)
+    eng.warmup()
+    rids = [eng.submit(np.asarray(qq)) for qq in np.asarray(q)[:32]]
+    eng.drain()
+    got = np.stack([eng.result(r)[0] for r in rids])
+    rec = float(recall_at_k(jnp.asarray(got), gt[:32]))
+    assert rec > 0.85
+    direct = lider.search_lider(p, q[:16], k=10, n_probe=8, r0=8,
+                                rescore_factor=4, block_c=128)
+    np.testing.assert_array_equal(got[:16], np.asarray(direct.ids))
