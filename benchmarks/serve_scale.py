@@ -1,0 +1,334 @@
+"""Serving-scale benchmark: open-loop Zipf + burst traffic vs the SLO.
+
+The headline number for the async continuous-batching front end
+(DESIGN.md §Serving front end; ROADMAP names this file). Two engines
+serve the SAME seeded arrival trace — Poisson arrivals with bursty
+episodes, Zipf-popular queries, skewed tenants — in real time:
+
+- **fixed**: the legacy front end — FIFO queue, every batch padded to
+  ``batch_size``, one operating point, no cache.
+- **adaptive**: the scheduler front end — result cache, pow2 dynamic
+  batch sizing under the SLO, per-tenant fair queues.
+
+The workload is calibrated at runtime: a warm full batch is timed, the
+arrival rate is set to ``--load-mult``x the fixed engine's max
+throughput (so the fixed engine is overloaded by construction) and the
+SLO to ``--slo-mult`` batch-times. Both engines search the identical
+operating point, so quality differences are zero by construction and
+the benchmark isolates *scheduling*: what the cache, the batch-size
+ladder, and admission buy under pressure.
+
+Report: p50/p99 latency, availability, shed/degraded fractions, cache
+hit rate, recall, and recall-at-SLO (recall credited only to answers
+inside the SLO — the number a user actually experiences).
+
+Gates (--check, non-zero exit; CI runs --smoke):
+- adaptive p99 <= SLO while fixed p99 > SLO (same trace, same hardware)
+- adaptive recall >= fixed recall
+- every adaptive answer (cache hits and dynamically-sized batches
+  alike) bit-identical to a direct ``search_lider`` of that query
+- zero query-path recompiles across the run after warmup
+  (``lider.query_path_cache_size`` delta == 0)
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.serve_scale [--smoke]
+        [--out BENCH_scale.json] [--n 20000] [--dim 64] [--pool 256]
+        [--arrivals 4000] [--batch-size 32] [--k 10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _build(n, dim, n_clusters, pool, seed=0):
+    import jax
+    import numpy as np
+
+    from repro.core import lider
+    from repro.core.baselines import flat_search
+    from repro.core.utils import l2_normalize
+
+    rng = jax.random.PRNGKey(seed)
+    kc, kx, kn, kq = jax.random.split(rng, 4)
+    centers = jax.random.normal(kc, (n_clusters, dim))
+    assign = jax.random.randint(kx, (n,), 0, n_clusters)
+    x = l2_normalize(centers[assign] + 0.3 * jax.random.normal(kn, (n, dim)))
+    q = np.asarray(
+        l2_normalize(x[:pool] + 0.05 * jax.random.normal(kq, (pool, dim))),
+        np.float32,
+    )
+    cfg = lider.LiderConfig(n_clusters=n_clusters, n_probe=4)
+    params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+    gt = np.asarray(flat_search(x, jax.numpy.asarray(q), k=10).ids)
+    return params, q, gt
+
+
+def _calibrate(engine, batch, dim, repeats=5):
+    """Median warm full-batch service time (seconds) — the unit every
+    workload knob is expressed in, so the benchmark self-scales to the
+    machine it runs on."""
+    import jax
+    import jax.numpy as jnp
+
+    q = jnp.zeros((batch, dim), jnp.float32)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out, _ = engine._split_out(engine._search(q))
+        jax.block_until_ready((out.ids, out.scores))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _metrics(results, trace, gt, k, slo_s):
+    """Per-run serving metrics from collected QueryResult/Shed answers."""
+    import numpy as np
+
+    from repro.serving import QueryResult
+
+    lat, recalls, rec_at_slo, n_shed, n_degraded, n_cached = (
+        [], [], [], 0, 0, 0,
+    )
+    for res, arr in zip(results, trace):
+        if not isinstance(res, QueryResult):
+            n_shed += 1
+            rec_at_slo.append(0.0)  # a shed request delivers nothing
+            continue
+        lat.append(res.latency_s)
+        n_degraded += bool(res.degraded)
+        n_cached += bool(res.cached)
+        got = set(np.asarray(res.ids)[:k].tolist())
+        r = len(got & set(gt[arr.query_idx][:k].tolist())) / k
+        recalls.append(r)
+        rec_at_slo.append(r if res.latency_s <= slo_s else 0.0)
+    lat = np.asarray(lat) if lat else np.zeros(1)
+    n = len(results)
+    return {
+        "n_arrivals": n,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "availability": (n - n_shed) / max(n, 1),
+        "shed_fraction": n_shed / max(n, 1),
+        "degraded_fraction": n_degraded / max(n, 1),
+        "cache_hit_fraction": n_cached / max(n, 1),
+        "recall": float(np.mean(recalls)) if recalls else 0.0,
+        "recall_at_slo": float(np.mean(rec_at_slo)),
+    }
+
+
+def _bit_identity(results, trace, ref_ids, ref_scores):
+    """Every answered (non-degraded) result must bit-match the direct
+    serial search of its pool query — cache hits and dynamically-sized
+    batches are not allowed to change a single ulp."""
+    import numpy as np
+
+    from repro.serving import QueryResult
+
+    n_checked = n_bad = 0
+    for res, arr in zip(results, trace):
+        if not isinstance(res, QueryResult) or res.degraded:
+            continue
+        n_checked += 1
+        ok = np.array_equal(
+            np.asarray(res.ids), ref_ids[arr.query_idx]
+        ) and np.array_equal(np.asarray(res.scores), ref_scores[arr.query_idx])
+        n_bad += not ok
+    return n_checked, n_bad
+
+
+def _run(engine, trace, q, warm=True):
+    from repro.serving.traffic import run_open_loop
+
+    rids = run_open_loop(engine, trace, q)
+    return [engine.result(r) for r in rids]
+
+
+def _bench(args):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import lider
+    from repro.serving import (
+        DegradePolicy, RetrievalEngine, SchedulerConfig, make_backend,
+    )
+    from repro.serving.traffic import make_trace
+
+    params, q, gt = _build(args.n, args.dim, args.n_clusters, args.pool)
+    search = make_backend("lider", None, updatable=True, n_probe=4)
+
+    def engine_for(sched=None):
+        return RetrievalEngine(
+            search, batch_size=args.batch_size, k=args.k, dim=args.dim,
+            params=params, policy=DegradePolicy(), scheduler=sched,
+        )
+
+    fixed = engine_for()
+    min_batch = max(1, args.batch_size // 8)
+    s_batch = None  # calibrated after warmup below
+    # Warm both engines BEFORE freezing the recompile baseline: the
+    # adaptive warmup compiles every pow2 ladder size once, off-path.
+    fixed.warmup()
+    s_batch = _calibrate(fixed, args.batch_size, args.dim)
+    slo_s = args.slo_mult * s_batch
+    adaptive = engine_for(
+        SchedulerConfig(
+            dynamic_batch=True,
+            min_batch=min_batch,
+            cache_size=4 * args.pool,
+            slo_s=slo_s,
+        )
+    )
+    adaptive.warmup()
+
+    # Direct serial reference over the whole pool (its own shape, so it
+    # must run before the recompile baseline is captured).
+    ref = lider.search_lider(params, jnp.asarray(q), k=args.k, n_probe=4)
+    ref_ids, ref_scores = np.asarray(ref.ids), np.asarray(ref.scores)
+    compiled_before = lider.query_path_cache_size()
+
+    # Overload by construction: arrivals come --load-mult x faster than
+    # the fixed engine can serve them at full batch.
+    mean_rate = args.load_mult * args.batch_size / s_batch
+    trace = make_trace(
+        seed=args.seed, n_arrivals=args.arrivals, pool_size=args.pool,
+        mean_rate=mean_rate, pattern="burst", zipf_a=args.zipf_a,
+        burst_factor=4.0, episode_len=64, n_tenants=args.tenants,
+    )
+
+    fixed_res = _run(fixed, trace, q)
+    adaptive_res = _run(adaptive, trace, q)
+    compiled_after = lider.query_path_cache_size()
+
+    m_fixed = _metrics(fixed_res, trace, gt, args.k, slo_s)
+    m_adapt = _metrics(adaptive_res, trace, gt, args.k, slo_s)
+    n_checked, n_bad = _bit_identity(adaptive_res, trace, ref_ids, ref_scores)
+    nf_checked, nf_bad = _bit_identity(fixed_res, trace, ref_ids, ref_scores)
+
+    s = adaptive.stats
+    report = {
+        "shape": {
+            "n": args.n, "dim": args.dim, "n_clusters": args.n_clusters,
+            "pool": args.pool, "arrivals": args.arrivals,
+            "batch_size": args.batch_size, "min_batch": min_batch,
+            "k": args.k, "tenants": args.tenants, "zipf_a": args.zipf_a,
+            "seed": args.seed,
+        },
+        "calibration": {
+            "batch_service_s": s_batch,
+            "slo_s": slo_s,
+            "slo_mult": args.slo_mult,
+            "load_mult": args.load_mult,
+            "mean_arrival_rate_qps": mean_rate,
+        },
+        "fixed": m_fixed,
+        "adaptive": m_adapt,
+        "adaptive_engine": {
+            "cache_hit_rate": s.cache_hit_rate,
+            "n_cache_hits": s.n_cache_hits,
+            "n_batches": s.n_batches,
+            "padding_fraction": s.padding_fraction,
+            "batch_size_trace_tail": list(s.batch_size_trace)[-16:],
+            "aqt_s": s.aqt,
+        },
+        "fixed_engine": {
+            "n_batches": fixed.stats.n_batches,
+            "padding_fraction": fixed.stats.padding_fraction,
+            "aqt_s": fixed.stats.aqt,
+        },
+        "bit_identity": {
+            "adaptive_checked": n_checked, "adaptive_mismatches": n_bad,
+            "fixed_checked": nf_checked, "fixed_mismatches": nf_bad,
+        },
+        "recompiles": {
+            "compiled_traces_before": compiled_before,
+            "compiled_traces_after": compiled_after,
+            "engine_recompiles": adaptive.recompiles + fixed.recompiles,
+        },
+    }
+
+    failures = []
+    if m_adapt["p99_latency_s"] > slo_s:
+        failures.append(
+            f"adaptive p99 {m_adapt['p99_latency_s'] * 1e3:.1f}ms misses the "
+            f"SLO {slo_s * 1e3:.1f}ms"
+        )
+    if m_fixed["p99_latency_s"] <= slo_s:
+        failures.append(
+            f"fixed p99 {m_fixed['p99_latency_s'] * 1e3:.1f}ms meets the SLO "
+            f"{slo_s * 1e3:.1f}ms — workload not separating (raise --load-mult)"
+        )
+    if m_adapt["recall"] < m_fixed["recall"]:
+        failures.append(
+            f"adaptive recall {m_adapt['recall']:.4f} < fixed "
+            f"{m_fixed['recall']:.4f}"
+        )
+    if n_bad or nf_bad:
+        failures.append(
+            f"{n_bad} adaptive + {nf_bad} fixed answers not bit-identical "
+            "to direct search"
+        )
+    if compiled_after != compiled_before:
+        failures.append(
+            f"query path re-traced: {compiled_before} -> {compiled_after} "
+            "compiled traces after warmup"
+        )
+    report["failures"] = failures
+    report["ok"] = not failures
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shape + gates (CI)")
+    ap.add_argument("--out", default="BENCH_scale.json")
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--n-clusters", type=int, default=32)
+    ap.add_argument("--pool", type=int, default=256,
+                    help="distinct queries behind the Zipf popularity")
+    ap.add_argument("--arrivals", type=int, default=4000)
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    ap.add_argument("--slo-mult", type=float, default=8.0,
+                    help="SLO as a multiple of the warm batch service time")
+    ap.add_argument("--load-mult", type=float, default=4.0,
+                    help="arrival rate as a multiple of fixed max throughput")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-check", dest="check", action="store_false",
+                    help="report only; do not gate")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n = 8000
+        args.arrivals = 800
+        args.pool = 48
+
+    report = _bench(args)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    a, fx = report["adaptive"], report["fixed"]
+    print(
+        f"serve_scale: slo={report['calibration']['slo_s'] * 1e3:.1f}ms  "
+        f"adaptive p99={a['p99_latency_s'] * 1e3:.1f}ms "
+        f"recall@slo={a['recall_at_slo']:.3f} "
+        f"cache_hit={a['cache_hit_fraction']:.2f}  |  "
+        f"fixed p99={fx['p99_latency_s'] * 1e3:.1f}ms "
+        f"recall@slo={fx['recall_at_slo']:.3f}"
+    )
+    print(f"wrote {args.out}")
+    if report["failures"]:
+        for msg in report["failures"]:
+            print(f"FAIL: {msg}")
+        if args.check:
+            raise SystemExit(1)
+    else:
+        print("all serving-scale gates passed")
+
+
+if __name__ == "__main__":
+    main()

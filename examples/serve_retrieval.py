@@ -1,6 +1,7 @@
 """Batched retrieval serving across index backends (deliverable b, serving
-driver — the paper's kind): queued requests, fixed-batch execution, AQT and
-quality per backend.
+driver — the paper's kind), through the async scheduler front end: queued
+requests from skewed tenants with Zipf-repeated queries, result caching,
+dynamic batch sizing, AQT / latency / quality per backend.
 
     PYTHONPATH=src python examples/serve_retrieval.py [--n 30000]
 """
@@ -13,7 +14,8 @@ from repro.core import lider
 from repro.core.baselines import build_ivfpq, build_mplsh, build_sklsh, flat_search
 from repro.core.utils import recall_at_k
 from repro.data import synthetic
-from repro.serving import RetrievalEngine, make_backend
+from repro.serving import QueryResult, RetrievalEngine, SchedulerConfig, make_backend
+from repro.serving.traffic import zipf_weights
 
 
 def main():
@@ -21,13 +23,15 @@ def main():
     ap.add_argument("--n", type=int, default=30_000)
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--arrivals", type=int, default=1024,
+                    help="Zipf-skewed requests drawn from the query pool")
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--k", type=int, default=100)
     args = ap.parse_args()
 
     corpus = synthetic.retrieval_corpus(0, args.n, args.dim)
     queries, _ = synthetic.retrieval_queries(1, corpus, args.queries)
-    gt = flat_search(corpus, queries, k=args.k)
+    gt = np.asarray(flat_search(corpus, queries, k=args.k).ids)
     rng = jax.random.PRNGKey(0)
 
     backends = {}
@@ -46,24 +50,54 @@ def main():
         "mplsh", build_mplsh(rng, corpus), corpus, n_probe=8
     )
 
-    print(f"{'backend':8s} {'AQT(ms)':>9s} {'recall@10':>10s} {'batches':>8s}")
+    # The serving workload: arrivals repeat popular pool queries (Zipf) from
+    # three tenants of very different submit rates — the shape the result
+    # cache and the weighted-fair queues exist for.
+    trng = np.random.default_rng(7)
+    qarr = np.asarray(queries)
+    pool_idx = trng.choice(
+        len(qarr), size=args.arrivals, p=zipf_weights(len(qarr), 1.1)
+    )
+    tenants = trng.choice(
+        ["free", "pro", "enterprise"], size=args.arrivals, p=[0.6, 0.3, 0.1]
+    )
+
+    print(f"{'backend':8s} {'AQT(ms)':>9s} {'p99(ms)':>8s} {'recall@10':>10s} "
+          f"{'cache':>6s} {'batches':>8s}")
     for name, fn in backends.items():
-        engine = RetrievalEngine(fn, batch_size=args.batch_size, k=args.k,
-                                 dim=args.dim)
-        engine.warmup()
+        engine = RetrievalEngine(
+            fn, batch_size=args.batch_size, k=args.k, dim=args.dim,
+            scheduler=SchedulerConfig(
+                dynamic_batch=True,
+                min_batch=max(1, args.batch_size // 8),
+                cache_size=4 * len(qarr),
+                tenant_weights={"free": 1.0, "pro": 2.0, "enterprise": 4.0},
+            ),
+        )
+        engine.warmup()  # compiles every pow2 batch size once, off-path
         # Submit/drain/collect in windows: result() pops and the results map
         # is bounded, so collecting right after each drain keeps the engine's
-        # memory flat however large --queries is.
-        rows, qarr = [], np.asarray(queries)
+        # memory flat however many arrivals there are.
+        rows, idx_rows = [], []
         window = min(4096, engine.max_results)
-        for start in range(0, len(qarr), window):
-            rids = [engine.submit(v) for v in qarr[start:start + window]]
+        for start in range(0, args.arrivals, window):
+            sl = slice(start, min(start + window, args.arrivals))
+            rids = [
+                engine.submit(qarr[i], tenant=t)
+                for i, t in zip(pool_idx[sl], tenants[sl])
+            ]
             engine.drain()
-            rows.extend(engine.result(r)[0] for r in rids)
+            for i, r in zip(pool_idx[sl], rids):
+                res = engine.result(r)
+                if isinstance(res, QueryResult):
+                    rows.append(np.asarray(res.ids))
+                    idx_rows.append(i)
         got = np.stack(rows)
-        rec = float(recall_at_k(got[:, :10], gt.ids[:, :10]))
-        print(f"{name:8s} {engine.stats.aqt*1e3:9.3f} {rec:10.4f} "
-              f"{engine.stats.n_batches:8d}")
+        rec = float(recall_at_k(got[:, :10], gt[idx_rows, :10]))
+        s = engine.stats
+        print(f"{name:8s} {s.aqt*1e3:9.3f} "
+              f"{s.latency_quantile(0.99)*1e3:8.2f} {rec:10.4f} "
+              f"{s.cache_hit_rate:6.0%} {s.n_batches:8d}")
 
 
 if __name__ == "__main__":

@@ -1037,3 +1037,32 @@ def search_lider(
         prune_margin=prune_margin, with_stats=with_stats,
         rescore_factor=rescore_factor, block_c=block_c,
     )
+
+
+# Every jit on the serving query path (all tiers + the degraded fallback).
+# The cache-size sum below is the recompile detector behind the serving
+# front end's zero-retrace gate.
+_QUERY_PATH_JITS = (
+    "_search_lider_device",
+    "host_first_pass",
+    "host_rescore",
+    "compressed_only_topk",
+    "_route_pruned",
+    "_cluster_major_first_pass",
+    "_rescore_provisional",
+)
+
+
+def query_path_cache_size() -> int:
+    """Total compiled-trace count across every jit the serving query path
+    can touch. After ``RetrievalEngine.warmup()`` this number must stay
+    flat across any mix of batch sizes and ladder rungs — a delta means a
+    query ate an XLA re-trace (tests + ``benchmarks.serve_scale`` gate on
+    delta == 0). Uses the jit cache-size introspection when this jax
+    version exposes it; contributes 0 per function otherwise."""
+    total = 0
+    for name in _QUERY_PATH_JITS:
+        fn = globals()[name]
+        if hasattr(fn, "_cache_size"):
+            total += fn._cache_size()
+    return total

@@ -18,6 +18,7 @@ search — the end-to-end serving driver for the paper's system.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -29,7 +30,14 @@ from ..core import update as update_lib
 from ..core.baselines import build_ivfpq, build_mplsh, build_pq, build_sklsh, flat_search
 from ..core.utils import recall_at_k
 from ..data import synthetic
-from ..serving import DegradePolicy, RetrievalEngine, make_backend
+from ..serving import (
+    DegradePolicy,
+    QueryResult,
+    RetrievalEngine,
+    SchedulerConfig,
+    make_backend,
+)
+from ..serving import traffic
 from ..training import checkpoint
 
 
@@ -132,6 +140,40 @@ def main() -> None:
         help="per-request answer deadline driving the engine's degradation "
         "controller and deadline-miss accounting",
     )
+    # Async front-end knobs (DESIGN.md §Serving front end).
+    ap.add_argument(
+        "--arrival", choices=["closed", "zipf", "burst"], default="closed",
+        help="traffic shape: closed (submit-all/drain, the legacy loop), "
+        "zipf (open-loop Poisson arrivals, Zipf-popular queries), or burst "
+        "(zipf + alternating high-rate episodes)",
+    )
+    ap.add_argument(
+        "--arrival-rate", type=float, default=None, metavar="QPS",
+        help="open-loop mean arrival rate; default: 2x the measured warm "
+        "full-batch throughput (mild overload)",
+    )
+    ap.add_argument(
+        "--tenants", type=int, default=1,
+        help="number of tenants; submits are spread across per-tenant "
+        "weighted-fair queues",
+    )
+    ap.add_argument(
+        "--slo-ms", type=float, default=None,
+        help="per-request latency SLO (milliseconds): drives the "
+        "scheduler's load signal, dynamic batch-size cap, and — with a "
+        "degradation ladder — online frontier navigation",
+    )
+    ap.add_argument(
+        "--cache-size", type=int, default=0,
+        help="result-cache capacity (entries); hits are bit-identical to a "
+        "fresh search and invalidated on apply_updates",
+    )
+    ap.add_argument(
+        "--dynamic-batch", action="store_true",
+        help="size each dispatch from the pre-warmed pow2 batch ladder "
+        "(queue depth + SLO headroom) instead of always padding to "
+        "--batch-size",
+    )
     args = ap.parse_args()
     use_fused = {"auto": None, "on": True, "off": False}[args.use_fused]
     lifecycle = args.save_index or args.load_index or args.update_fraction > 0
@@ -160,6 +202,8 @@ def main() -> None:
         raise SystemExit("--block-q needs --storage-dtype int8/int4")
     if not 0.0 <= args.update_fraction < 1.0:
         raise SystemExit("--update-fraction must be in [0, 1)")
+    if args.tenants < 1:
+        raise SystemExit("--tenants must be >= 1")
 
     if args.embeddings:
         embs = synthetic.load_embeddings(args.embeddings)
@@ -270,40 +314,32 @@ def main() -> None:
             f"seed={fault_plan.seed}"
         )
     policy = DegradePolicy(deadline_s=args.deadline_s)
+    sched_cfg = SchedulerConfig(
+        dynamic_batch=args.dynamic_batch,
+        min_batch=max(1, args.batch_size // 8),
+        cache_size=args.cache_size,
+        slo_s=args.slo_ms / 1e3 if args.slo_ms is not None else None,
+    )
     if args.backend == "lider":
         search = make_backend("lider", None, updatable=True, **backend_kw)
         engine = RetrievalEngine(
             search, batch_size=args.batch_size, k=args.k,
             dim=embs.shape[1], params=index, policy=policy,
-            fault_plan=fault_plan,
+            fault_plan=fault_plan, scheduler=sched_cfg,
         )
     else:
         search = make_backend(args.backend, index, embs, **backend_kw)
         engine = RetrievalEngine(
             search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1],
-            policy=policy, fault_plan=fault_plan,
+            policy=policy, fault_plan=fault_plan, scheduler=sched_cfg,
         )
     engine.warmup()
 
     qs = jax.device_get(queries)
-    got_rows = []
+    tenant_of = lambda i: f"tenant{i % args.tenants}"
+    got_rows = []  # (gt row index, answered ids) — shed requests excluded
 
-    # Submit/drain/collect in windows sized under the engine's results
-    # bound: result() pops, and the results map is a bounded FIFO — queueing
-    # a whole large --queries run before collecting would evict the oldest
-    # answers mid-drain.
-    window = min(4096, engine.max_results)
-
-    def serve_chunk(chunk) -> None:
-        for start in range(0, len(chunk), window):
-            rids = [engine.submit(q) for q in chunk[start:start + window]]
-            engine.drain()
-            got_rows.extend(engine.result(r)[0] for r in rids)
-
-    if held_embs is not None:
-        # Mixed traffic: serve half, upsert the holdout, serve the rest.
-        half = len(qs) // 2
-        serve_chunk(qs[:half])
+    def apply_holdout_upsert() -> None:
         t0 = time.time()
         try:
             grew = engine.apply_updates(
@@ -325,9 +361,73 @@ def main() -> None:
             f"(recompiles={engine.recompiles}, "
             f"rollbacks={engine.stats.n_update_rollbacks})"
         )
-        serve_chunk(qs[half:])
+
+    if args.arrival == "closed":
+        # Submit/drain/collect in windows sized under the engine's results
+        # bound: result() pops, and the results map is a bounded FIFO —
+        # queueing a whole large --queries run before collecting would evict
+        # the oldest answers mid-drain.
+        window = min(4096, engine.max_results)
+
+        def serve_chunk(chunk, base) -> None:
+            for start in range(0, len(chunk), window):
+                rids = [
+                    engine.submit(q, tenant=tenant_of(base + start + j))
+                    for j, q in enumerate(chunk[start:start + window])
+                ]
+                engine.drain()
+                for j, r in enumerate(rids):
+                    res = engine.result(r)
+                    if isinstance(res, QueryResult):
+                        got_rows.append((base + start + j, res.ids))
+
+        if held_embs is not None:
+            # Mixed traffic: serve half, upsert the holdout, serve the rest.
+            half = len(qs) // 2
+            serve_chunk(qs[:half], 0)
+            apply_holdout_upsert()
+            serve_chunk(qs[half:], half)
+        else:
+            serve_chunk(qs, 0)
     else:
-        serve_chunk(qs)
+        # Open loop (DESIGN.md §Serving front end): seeded Zipf[+burst]
+        # arrivals over the query set as a popularity pool, replayed in
+        # real time against the engine; with --update-fraction the holdout
+        # upsert lands between the two halves of the trace.
+        rate = args.arrival_rate
+        if rate is None:
+            qw = jnp.zeros((args.batch_size, embs.shape[1]), jnp.float32)
+            t0 = time.perf_counter()
+            out, _ = engine._split_out(engine._search(qw))
+            jax.block_until_ready((out.ids, out.scores))
+            rate = 2.0 * args.batch_size / (time.perf_counter() - t0)
+        trace = traffic.make_trace(
+            seed=3, n_arrivals=len(qs), pool_size=len(qs), mean_rate=rate,
+            pattern=args.arrival, n_tenants=args.tenants,
+        )
+        print(
+            f"[serve] open loop: {len(trace)} {args.arrival} arrivals at "
+            f"{rate:.0f} qps across {args.tenants} tenant(s)"
+        )
+
+        def replay(part) -> None:
+            t_base = part[0].t if part else 0.0
+            shifted = [
+                dataclasses.replace(a, t=a.t - t_base) for a in part
+            ]
+            rids = traffic.run_open_loop(engine, shifted, qs)
+            for a, r in zip(shifted, rids):
+                res = engine.result(r)
+                if isinstance(res, QueryResult):
+                    got_rows.append((a.query_idx, res.ids))
+
+        if held_embs is not None:
+            half = len(trace) // 2
+            replay(trace[:half])
+            apply_holdout_upsert()
+            replay(trace[half:])
+        else:
+            replay(trace)
     pruned_note = ""
     if engine.stats.n_probes_total:
         per_batch = ", ".join(
@@ -357,9 +457,13 @@ def main() -> None:
         print(f"[serve] index saved -> {path}")
 
     gt = flat_search(embs, queries, k=args.k)
-    got = jnp.stack(got_rows)
-    rec = recall_at_k(got, gt.ids)
-    print(f"[serve] recall@{args.k} vs Flat = {float(rec):.4f}")
+    got = jnp.stack([jnp.asarray(ids) for _, ids in got_rows])
+    gt_rows = gt.ids[jnp.asarray([i for i, _ in got_rows])]
+    rec = recall_at_k(got, gt_rows)
+    print(
+        f"[serve] recall@{args.k} vs Flat = {float(rec):.4f} "
+        f"({len(got_rows)} answered)"
+    )
 
     if args.stats_json:
         import json
@@ -403,6 +507,19 @@ def main() -> None:
             "n_faults_fired": (
                 fault_plan.n_fired if fault_plan is not None else 0
             ),
+            # Front-end scheduler counters (DESIGN.md §Serving front end).
+            "arrival": args.arrival,
+            "tenants": args.tenants,
+            "slo_ms": args.slo_ms,
+            "cache_size": args.cache_size,
+            "dynamic_batch": args.dynamic_batch,
+            "n_cache_hits": s.n_cache_hits,
+            "n_cache_misses": s.n_cache_misses,
+            "cache_hit_rate": s.cache_hit_rate,
+            "n_rung_steps": s.n_rung_steps,
+            "batch_size_trace_tail": list(s.batch_size_trace)[-16:],
+            "p50_latency_s": s.latency_quantile(0.5),
+            "p99_latency_s": s.latency_quantile(0.99),
         }
         with open(args.stats_json, "w") as f:
             json.dump(record, f, indent=1)

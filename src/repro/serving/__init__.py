@@ -6,12 +6,26 @@ from .engine import (
     Shed,
     make_backend,
 )
+from .scheduler import (
+    DEFAULT_TENANT,
+    Request,
+    ResultCache,
+    Scheduler,
+    SchedulerConfig,
+    batch_ladder,
+)
 
 __all__ = [
     "EVICTED",
+    "DEFAULT_TENANT",
     "DegradePolicy",
     "QueryResult",
+    "Request",
+    "ResultCache",
     "RetrievalEngine",
+    "Scheduler",
+    "SchedulerConfig",
     "Shed",
+    "batch_ladder",
     "make_backend",
 ]

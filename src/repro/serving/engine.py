@@ -1,9 +1,17 @@
 """Batched retrieval serving engine.
 
 Wraps an index backend (LIDER or any baseline) behind one API:
-``submit`` queues requests, ``drain`` pads to the compiled batch size and
-executes — the latency-vs-throughput batching knob real serving stacks tune.
-AQT (average query time, the paper's efficiency metric) is measured here.
+``submit`` queues requests, ``drain`` executes them in batches — the
+latency-vs-throughput batching knob real serving stacks tune. AQT
+(average query time, the paper's efficiency metric) is measured here.
+
+Execution is split from scheduling (DESIGN.md §Serving front end): a
+:class:`~.scheduler.Scheduler` decides admission, per-tenant fairness,
+result-cache hits, and the batch size of each dispatch; the engine owns
+the execution core (:meth:`RetrievalEngine._execute_batch`, tier-
+dispatched), the double-buffered host-tier pipeline, the degradation
+ladder, and transactional updates. The default ``SchedulerConfig``
+reproduces the legacy fixed-batch FIFO engine byte-for-byte.
 
 Backends share the signature ``search(queries (B, d), k) -> TopK``; an
 *updatable* LIDER backend takes ``search(params, queries, k)`` and the engine
@@ -33,6 +41,7 @@ from ..core.baselines import (
     sklsh_search,
 )
 from ..core.core_model import TopK
+from .scheduler import DEFAULT_TENANT, Request, Scheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -65,13 +74,39 @@ class EngineStats:
     n_fetch_retries: int = 0  # host fetches retried after a failure
     n_fetch_failures: int = 0  # batches whose fetch exhausted all retries
     n_degraded: int = 0  # queries answered compressed-only (degraded=True)
-    n_shed: int = 0  # requests rejected by queue-cap admission control
+    n_shed: int = 0  # requests rejected by admission control
     n_deadline_misses: int = 0  # answered, but past the per-request deadline
     n_rung_steps: int = 0  # degradation-ladder step-downs
+    # Front-end scheduler counters (DESIGN.md §Serving front end). Cache
+    # hits count in n_queries (they are answered traffic) but add zero
+    # device time. Like batch_pruned_fraction above, the per-batch /
+    # per-request traces are bounded deques: lifetime aggregates live in
+    # counters, recent windows in deques — nothing grows with uptime.
+    n_cache_hits: int = 0
+    n_cache_misses: int = 0  # admitted-to-queue (executed on device)
+    batch_size_trace: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=256)
+    )
+    recent_latency_s: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=1024)
+    )
 
     @property
     def aqt(self) -> float:
         return self.total_time_s / max(self.n_queries, 1)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of answered (non-shed) requests served from the cache."""
+        return self.n_cache_hits / max(
+            self.n_cache_hits + self.n_cache_misses, 1
+        )
+
+    def latency_quantile(self, q: float) -> float:
+        """Latency quantile (e.g. 0.5 / 0.99) over the recent window."""
+        if not self.recent_latency_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.recent_latency_s), q))
 
     @property
     def overlap_fraction(self) -> float:
@@ -95,16 +130,22 @@ class QueryResult:
     additionally carries the fault-tolerance metadata: ``degraded`` is True
     when the answer came from the compressed-only fallback (no exact
     rescore), ``rung`` is the degradation-ladder rung it was served at
-    (0 = nominal), ``latency_s`` is submit-to-answer wall time."""
+    (0 = nominal), ``latency_s`` is submit-to-answer wall time, ``cached``
+    marks answers served from the scheduler's result cache (bit-identical
+    to a fresh search at the same generation and rung)."""
 
-    __slots__ = ("ids", "scores", "degraded", "rung", "latency_s")
+    __slots__ = ("ids", "scores", "degraded", "rung", "latency_s", "cached")
 
-    def __init__(self, ids, scores, *, degraded=False, rung=0, latency_s=0.0):
+    def __init__(
+        self, ids, scores, *, degraded=False, rung=0, latency_s=0.0,
+        cached=False,
+    ):
         self.ids = ids
         self.scores = scores
         self.degraded = degraded
         self.rung = rung
         self.latency_s = latency_s
+        self.cached = cached
 
     def __iter__(self):
         return iter((self.ids, self.scores))
@@ -144,6 +185,26 @@ class _EvictedType:
 
 
 EVICTED = _EvictedType()
+
+
+@dataclasses.dataclass
+class _PendingBatch:
+    """One stage1-dispatched batch in the host-tier pipeline. ``rung``/
+    ``bs`` are captured at dispatch (the live rung may step before the
+    batch finishes); ``retry_at`` is the earliest wall time a failed fetch
+    may be retried (None = ready now); ``overlap_armed`` is set when a
+    later batch's stage 1 was dispatched under this batch's fetch."""
+
+    chunk: list
+    bs: int
+    q: jnp.ndarray
+    prov: object
+    pruned: object
+    rung: int
+    attempts: int = 0
+    retry_at: Optional[float] = None
+    overlap_armed: bool = False
+    blocked: bool = False
 
 
 # Operating-point knobs a degradation-ladder rung may override (the PR-3
@@ -339,13 +400,18 @@ def make_backend(
 
 
 class RetrievalEngine:
-    """Fixed-batch serving with request queueing and AQT accounting.
+    """Batched serving with scheduled admission and AQT accounting.
 
     With ``params`` set, ``search_fn`` must take ``(params, q, k)`` and the
     engine serves whatever params it currently holds — ``apply_updates``
     swaps them atomically between batches, tracking a generation counter and
     recompiling (re-warming) only when an update grew array shapes (capacity
     growth); same-shape updates reuse the compiled search.
+
+    ``scheduler`` (a :class:`SchedulerConfig`) configures the front end:
+    per-tenant weighted-fair queues, the result cache, dynamic batch
+    sizing, and SLO-driven admission. The default config is the legacy
+    fixed-batch FIFO behavior exactly.
     """
 
     def __init__(
@@ -359,6 +425,7 @@ class RetrievalEngine:
         max_results: int = 65536,
         policy: DegradePolicy | None = None,
         fault_plan=None,
+        scheduler: SchedulerConfig | None = None,
     ):
         self.search_fn = search_fn
         self.batch_size = batch_size
@@ -380,7 +447,16 @@ class RetrievalEngine:
         self.device_generation = 0  # pytree leaves changed
         self.host_generation = 0  # host EmbStore content changed
         self.recompiles = 0  # bumped only when shapes changed
-        self.queue: collections.deque[tuple[int, np.ndarray]] = collections.deque()
+        self.sched_cfg = scheduler if scheduler is not None else SchedulerConfig()
+        self.scheduler = Scheduler(
+            self.sched_cfg,
+            batch_size=batch_size,
+            deadline_s=self.policy.deadline_s,
+            max_queue=self.policy.max_queue,
+        )
+        # How many stage1-dispatched batches the host-tier pipeline keeps in
+        # flight (2 = the PR 5 double buffer).
+        self._pipeline_depth = 2
         # Bounded FIFO of answered (ids, scores) pairs. ``result()`` pops by
         # default, so a well-behaved client keeps this near-empty; the bound
         # is the backstop for clients that never collect (a long-running
@@ -437,37 +513,68 @@ class RetrievalEngine:
         return out, None
 
     def warmup(self, *, warm_ladder: bool = True):
-        q = jnp.zeros((self.batch_size, self.dim), jnp.float32)
-        out, _ = self._split_out(self._search(q))
-        jax.block_until_ready(out.ids)
-        # Pre-compile every ladder rung too: a rung step must never eat a
-        # re-trace on the query path (the ladder is bounded, so this is a
-        # bounded number of compiles).
-        if warm_ladder and self.policy.ladder and self._accepts_point:
-            saved = self.rung
-            try:
-                for r in range(1, len(self.policy.ladder) + 1):
+        """Pre-compile every reachable query-path trace: each batch size on
+        the scheduler's pow2 ladder, at the nominal point and (with
+        ``warm_ladder``) every degradation-ladder rung. After this, neither
+        a rung step nor a dynamic batch-size choice ever re-traces on the
+        query path — both ladders are bounded, so this is a bounded number
+        of compiles, eaten once off the serving path."""
+        saved = self.rung
+        staged = self._staged_host_serving()
+        try:
+            for bs in self.scheduler.ladder:
+                q = jnp.zeros((bs, self.dim), jnp.float32)
+                rungs = [0]
+                if warm_ladder and self.policy.ladder and self._accepts_point:
+                    rungs += list(range(1, len(self.policy.ladder) + 1))
+                for r in rungs:
                     self.rung = r
                     out, _ = self._split_out(self._search(q))
                     jax.block_until_ready(out.ids)
-            finally:
-                self.rung = saved
+                    if staged:
+                        # The pipelined drain runs the STAGED spelling
+                        # (host_first_pass -> fetch -> host_rescore), whose
+                        # stage jits are separate traces from the serial
+                        # search warmed above. Warm them here too — outside
+                        # any faults.activate window, so chaos-plan call
+                        # counters are untouched — or the first live
+                        # dispatch pays the trace on the query path.
+                        prov, _ = self.search_fn.host_stage1(
+                            self.params, q, self.k, point=self._rung_point()
+                        )
+                        fetched = self.search_fn.host_fetch(
+                            self.params, prov.ids
+                        )
+                        out2 = self.search_fn.host_stage2(
+                            self.params, jnp.asarray(fetched), prov.ids, q,
+                            self.k,
+                        )
+                        jax.block_until_ready(out2.ids)
+        finally:
+            self.rung = saved
 
-    def submit(self, query: np.ndarray) -> int:
+    @property
+    def pending_requests(self) -> int:
+        """Queued (admitted, not yet executed) request count."""
+        return len(self.scheduler)
+
+    def submit(self, query: np.ndarray, *, tenant: str = DEFAULT_TENANT) -> int:
         rid = self._next_id
         self._next_id += 1
-        if (
-            self.policy.max_queue is not None
-            and len(self.queue) >= self.policy.max_queue
-        ):
+        vec = np.asarray(query, np.float32)
+        req = Request(
+            rid=rid,
+            query=vec,
+            t_submit=time.perf_counter(),
+            tenant=tenant,
+            fp=self.scheduler.fingerprint(vec),
+        )
+        reason = self.scheduler.admit(req)
+        if reason is not None:
             # Admission control: refuse now with a structured answer rather
             # than queueing work we cannot serve within the deadline.
             self.stats.n_shed += 1
-            self._put_result(rid, Shed(rid=rid))
-            return rid
-        self.queue.append(
-            (rid, np.asarray(query, np.float32), time.perf_counter())
-        )
+            self._put_result(rid, Shed(rid=rid, reason=reason))
         return rid
 
     def apply_updates(self, update_fn: Callable) -> bool:
@@ -537,6 +644,11 @@ class RetrievalEngine:
             self.device_generation += 1
         if host_changed:
             self.host_generation += 1
+        # Cache coherence: the generation is part of every cache key, so a
+        # stale hit is already impossible — clearing additionally frees the
+        # dead generation's entries from the bounded capacity.
+        if self.scheduler.cache is not None:
+            self.scheduler.cache.clear()
         if grew:
             self.recompiles += 1
             self.warmup()
@@ -546,22 +658,69 @@ class RetrievalEngine:
     def _host_store(params):
         return getattr(getattr(params, "bank", None), "store", None)
 
-    def _next_batch(self):
-        """Pop up to ``batch_size`` requests into the padded device batch.
+    def _take_batch(self, bs: int) -> list[Request]:
+        """Pop up to ``bs`` requests (weighted-fair across tenants),
+        answering cache hits inline and topping the batch back up from the
+        queue — repeated queries never occupy device batch slots."""
+        chunk: list[Request] = []
+        cache = self.scheduler.cache
+        while len(chunk) < bs:
+            reqs = self.scheduler.take(bs - len(chunk))
+            if not reqs:
+                break
+            for req in reqs:
+                hit = (
+                    cache.get(req.fp, (self.k, self.generation, self.rung))
+                    if cache is not None and req.fp is not None
+                    else None
+                )
+                if hit is not None:
+                    self._answer_cached(req, hit)
+                else:
+                    if cache is not None:
+                        self.stats.n_cache_misses += 1
+                    chunk.append(req)
+        return chunk
+
+    def _answer_cached(self, req: Request, hit) -> None:
+        """Serve ``req`` from the result cache: bit-identical answer
+        (same bytes, generation, and rung in the key), zero device time.
+        Counts in n_queries but adds nothing to total_time_s, so cache hits
+        pull AQT down exactly as they pull real latency down."""
+        ids, scores = hit
+        now = time.perf_counter()
+        latency = now - req.t_submit
+        self.stats.n_cache_hits += 1
+        self.stats.n_queries += 1
+        self.stats.recent_latency_s.append(latency)
+        deadline = self.policy.deadline_s
+        if deadline is not None and latency > deadline:
+            self.stats.n_deadline_misses += 1
+        self._put_result(
+            req.rid,
+            QueryResult(
+                ids.copy(),  # clients may mutate; never hand out the
+                scores.copy(),  # cached arrays themselves
+                rung=self.rung,
+                latency_s=latency,
+                cached=True,
+            ),
+        )
+
+    def _device_batch(self, chunk: list[Request], bs: int) -> jnp.ndarray:
+        """Fill the padded (bs, dim) device batch from ``chunk``.
 
         The device array must be a COPY of the preallocated buffer, never an
         alias (CPU jax can zero-copy suitably-aligned NumPy arrays): the
         pipelined drain refills the buffer for batch i+1 while batch i's
         device input is still pending in its rescore stage.
         """
-        n = min(len(self.queue), self.batch_size)
-        chunk = [self.queue.popleft() for _ in range(n)]
-        q = self._batch_buf
-        for i, (_, vec, _) in enumerate(chunk):
-            q[i] = vec
-        if n < self.batch_size:  # zero stale rows from the last batch
-            q[n:] = 0.0
-        return chunk, n, jnp.array(q)  # jnp.array copies; asarray may alias
+        q = self._batch_buf[:bs]
+        for i, req in enumerate(chunk):
+            q[i] = req.query
+        if len(chunk) < bs:  # zero stale rows from the last batch
+            q[len(chunk):] = 0.0
+        return jnp.array(q)  # jnp.array copies; asarray may alias
 
     def _put_result(self, rid: int, value) -> None:
         """Insert one answer, enforcing the results-map bound."""
@@ -573,15 +732,26 @@ class RetrievalEngine:
             while len(self._evicted) > self.max_results:
                 self._evicted.popitem(last=False)
 
-    def _record_batch(self, chunk, n, out, pruned, *, degraded=False) -> None:
+    def _record_batch(
+        self, chunk, n, out, pruned, *, bs=None, rung=None, degraded=False,
+    ) -> None:
         """Account one completed batch and route its answers (outside the
-        AQT window — this includes the result D2H conversion)."""
+        AQT window — this includes the result D2H conversion).
+
+        ``bs``/``rung`` are the batch size and ladder rung the batch was
+        *dispatched* with — under the pipelined drain the controller may
+        have stepped the live rung between dispatch and completion, and the
+        recorded rung must match the operating point that actually computed
+        the answer."""
+        bs = self.batch_size if bs is None else bs
+        rung = self.rung if rung is None else rung
         faults.fire(faults.D2H)  # "delay" here models a slow __array__
         ids = np.asarray(out.ids)
         scores = np.asarray(out.scores)
         self.stats.n_queries += n
         self.stats.n_batches += 1
-        self.stats.n_padded += self.batch_size - n
+        self.stats.n_padded += bs - n
+        self.stats.batch_size_trace.append(bs)
         if degraded:
             self.stats.n_degraded += n
         if pruned is not None:
@@ -595,20 +765,29 @@ class RetrievalEngine:
             )
         now = time.perf_counter()
         deadline = self.policy.deadline_s
-        for i, (rid, _, t_submit) in enumerate(chunk):
-            latency = now - t_submit
+        cache = self.scheduler.cache
+        for i, req in enumerate(chunk):
+            latency = now - req.t_submit
+            self.stats.recent_latency_s.append(latency)
             if deadline is not None and latency > deadline:
                 self.stats.n_deadline_misses += 1
             self._put_result(
-                rid,
+                req.rid,
                 QueryResult(
                     ids[i],
                     scores[i],
                     degraded=degraded,
-                    rung=self.rung,
+                    rung=rung,
                     latency_s=latency,
                 ),
             )
+            # Only full-fidelity answers are cacheable: a degraded
+            # (compressed-only) answer at the same key would violate the
+            # bit-identical-to-fresh-search guarantee.
+            if cache is not None and req.fp is not None and not degraded:
+                cache.put(
+                    req.fp, (self.k, self.generation, rung), ids[i], scores[i]
+                )
 
     def _staged_host_serving(self) -> bool:
         """Host-tier LIDER params + a backend exposing the staged search."""
@@ -622,20 +801,35 @@ class RetrievalEngine:
         )
 
     def _adjust_rung(self) -> None:
-        """Deadline-pressure rung controller, called once per batch.
+        """Operating-point controller, called once per dispatch.
 
-        Steps down (cheaper operating point) when the oldest queued request
-        has aged past ``degrade_age_fraction`` of the deadline; steps back
-        up when pressure subsides below ``recover_age_fraction``. Bounded
-        by the ladder length; every rung was pre-compiled in warmup."""
+        Two modes. Legacy (no scheduler SLO): the PR 6 deadline-pressure
+        hysteresis — step down (cheaper point) when the oldest queued
+        request has aged past ``degrade_age_fraction`` of the deadline,
+        step back up below ``recover_age_fraction``. Frontier navigation
+        (``SchedulerConfig.slo_s`` set): map the scheduler's continuous
+        load signal directly onto the ladder — rung = round(load * len) —
+        so the engine rides the measured speed-quality frontier instead of
+        walking it one reactive step at a time. Either way every rung was
+        pre-compiled in warmup."""
         pol = self.policy
-        if not pol.ladder or pol.deadline_s is None or not self._accepts_point:
+        if not pol.ladder or not self._accepts_point:
             return
-        if not self.queue:
+        if self.sched_cfg.slo_s is not None:
+            load = self.scheduler.load_signal(time.perf_counter())
+            target = min(int(round(load * len(pol.ladder))), len(pol.ladder))
+            if target > self.rung:
+                self.stats.n_rung_steps += target - self.rung
+            self.rung = target
+            return
+        if pol.deadline_s is None:
+            return
+        oldest = self.scheduler.oldest_submit()
+        if oldest is None:
             if self.rung > 0:
                 self.rung -= 1
             return
-        age = time.perf_counter() - self.queue[0][2]
+        age = time.perf_counter() - oldest
         if age >= pol.deadline_s * pol.degrade_age_fraction:
             if self.rung < len(pol.ladder):
                 self.rung += 1
@@ -643,32 +837,55 @@ class RetrievalEngine:
         elif age <= pol.deadline_s * pol.recover_age_fraction and self.rung > 0:
             self.rung -= 1
 
-    def drain(self) -> None:
-        """Execute queued requests in fixed-size (padded) batches.
+    def drain(self, max_dispatches: int | None = None) -> None:
+        """Execute queued requests in scheduler-sized batches.
 
         Host-tier LIDER indexes (``rescore_tier="host"``) drain through the
         double-buffered fetch->rescore pipeline (:meth:`_drain_pipelined`);
-        everything else executes serially. The engine's fault plan (chaos
-        testing) is active for the duration of the drain.
+        everything else executes serially through the same per-dispatch
+        plumbing (:meth:`_execute_batch`). ``max_dispatches`` bounds the
+        number of batches executed this call — the open-loop driver's
+        hook: submit newly-arrived traffic, drain one dispatch, repeat.
+        The engine's fault plan (chaos testing) is active for the duration
+        of the drain.
         """
         with faults.activate(self.fault_plan):
             if self._staged_host_serving():
-                return self._drain_pipelined()
-            while self.queue:
+                return self._drain_pipelined(max_dispatches)
+            n_disp = 0
+            while len(self.scheduler):
+                if max_dispatches is not None and n_disp >= max_dispatches:
+                    break
                 self._adjust_rung()
-                chunk, n, q = self._next_batch()
-                t0 = time.perf_counter()
-                out, pruned = self._split_out(self._search(q))
-                # Block on BOTH outputs so AQT covers all device time —
-                # blocking on ids alone under-counts when scores finish
-                # later. The AQT window closes HERE: D2H conversion
-                # (np.asarray) is host-side transfer the paper's efficiency
-                # metric must not include.
-                jax.block_until_ready((out.ids, out.scores))
-                self.stats.total_time_s += time.perf_counter() - t0
-                self._record_batch(chunk, n, out, pruned)
+                chunk = self._take_batch(self.scheduler.pick_batch_size())
+                if not chunk:  # everything was answered from the cache
+                    continue
+                n_disp += 1
+                self._execute_batch(chunk)
 
-    def _drain_pipelined(self) -> None:
+    def _execute_batch(self, chunk: list[Request]) -> None:
+        """The serial execution core: pad to the smallest pre-warmed batch
+        size, search, block, account. One compiled trace per ladder size —
+        dispatching ``len(chunk)`` directly would re-trace per distinct
+        depth."""
+        bs = next(
+            (b for b in self.scheduler.ladder if b >= len(chunk)),
+            self.scheduler.ladder[-1],
+        )
+        q = self._device_batch(chunk, bs)
+        t0 = time.perf_counter()
+        out, pruned = self._split_out(self._search(q))
+        # Block on BOTH outputs so AQT covers all device time — blocking on
+        # ids alone under-counts when scores finish later. The AQT window
+        # closes HERE: D2H conversion (np.asarray) is host-side transfer
+        # the paper's efficiency metric must not include.
+        jax.block_until_ready((out.ids, out.scores))
+        dt = time.perf_counter() - t0
+        self.stats.total_time_s += dt
+        self.scheduler.observe_service(bs, dt)
+        self._record_batch(chunk, len(chunk), out, pruned, bs=bs)
+
+    def _drain_pipelined(self, max_dispatches: int | None = None) -> None:
         """Double-buffered host-tier drain (§Tiered embedding store).
 
         Batch *i+1*'s compressed first pass is dispatched to the device
@@ -679,92 +896,142 @@ class RetrievalEngine:
         (per-batch windows would double-count the overlapped regions) and
         still excludes the result D2H conversions, which are measured and
         subtracted.
+
+        A batch whose host fetch fails is NOT finished in place: it is
+        parked with a ``retry_at`` backoff stamp while other pending
+        batches keep fetching/rescoring and new stage1 work keeps
+        dispatching — a host brownout slows one batch, not the pipeline
+        (the engine only sleeps when every pending batch is backing off
+        and there is nothing else to do).
         """
         t0 = time.perf_counter()
         d2h_s = 0.0
-        pending = None  # the batch whose fetch + rescore are still due
-        while self.queue or pending is not None:
-            nxt = None
-            if self.queue:
+        pending: collections.deque[_PendingBatch] = collections.deque()
+        n_disp = 0
+        while len(self.scheduler) or pending:
+            may_dispatch = (
+                len(self.scheduler)
+                and len(pending) < self._pipeline_depth
+                and (max_dispatches is None or n_disp < max_dispatches)
+            )
+            if may_dispatch:
                 self._adjust_rung()
-                chunk, n, q = self._next_batch()
-                # Async dispatch: returns before the device finishes, so the
-                # pending batch's host fetch below overlaps this compute.
-                point = self._rung_point()
-                prov, pruned = self.search_fn.host_stage1(
-                    self.params, q, self.k, point=point
-                )
-                nxt = (chunk, n, q, prov, pruned)
-            if pending is not None:
-                d2h_s += self._finish_host_batch(
-                    pending, overlapped=nxt is not None
-                )
-            pending = nxt
+                chunk = self._take_batch(self.scheduler.pick_batch_size())
+                if chunk:
+                    # Async dispatch: host_stage1 returns before the device
+                    # finishes, so every already-pending batch's host fetch
+                    # below overlaps this compute.
+                    for e in pending:
+                        e.overlap_armed = True
+                    pending.append(self._dispatch_stage1(chunk))
+                    n_disp += 1
+                continue
+            if not pending:
+                break  # queue non-empty but dispatch budget exhausted
+            now = time.perf_counter()
+            entry = next(
+                (
+                    e
+                    for e in pending
+                    if e.retry_at is None or e.retry_at <= now
+                ),
+                None,
+            )
+            if entry is None:
+                # Every pending batch is in fetch backoff and the dispatch
+                # window is closed — nothing useful to overlap; sleep to
+                # the earliest retry stamp.
+                wait = min(e.retry_at for e in pending) - now
+                if wait > 0:
+                    time.sleep(wait)
+                continue
+            finished_d2h = self._finish_host_batch(entry)
+            if finished_d2h is not None:
+                pending.remove(entry)
+                d2h_s += finished_d2h
         self.stats.total_time_s += max(time.perf_counter() - t0 - d2h_s, 0.0)
 
-    def _fetch_with_retry(self, prov_rows):
-        """Bounded-retry-with-backoff host fetch; None after exhaustion.
+    def _dispatch_stage1(self, chunk: list[Request]) -> "_PendingBatch":
+        """Pad + dispatch the compressed first pass; capture the operating
+        point (rung) the batch is computed with so its answers are recorded
+        against that point even if the controller steps the live rung
+        before the batch completes."""
+        bs = next(
+            (b for b in self.scheduler.ladder if b >= len(chunk)),
+            self.scheduler.ladder[-1],
+        )
+        q = self._device_batch(chunk, bs)
+        t0 = time.perf_counter()
+        prov, pruned = self.search_fn.host_stage1(
+            self.params, q, self.k, point=self._rung_point()
+        )
+        self.scheduler.observe_service(bs, time.perf_counter() - t0)
+        return _PendingBatch(
+            chunk=chunk, bs=bs, q=q, prov=prov, pruned=pruned, rung=self.rung
+        )
 
-        Backoff is exponential with deterministic (seeded) jitter so chaos
-        runs replay identically."""
+    def _finish_host_batch(self, e: "_PendingBatch") -> float | None:
+        """Fetch + rescore one stage1-dispatched batch. Returns the result
+        D2H conversion seconds (excluded from the AQT window), or None when
+        the fetch failed and the batch was parked for a backoff retry.
+
+        A host fetch that exhausts all its retries does NOT abort the
+        drain: the batch is answered compressed-only from its provisional
+        top-k' (``degraded=True``) and the rung controller steps down one
+        rung for subsequent batches. Backoff is exponential with
+        deterministic (seeded) jitter so chaos runs replay identically."""
         pol = self.policy
-        for attempt in range(pol.fetch_retries + 1):
-            try:
-                tf0 = time.perf_counter()
-                fetched = self.search_fn.host_fetch(self.params, prov_rows)
-                self.stats.host_fetch_us += (
-                    time.perf_counter() - tf0
-                ) * 1e6
-                return fetched
-            except Exception:
-                if attempt >= pol.fetch_retries:
-                    self.stats.n_fetch_failures += 1
-                    return None
-                self.stats.n_fetch_retries += 1
-                delay = pol.fetch_backoff_s * (
-                    pol.fetch_backoff_mult**attempt
-                )
-                delay *= 1.0 + self._rng.random()
-                if delay > 0:
-                    time.sleep(delay)
-
-    def _finish_host_batch(self, entry, *, overlapped: bool) -> float:
-        """Fetch + rescore one stage1-dispatched batch; returns the result
-        D2H conversion seconds (excluded from the AQT window).
-
-        A host fetch that fails all its retries does NOT abort the drain:
-        the batch is answered compressed-only from its provisional top-k'
-        (``degraded=True``) and the rung controller steps down one rung for
-        subsequent batches."""
-        chunk, n, q, prov, pruned = entry
-        # Close the device wait BEFORE the fetch timer: np.asarray(prov)
-        # inside host_fetch would otherwise block on the batch's first pass
-        # and charge device compute to the host-fetch stat.
-        jax.block_until_ready(prov)
-        fetched = self._fetch_with_retry(prov.ids)
-        if fetched is None:
-            # Degraded answer: stage 1 already holds the compressed-domain
-            # top-k' — no fetch, no exact rescore (DESIGN.md §Failure
-            # model, last ladder rung).
-            if self.policy.ladder and self.rung < len(self.policy.ladder):
-                self.rung += 1
-                self.stats.n_rung_steps += 1
-            out = lider_lib.compressed_only_topk(
-                self.params.bank.gids, prov, k=self.k
+        if not e.blocked:
+            # Close the device wait BEFORE the fetch timer: np.asarray(prov)
+            # inside host_fetch would otherwise block on the batch's first
+            # pass and charge device compute to the host-fetch stat.
+            jax.block_until_ready(e.prov)
+            e.blocked = True
+        try:
+            tf0 = time.perf_counter()
+            fetched = self.search_fn.host_fetch(self.params, e.prov.ids)
+            self.stats.host_fetch_us += (time.perf_counter() - tf0) * 1e6
+        except Exception:
+            e.attempts += 1
+            if e.attempts > pol.fetch_retries:
+                self.stats.n_fetch_failures += 1
+                return self._record_degraded(e)
+            self.stats.n_fetch_retries += 1
+            delay = pol.fetch_backoff_s * (
+                pol.fetch_backoff_mult ** (e.attempts - 1)
             )
-            jax.block_until_ready((out.ids, out.scores))
-            tc0 = time.perf_counter()
-            self._record_batch(chunk, n, out, pruned, degraded=True)
-            return time.perf_counter() - tc0
+            delay *= 1.0 + self._rng.random()
+            e.retry_at = time.perf_counter() + delay
+            return None  # parked; the drain loop keeps other batches moving
         self.stats.n_host_fetches += 1
-        if overlapped:
+        if e.overlap_armed:
             self.stats.n_overlapped_fetches += 1
         out = self.search_fn.host_stage2(
-            self.params, jnp.asarray(fetched), prov.ids, q, self.k
+            self.params, jnp.asarray(fetched), e.prov.ids, e.q, self.k
         )
         jax.block_until_ready((out.ids, out.scores))
         tc0 = time.perf_counter()
-        self._record_batch(chunk, n, out, pruned)
+        self._record_batch(
+            e.chunk, len(e.chunk), out, e.pruned, bs=e.bs, rung=e.rung
+        )
+        return time.perf_counter() - tc0
+
+    def _record_degraded(self, e: "_PendingBatch") -> float:
+        """Answer a fetch-exhausted batch compressed-only: stage 1 already
+        holds the compressed-domain top-k' — no fetch, no exact rescore
+        (DESIGN.md §Failure model, last ladder rung)."""
+        if self.policy.ladder and self.rung < len(self.policy.ladder):
+            self.rung += 1
+            self.stats.n_rung_steps += 1
+        out = lider_lib.compressed_only_topk(
+            self.params.bank.gids, e.prov, k=self.k
+        )
+        jax.block_until_ready((out.ids, out.scores))
+        tc0 = time.perf_counter()
+        self._record_batch(
+            e.chunk, len(e.chunk), out, e.pruned,
+            bs=e.bs, rung=e.rung, degraded=True,
+        )
         return time.perf_counter() - tc0
 
     def result(self, rid: int, *, keep: bool = False):

@@ -317,13 +317,42 @@ def pareto_frontier(results: Sequence[SweepResult]) -> list[SweepResult]:
 
 
 def select_operating_point(
-    results: Sequence[SweepResult], recall_target: float
+    results: Sequence[SweepResult],
+    recall_target: float,
+    load_signal: float | None = None,
 ) -> SweepResult:
-    """Cheapest point meeting the target; highest-recall point if none does."""
+    """Pick the operating point for one dispatch.
+
+    Offline spelling (``load_signal=None``, the PR 3 behavior): cheapest
+    point meeting the recall target; highest-recall point if none does.
+
+    Online spelling (``load_signal`` in [0, 1], from
+    ``serving.Scheduler.load_signal``): navigate the measured frontier
+    instead of holding one point. Load 0 is the nominal (recall-target)
+    point; rising load walks toward cheaper frontier points, reaching the
+    cheapest at load 1 — the engine trades recall for latency exactly when
+    queue pressure says the SLO is at risk, and every point on the walk is
+    a frontier point (never a dominated config). This is the 1-D rung
+    controller generalized: the ladder was "step down one rung under
+    deadline pressure"; this maps a continuous load signal onto the whole
+    frontier in one shot.
+    """
     meeting = [r for r in results if r.recall >= recall_target]
-    if meeting:
-        return min(meeting, key=lambda r: r.aqt_s)
-    return max(results, key=lambda r: (r.recall, -r.aqt_s))
+    nominal = (
+        min(meeting, key=lambda r: r.aqt_s)
+        if meeting
+        else max(results, key=lambda r: (r.recall, -r.aqt_s))
+    )
+    if load_signal is None:
+        return nominal
+    load = min(max(float(load_signal), 0.0), 1.0)
+    # Walk: nominal first, then strictly-cheaper frontier points ordered
+    # best-recall first (the same chain degradation_ladder materializes).
+    chain = [nominal] + sorted(
+        (r for r in pareto_frontier(results) if r.aqt_s < nominal.aqt_s),
+        key=lambda r: -r.recall,
+    )
+    return chain[int(round(load * (len(chain) - 1)))]
 
 
 def degradation_ladder(

@@ -1,0 +1,392 @@
+"""Async serving front end (DESIGN.md §Serving front end): weighted-fair
+queues, result cache coherence, dynamic batch sizing, SLO admission, the
+zero-recompile warmup contract, and the non-blocking fetch-backoff path."""
+import collections
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.core import lider, update
+from repro.core.utils import l2_normalize
+from repro.serving import (
+    DegradePolicy,
+    QueryResult,
+    RetrievalEngine,
+    SchedulerConfig,
+    make_backend,
+)
+from repro.serving.engine import EngineStats
+from repro.serving.scheduler import (
+    Request,
+    ResultCache,
+    Scheduler,
+    batch_ladder,
+)
+from repro.tuning import pareto
+
+
+# ---------------------------------------------------------------------------
+# Shared small device-tier index (module scope: tests here never mutate it).
+# ---------------------------------------------------------------------------
+N, DIM, K, BATCH = 600, 16, 5, 16
+
+
+@pytest.fixture(scope="module")
+def served():
+    x = l2_normalize(jax.random.normal(jax.random.PRNGKey(0), (N, DIM)))
+    q = np.asarray(l2_normalize(x[:64] + 0.02), np.float32)
+    params = lider.build_lider(
+        jax.random.PRNGKey(1),
+        x,
+        lider.LiderConfig(
+            n_clusters=8, n_probe=4, n_arrays=4, n_leaves=4, kmeans_iters=5
+        ),
+    )
+    return params, q
+
+
+def build_engine(params, *, sched=None, policy=None, fault_plan=None):
+    engine = RetrievalEngine(
+        make_backend("lider", None, updatable=True, n_probe=4),
+        batch_size=BATCH, k=K, dim=DIM, params=params,
+        policy=policy, fault_plan=fault_plan, scheduler=sched,
+    )
+    engine.warmup()
+    return engine
+
+
+def req(rid, tenant="t", t_submit=0.0):
+    return Request(
+        rid=rid, query=np.zeros(2, np.float32), t_submit=t_submit,
+        tenant=tenant,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scheduler unit: ladder, fairness, admission, sizing
+# ---------------------------------------------------------------------------
+def test_batch_ladder_pow2_and_includes_max():
+    assert batch_ladder(32, 1) == (1, 2, 4, 8, 16, 32)
+    assert batch_ladder(24, 4) == (4, 8, 16, 24)  # max always present
+    assert batch_ladder(16, 16) == (16,)
+    assert batch_ladder(8, 0) == (1, 2, 4, 8)  # min clamped to 1
+
+
+def test_weighted_fair_take_interleaves_skewed_tenants():
+    s = Scheduler(SchedulerConfig(), batch_size=8)
+    for i in range(12):
+        s.admit(req(i, tenant="heavy"))
+    for i in range(12, 16):
+        s.admit(req(i, tenant="light"))
+    # Equal weights: despite heavy submitting 3x more, the first 8 slots
+    # split 4/4 — arrival skew must not become service skew.
+    tenants = [r.tenant for r in s.take(8)]
+    assert tenants.count("heavy") == 4 and tenants.count("light") == 4
+    # light's queue exhausts; heavy then gets the rest.
+    rest = [r.tenant for r in s.take(12)]
+    assert rest.count("light") == 0 and rest.count("heavy") == 8
+
+
+def test_weighted_fair_honors_weights():
+    cfg = SchedulerConfig(tenant_weights={"a": 3.0, "b": 1.0})
+    s = Scheduler(cfg, batch_size=8)
+    for i in range(16):
+        s.admit(req(2 * i, tenant="a"))
+        s.admit(req(2 * i + 1, tenant="b"))
+    got = [r.tenant for r in s.take(8)]
+    # 3:1 weights -> 6 of 8 slots for a.
+    assert got.count("a") == 6 and got.count("b") == 2
+
+
+def test_idle_tenant_banks_no_credit():
+    s = Scheduler(SchedulerConfig(), batch_size=8)
+    for i in range(8):
+        s.admit(req(i, tenant="busy"))
+    s.take(8)  # busy's vtime is now 8
+    # A tenant that sat idle the whole time now bursts: it must share from
+    # the current virtual clock, not replay its zero history and starve busy.
+    for i in range(8, 16):
+        s.admit(req(i, tenant="idler"))
+    for i in range(16, 24):
+        s.admit(req(i, tenant="busy"))
+    got = [r.tenant for r in s.take(8)]
+    assert got.count("idler") == 4 and got.count("busy") == 4
+
+
+def test_queue_cap_and_deadline_admission():
+    s = Scheduler(
+        SchedulerConfig(slo_s=0.01, deadline_admission=True), batch_size=8
+    )
+    assert s.admit(req(0)) is None
+    # Service estimate: 8 queries took 80ms -> 10ms each; with one request
+    # queued the next waits ~10ms (exactly the SLO, admitted), but two
+    # queued predicts 20ms of queueing -> a guaranteed miss -> "deadline".
+    s.observe_service(8, 0.08)
+    assert s.admit(req(1)) is None
+    assert s.admit(req(2)) == "deadline"
+    # Queue cap is reported as queue_full (checked before the deadline).
+    s2 = Scheduler(SchedulerConfig(max_queue=2), batch_size=8)
+    assert s2.admit(req(0)) is None and s2.admit(req(1)) is None
+    assert s2.admit(req(2)) == "queue_full"
+
+
+def test_pick_batch_size_tracks_depth_and_slo_headroom():
+    cfg = SchedulerConfig(dynamic_batch=True, min_batch=2, slo_s=0.1)
+    s = Scheduler(cfg, batch_size=16)
+    assert s.ladder == (2, 4, 8, 16)
+    now = time.perf_counter()
+    for i in range(3):
+        s.admit(req(i, t_submit=now))
+    assert s.pick_batch_size(now) == 4  # smallest rung covering depth 3
+    for i in range(3, 20):
+        s.admit(req(i, t_submit=now))
+    assert s.pick_batch_size(now) == 16  # saturated
+    # SLO headroom: 10ms/query measured, oldest has 30ms headroom left ->
+    # a 16-batch (160ms) would blow it; the largest safe rung is 2.
+    s.observe_service(16, 0.16)
+    assert s.pick_batch_size(now + 0.07) == 2
+
+
+def test_load_signal_tracks_depth_and_age():
+    cfg = SchedulerConfig(dynamic_batch=True, slo_s=0.1, depth_reference=10)
+    s = Scheduler(cfg, batch_size=4)
+    now = time.perf_counter()
+    assert s.load_signal(now) == 0.0
+    for i in range(5):
+        s.admit(req(i, t_submit=now))
+    assert s.load_signal(now) == pytest.approx(0.5)  # depth half of ref
+    # Age pressure dominates when the oldest request nears the SLO.
+    assert s.load_signal(now + 0.09) == pytest.approx(0.9)
+    assert s.load_signal(now + 1.0) == 1.0  # clamped
+
+
+# ---------------------------------------------------------------------------
+# ResultCache unit
+# ---------------------------------------------------------------------------
+def test_result_cache_lru_bound_and_context_keys():
+    c = ResultCache(2)
+    fp = [ResultCache.fingerprint(np.full(4, i, np.float32)) for i in range(3)]
+    ctx = (5, 0, 0)  # (k, generation, rung)
+    c.put(fp[0], ctx, np.array([1]), np.array([0.5]))
+    c.put(fp[1], ctx, np.array([2]), np.array([0.6]))
+    assert c.get(fp[0], ctx) is not None  # refresh 0 -> 1 becomes LRU
+    c.put(fp[2], ctx, np.array([3]), np.array([0.7]))
+    assert len(c) == 2
+    assert c.get(fp[1], ctx) is None  # evicted
+    assert c.get(fp[0], ctx) is not None
+    # Same query bytes under a different generation / rung / k is a miss:
+    # the serving context is part of the key.
+    assert c.get(fp[0], (5, 1, 0)) is None
+    assert c.get(fp[0], (5, 0, 1)) is None
+    assert c.get(fp[0], (10, 0, 0)) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine: cache-hit bit-identity and generation invalidation
+# ---------------------------------------------------------------------------
+def test_cache_hits_bit_identical_and_invalidated_on_update(served):
+    params, q = served
+    engine = build_engine(params, sched=SchedulerConfig(cache_size=256))
+    pool = q[:BATCH]
+
+    def serve(vectors):
+        rids = [engine.submit(v) for v in vectors]
+        engine.drain()
+        return [engine.result(r) for r in rids]
+
+    first = serve(pool)
+    assert engine.stats.n_cache_hits == 0
+    second = serve(pool)  # same bytes, same generation -> all hits
+    assert engine.stats.n_cache_hits == BATCH
+    assert engine.stats.n_batches == 1  # round two never touched the device
+    assert all(r.cached for r in second)
+    ref = lider.search_lider(engine.params, jnp.asarray(pool), k=K, n_probe=4)
+    for i, (a, b) in enumerate(zip(first, second)):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(
+            np.asarray(a.scores), np.asarray(b.scores)
+        )
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(ref.ids)[i])
+
+    # apply_updates bumps the generation: the same bytes MUST miss and be
+    # recomputed against the new corpus.
+    extra = l2_normalize(
+        jax.random.normal(jax.random.PRNGKey(9), (32, DIM))
+    )
+    engine.apply_updates(lambda p: update.upsert(p, extra))
+    third = serve(pool)
+    assert engine.stats.n_cache_hits == BATCH  # no new hits
+    assert not any(r.cached for r in third)
+    ref2 = lider.search_lider(engine.params, jnp.asarray(pool), k=K, n_probe=4)
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(r.ids) for r in third]), np.asarray(ref2.ids)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Engine: dynamic batch sizing bit-identity + zero recompiles under load sweep
+# ---------------------------------------------------------------------------
+def test_dynamic_batches_bit_identical_to_fixed(served):
+    params, q = served
+    fixed = build_engine(params)
+    dyn = build_engine(
+        params, sched=SchedulerConfig(dynamic_batch=True, min_batch=2)
+    )
+
+    def serve(engine, chunks):
+        out = []
+        for c in chunks:
+            rids = [engine.submit(v) for v in c]
+            engine.drain()
+            out.extend(engine.result(r) for r in rids)
+        return out
+
+    chunks = [q[:3], q[3:10], q[10:26], q[26:27]]  # depths 3, 7, 16, 1
+    a = serve(fixed, chunks)
+    b = serve(dyn, chunks)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+        np.testing.assert_array_equal(
+            np.asarray(ra.scores), np.asarray(rb.scores)
+        )
+    # The sizing actually engaged (4, 8, 16, 2) and padding shrank.
+    assert list(dyn.stats.batch_size_trace) == [4, 8, 16, 2]
+    assert dyn.stats.n_padded < fixed.stats.n_padded
+
+
+def test_no_recompiles_across_load_sweep_after_warmup(served):
+    params, q = served
+    engine = build_engine(
+        params,
+        sched=SchedulerConfig(dynamic_batch=True, min_batch=2),
+        policy=DegradePolicy(
+            ladder=({"n_probe": 2},), deadline_s=10.0
+        ),
+    )
+    compiled = lider.query_path_cache_size()
+    assert compiled > 0  # the detector sees the warmed traces
+    for depth in (1, 2, 3, 5, 8, 13, 16, 27):
+        rids = [engine.submit(v) for v in q[:depth]]
+        engine.drain()
+        for r in rids:
+            assert isinstance(engine.result(r), QueryResult)
+    assert lider.query_path_cache_size() == compiled
+    assert engine.recompiles == 0
+
+
+# ---------------------------------------------------------------------------
+# Engine: fetch backoff must yield to the pipeline (host-fetch brownout)
+# ---------------------------------------------------------------------------
+def test_fetch_backoff_does_not_block_other_batches():
+    BACKOFF = 0.25
+    n, dim, k, batch = 400, 16, 5, 8
+    x = l2_normalize(jax.random.normal(jax.random.PRNGKey(2), (n, dim)))
+    params = lider.build_lider(
+        jax.random.PRNGKey(1),
+        x,
+        lider.LiderConfig(
+            n_clusters=8, n_probe=4, n_arrays=4, n_leaves=4, kmeans_iters=5,
+            storage_dtype="int8", rescore_tier="host",
+        ),
+    )
+    q = np.asarray(l2_normalize(x[: 2 * batch] + 0.02), np.float32)
+    # Batch A's first fetch fails (call 0); its retry backs off for
+    # BACKOFF+ seconds. The old engine slept inline and stalled the whole
+    # pipeline; the scheduler-driven drain must finish batch B during A's
+    # backoff window.
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("host_fetch", mode="error", times=(0,))]
+    )
+    engine = RetrievalEngine(
+        make_backend("lider", None, updatable=True, n_probe=4),
+        batch_size=batch, k=k, dim=dim, params=params,
+        policy=DegradePolicy(
+            fetch_retries=2, fetch_backoff_s=BACKOFF, fetch_backoff_mult=1.0
+        ),
+        fault_plan=plan,
+    )
+    engine.warmup()
+    rids = [engine.submit(v) for v in q]
+    engine.drain()
+    out = [engine.result(r) for r in rids]
+    a_lat = [r.latency_s for r in out[:batch]]
+    b_lat = [r.latency_s for r in out[batch:]]
+    # Both batches answered at full quality; A retried exactly once.
+    assert engine.stats.n_fetch_retries == 1
+    assert engine.stats.n_fetch_failures == 0
+    assert not any(r.degraded for r in out)
+    ref = lider.search_lider(engine.params, jnp.asarray(q), k=k, n_probe=4)
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(r.ids) for r in out]), np.asarray(ref.ids)
+    )
+    # The yield: B (submitted after A) finished BEFORE A's backoff elapsed;
+    # A's answer waited out the backoff.
+    assert min(a_lat) >= BACKOFF
+    assert max(b_lat) < BACKOFF
+
+
+# ---------------------------------------------------------------------------
+# Stats boundedness (long-running server must not grow per-batch state)
+# ---------------------------------------------------------------------------
+def test_all_engine_stat_traces_are_bounded(served):
+    for f in dataclasses.fields(EngineStats):
+        has_factory = f.default_factory is not dataclasses.MISSING
+        default = f.default_factory() if has_factory else None
+        if isinstance(default, collections.deque):
+            assert default.maxlen is not None, (
+                f"EngineStats.{f.name} is an unbounded deque — per-batch "
+                "traces must carry a maxlen"
+            )
+        else:
+            assert not isinstance(default, list), (
+                f"EngineStats.{f.name} is an unbounded list"
+            )
+    params, q = served
+    engine = build_engine(params, sched=SchedulerConfig(cache_size=8))
+    for _ in range(3):
+        rids = [engine.submit(v) for v in q[:4]]
+        engine.drain()
+        for r in rids:
+            engine.result(r)
+    s = engine.stats
+    assert len(s.batch_size_trace) <= s.batch_size_trace.maxlen
+    assert len(s.recent_latency_s) <= s.recent_latency_s.maxlen
+
+
+# ---------------------------------------------------------------------------
+# Control plane: load-aware operating-point selection
+# ---------------------------------------------------------------------------
+def _sweep_result(n_probe, aqt_s, recall):
+    return pareto.SweepResult(
+        point=pareto.OperatingPoint(n_probe=n_probe),
+        aqt_s=aqt_s, wall_aqt_s=aqt_s, wall_route_s=0.0, wall_full_s=aqt_s,
+        recall=recall, mrr10=recall, pruned_fraction=0.0,
+    )
+
+
+def test_select_operating_point_navigates_frontier_with_load():
+    results = [
+        _sweep_result(32, 8e-4, 0.99),
+        _sweep_result(16, 4e-4, 0.97),
+        _sweep_result(8, 2e-4, 0.93),
+        _sweep_result(4, 1e-4, 0.85),
+    ]
+    # Offline spelling unchanged: cheapest point meeting the target.
+    assert pareto.select_operating_point(results, 0.95).point.n_probe == 16
+    # Online: load 0 == nominal; rising load walks to cheaper frontier
+    # points; load 1 reaches the cheapest. AQT must be monotone non-
+    # increasing in load — adaptivity never picks a pricier point under
+    # MORE pressure.
+    picks = [
+        pareto.select_operating_point(results, 0.95, load_signal=l)
+        for l in (0.0, 0.34, 0.67, 1.0)
+    ]
+    assert picks[0].point.n_probe == 16
+    assert picks[-1].point.n_probe == 4
+    aqts = [p.aqt_s for p in picks]
+    assert aqts == sorted(aqts, reverse=True)
