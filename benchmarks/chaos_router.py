@@ -1,0 +1,546 @@
+"""Chaos router benchmark: replica kill + rolling update + hedged stragglers.
+
+Emits ``BENCH_router.json`` so the multi-replica serving fabric (DESIGN.md
+§Replica fabric) is exercised and its guarantees gated per commit (CI runs
+``--smoke``). Two legs over the same seeded corpus:
+
+**Leg A — failover under a rolling update.** Three replicas serve a seeded
+open-loop burst trace while a rolling index update is in flight and the
+seeded fault plan injects two dispatch failures and hard-kills ``r1`` a few
+drain ticks in (plus scheduled heartbeat misses). Every delivered answer is
+checked **bit-identical** against a direct ``search_lider`` on the params of
+the *generation it claims to have been served at*, at the ladder rung it
+claims — any mismatch is a wrong-generation answer and fails the run. After
+the roll, every still-serveable replica must answer bit-identically to a
+single engine updated once with the same ``update_fn``.
+
+**Leg B/C — hedging vs a straggling replica.** Two replicas, same trace,
+``r0`` straggles on a seeded quarter of its dispatches (targeted
+``straggle`` spec). Leg B hedges at the ``hedge_quantile`` latency
+deadline; leg C runs the identical workload with hedging disabled.
+Hedging must not lose: hedged p99 <= unhedged p99, with at least one
+hedge win recorded.
+
+Gates (non-zero exit):
+- leg A: availability >= 0.99; delivered wrong-generation == 0 (router
+  guard discards count separately); replica kill observed and the fleet
+  kept answering; roll completed with every replica updated or explicitly
+  skipped-as-stale; post-roll bit-identity vs a single updated engine;
+  recall >= measured ladder floor (worst generation x worst rung) - tol
+- leg B/C: hedged p99 <= unhedged p99; >=1 hedge win; both legs answer
+  every query (availability == 1)
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.chaos_router [--smoke]
+        [--out BENCH_router.json] [--n 20000] [--dim 64] [--k 10]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+RECALL_TOLERANCE = 0.02  # slack under the measured worst-mode floor
+KILL_AT_DRAIN = 8  # drain tick that hard-kills r1 (roll still in flight)
+
+
+def _build(n, dim, n_clusters, pool, seed=0):
+    import jax
+    import numpy as np
+
+    from repro.core import lider
+    from repro.core.baselines import flat_search
+    from repro.core.utils import l2_normalize
+
+    rng = jax.random.PRNGKey(seed)
+    kc, kx, kn, kq = jax.random.split(rng, 4)
+    centers = jax.random.normal(kc, (n_clusters, dim))
+    assign = jax.random.randint(kx, (n,), 0, n_clusters)
+    x = l2_normalize(centers[assign] + 0.3 * jax.random.normal(kn, (n, dim)))
+    q = np.asarray(
+        l2_normalize(x[:pool] + 0.05 * jax.random.normal(kq, (pool, dim))),
+        np.float32,
+    )
+    n_base = int(n * 0.9)  # 10% held out for the rolling upsert
+    cfg = lider.LiderConfig(n_clusters=n_clusters, n_probe=8)
+    params = lider.build_lider(jax.random.PRNGKey(2), x[:n_base], cfg)
+    gt = np.asarray(flat_search(x, jax.numpy.asarray(q), k=10).ids)
+    return params, np.asarray(jax.device_get(x[n_base:])), q, gt
+
+
+def _point_kwargs(point):
+    keys = (
+        "n_probe", "r0", "prune_margin", "refine", "rescore_factor", "block_c"
+    )
+    return {k: point[k] for k in keys if k in point}
+
+
+def _ref_search(params, q, k, base_kw, point=None):
+    """Direct serial-path (ids, scores) at one operating point."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import lider
+
+    eff = dict(base_kw)
+    if point:
+        eff.update(_point_kwargs(point))
+    out = lider.search_lider(params, jnp.asarray(q), k=k, **eff)
+    top = out if hasattr(out, "ids") else out[0]
+    return np.asarray(top.ids), np.asarray(top.scores)
+
+
+def _calibrate(params, q, batch, k, base_kw, repeats=3):
+    """Median warm full-batch search time — the workload's unit of time."""
+    _ref_search(params, q[:batch], k, base_kw)  # compile
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _ref_search(params, q[:batch], k, base_kw)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _collect(router, rids):
+    return [router.result(r) for r in rids]
+
+
+def _answer_metrics(results, trace, gt, k):
+    import numpy as np
+
+    from repro.serving import QueryResult
+
+    recalls, n_shed, n_degraded = [], 0, 0
+    lat = []
+    for res, arr in zip(results, trace):
+        if not isinstance(res, QueryResult):
+            n_shed += 1
+            continue
+        n_degraded += bool(res.degraded)
+        lat.append(res.latency_s)
+        got = set(np.asarray(res.ids)[:k].tolist())
+        recalls.append(len(got & set(gt[arr.query_idx][:k].tolist())) / k)
+    lat = np.asarray(lat) if lat else np.zeros(1)
+    n = len(results)
+    return {
+        "n_arrivals": n,
+        "availability": (n - n_shed) / max(n, 1),
+        "shed_fraction": n_shed / max(n, 1),
+        "degraded_fraction": n_degraded / max(n, 1),
+        "recall": float(np.mean(recalls)) if recalls else 0.0,
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+    }
+
+
+def _generation_bit_check(results, trace, refs, q, k, base_kw, ladder):
+    """Every delivered non-degraded answer must bit-match the direct search
+    on the params of the generation it was stamped with, at its rung.
+
+    ``refs`` maps generation -> params; rung references are computed
+    lazily per (generation, rung). A stamp outside ``refs`` (a generation
+    that never legitimately served) counts as wrong-generation outright.
+    """
+    from repro.serving import QueryResult
+
+    import numpy as np
+
+    ref_cache: dict = {}
+    n_checked = wrong = 0
+    for res, arr in zip(results, trace):
+        if not isinstance(res, QueryResult) or res.degraded:
+            continue
+        key = (res.generation, res.rung)
+        if res.generation not in refs:
+            wrong += 1
+            continue
+        if key not in ref_cache:
+            point = (
+                ladder[min(res.rung, len(ladder)) - 1]
+                if res.rung > 0 and ladder
+                else None
+            )
+            ref_cache[key] = _ref_search(
+                refs[res.generation], q, k, base_kw, point
+            )
+        ids, scores = ref_cache[key]
+        n_checked += 1
+        ok = np.array_equal(
+            np.asarray(res.ids), ids[arr.query_idx]
+        ) and np.array_equal(np.asarray(res.scores), scores[arr.query_idx])
+        wrong += not ok
+    return n_checked, wrong
+
+
+def _measure_floor(refs, q, gt, k, base_kw, ladder, weights):
+    """Measured recall of every mode the router may serve during the run:
+    each live generation x (nominal + every ladder rung), weighted by how
+    often each pool query actually arrives (delivered recall is
+    arrival-weighted, so the floor must be too). The min is the floor the
+    delivered recall is gated against."""
+    import numpy as np
+
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+    per_mode = {}
+    for gen, params in refs.items():
+        for name, point in [("nominal", None)] + [
+            (f"rung{i + 1}", r) for i, r in enumerate(ladder)
+        ]:
+            ids, _ = _ref_search(params, q, k, base_kw, point)
+            rows = np.asarray([
+                len(set(ids[i, :k]) & set(gt[i, :k])) / k
+                for i in range(len(q))
+            ])
+            per_mode[f"gen{gen}:{name}"] = float((rows * w).sum())
+    return per_mode, min(per_mode.values())
+
+
+def _make_router(params, n_replicas, *, batch, k, dim, ladder, sched_cfg,
+                 router_cfg, health, plan):
+    from repro.serving import (
+        DegradePolicy, QueryRouter, RetrievalEngine, clone_params,
+        make_backend,
+    )
+
+    engines = []
+    for i in range(n_replicas):
+        engines.append(
+            RetrievalEngine(
+                make_backend("lider", None, updatable=True, n_probe=8),
+                batch_size=batch, k=k, dim=dim,
+                params=params if i == 0 else clone_params(params),
+                policy=DegradePolicy(ladder=tuple(ladder)),
+            )
+        )
+    router = QueryRouter(
+        engines,
+        config=router_cfg,
+        health=health,
+        scheduler=sched_cfg,
+        fault_plan=plan,
+    )
+    router.warmup()
+    return router
+
+
+def _leg_failover_roll(params, new_x, q, gt, *, args, base_kw, ladder,
+                       sched_cfg, s_batch):
+    """Leg A: 3 replicas, kill r1 mid-trace while a rolling update is in
+    flight; verify availability, generation bit-identity, the roll's
+    terminal state, and post-roll bit-identity vs a single updated engine."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import faults
+    from repro.core import update as update_lib
+    from repro.serving import HealthPolicy, RouterConfig
+    from repro.serving.traffic import make_trace, run_open_loop
+
+    plan = faults.FaultPlan(
+        [
+            # Two isolated dispatch failures: bounded failover, no deaths.
+            faults.FaultSpec("replica_dispatch", mode="fail", times=(4, 9)),
+            # Hard-kill r1 a few drain ticks in — while the roll (started
+            # just before replay) is still updating r0, so the kill lands
+            # inside the roll window and r1 is skipped-as-stale.
+            faults.FaultSpec(
+                "replica_kill", mode="kill_replica",
+                times=(KILL_AT_DRAIN,), payload={"replica": "r1"},
+            ),
+            # A few scheduled heartbeat misses (suspect churn, recovery).
+            faults.FaultSpec(
+                "replica_heartbeat", mode="miss", probability=0.25, count=3,
+            ),
+        ],
+        seed=13,
+    )
+    router = _make_router(
+        params, 3, batch=args.batch_size, k=args.k, dim=q.shape[1],
+        ladder=ladder, sched_cfg=sched_cfg,
+        router_cfg=RouterConfig(hedge_quantile=0.9, hedge_min_samples=8),
+        health=HealthPolicy(heartbeat_interval_s=0.005), plan=plan,
+    )
+    trace = make_trace(
+        seed=args.seed, n_arrivals=args.arrivals, pool_size=len(q),
+        mean_rate=2.0 * args.batch_size / s_batch, pattern="burst",
+        n_tenants=2,
+    )
+    new_rows = jnp.asarray(new_x)
+
+    def up(p):
+        return update_lib.upsert(p, new_rows)
+
+    router.control.apply_updates(up, block=False)
+    rids = run_open_loop(router, trace, q)
+    router.control.wait(timeout=300.0)
+    # Post-roll tail: traffic that must be answered at the NEW generation,
+    # so the bit-identity check below covers both sides of the
+    # mixed-generation window.
+    tail = make_trace(
+        seed=args.seed + 7, n_arrivals=max(64, args.arrivals // 4),
+        pool_size=len(q), mean_rate=2.0 * args.batch_size / s_batch,
+    )
+    rids_tail = run_open_loop(router, tail, q)
+    while router.pending_requests:
+        router.drain()
+    results = _collect(router, rids) + _collect(router, rids_tail)
+    trace = list(trace) + list(tail)
+
+    st = router.stats
+    refs = {0: params, 1: update_lib.upsert(params, new_rows)[0]}
+    gens_served = sorted({
+        r.generation for r in results if hasattr(r, "generation")
+    })
+    n_checked, wrong = _generation_bit_check(
+        results, trace, refs, q, args.k, base_kw, ladder
+    )
+    weights = np.bincount(
+        [a.query_idx for a in trace], minlength=len(q)
+    )
+    per_mode, floor = _measure_floor(
+        refs, q, gt, args.k, base_kw, ladder, weights
+    )
+    m = _answer_metrics(results, trace, gt, args.k)
+
+    # Post-roll: every replica still in routing serves the new generation
+    # bit-identically to one engine updated once with the same update_fn.
+    post_roll = {}
+    ref_ids, ref_scores = _ref_search(refs[1], q, args.k, base_kw)
+    for rep in router.replicas:
+        if not rep.serveable():
+            continue
+        ids, scores = _ref_search(rep.engine.params, q, args.k, base_kw)
+        post_roll[rep.name] = bool(
+            rep.generation == 1
+            and np.array_equal(ids, ref_ids)
+            and np.array_equal(scores, ref_scores)
+        )
+    stats = router.stats_dict()
+    router.close()
+
+    report = {
+        "metrics": m,
+        "recall_floor_by_mode": per_mode,
+        "recall_floor": floor,
+        "bit_checked": n_checked,
+        "generations_served": gens_served,
+        "wrong_generation_delivered": wrong,
+        "post_roll_bit_identical": post_roll,
+        "router": stats,
+        "fault_sites": plan.site_counts(),
+    }
+    failures = []
+    if m["availability"] < 0.99:
+        failures.append(f"leg A availability {m['availability']:.4f} < 0.99")
+    if wrong:
+        failures.append(f"leg A delivered {wrong} wrong-generation answers")
+    if not n_checked:
+        failures.append("leg A bit-identity check never ran")
+    if 1 not in gens_served:
+        failures.append(
+            f"leg A never delivered a post-roll answer ({gens_served})"
+        )
+    if st.n_replica_kills != 1:
+        failures.append(
+            f"leg A kill site fired {st.n_replica_kills} times (want 1)"
+        )
+    if st.n_rolls_completed != 1:
+        failures.append("leg A rolling update did not complete")
+    updated, skipped = st.n_roll_replicas_updated, st.n_roll_replicas_skipped
+    if updated < 2 or updated + skipped != 3:
+        failures.append(
+            f"leg A roll terminal state updated={updated} skipped={skipped}"
+        )
+    if not post_roll or not all(post_roll.values()):
+        failures.append(f"leg A post-roll bit-identity failed: {post_roll}")
+    if m["recall"] < floor - RECALL_TOLERANCE:
+        failures.append(
+            f"leg A recall {m['recall']:.4f} < floor {floor:.4f} - "
+            f"{RECALL_TOLERANCE}"
+        )
+    return report, failures
+
+
+def _leg_hedging(params, q, gt, *, args, base_kw, ladder, sched_cfg,
+                 s_batch):
+    """Legs B/C: identical straggling workload with and without hedging."""
+    from repro import faults
+    from repro.serving import RouterConfig
+    from repro.serving.traffic import make_trace, run_open_loop
+
+    straggle_s = max(8.0 * s_batch, 0.04)
+    trace = make_trace(
+        seed=args.seed + 1, n_arrivals=args.arrivals_hedge, pool_size=len(q),
+        mean_rate=2.0 * args.batch_size / s_batch, pattern="zipf",
+    )
+
+    def one(hedge_quantile):
+        # Plans are stateful (per-site call counters): build one per run so
+        # both legs see the same seeded straggle process. The straggler is
+        # intermittent — a constant one would never be picked as primary
+        # (it is always busy sleeping) and hedging would have nothing to
+        # rescue.
+        plan = faults.FaultPlan(
+            [
+                faults.FaultSpec(
+                    "replica_dispatch", mode="straggle",
+                    delay_s=straggle_s, probability=0.25,
+                    payload={"replica": "r0"},
+                ),
+            ],
+            seed=29,
+        )
+        router = _make_router(
+            params, 2, batch=args.batch_size, k=args.k, dim=q.shape[1],
+            ladder=ladder, sched_cfg=sched_cfg,
+            router_cfg=RouterConfig(
+                hedge_quantile=hedge_quantile, hedge_min_samples=4,
+            ),
+            health=None, plan=plan,
+        )
+        rids = run_open_loop(router, trace, q)
+        while router.pending_requests:
+            router.drain()
+        results = _collect(router, rids)
+        m = _answer_metrics(results, trace, gt, args.k)
+        stats = router.stats_dict()
+        router.close()
+        return m, stats
+
+    # p80-of-recent deadline: straggles poison ~10% of the batch-time
+    # samples, so p80 sits just above the honest service time — true
+    # stragglers get hedged early, while most honest batches (dynamic
+    # batch sizes vary) do not trigger wasteful hedges.
+    hedged, hedged_stats = one(0.8)
+    unhedged, unhedged_stats = one(None)
+
+    report = {
+        "straggle_s": straggle_s,
+        "hedged": hedged,
+        "unhedged": unhedged,
+        "hedged_router": hedged_stats,
+        "unhedged_router": unhedged_stats,
+    }
+    failures = []
+    if hedged["p99_latency_s"] > unhedged["p99_latency_s"]:
+        failures.append(
+            f"hedged p99 {hedged['p99_latency_s'] * 1e3:.1f}ms > unhedged "
+            f"{unhedged['p99_latency_s'] * 1e3:.1f}ms"
+        )
+    if hedged_stats["n_hedge_wins"] < 1:
+        failures.append("hedging never won against the straggler")
+    if unhedged_stats["n_hedges"] != 0:
+        failures.append("control leg hedged despite hedge_quantile=None")
+    for name, m in (("hedged", hedged), ("unhedged", unhedged)):
+        if m["availability"] < 1.0:
+            failures.append(
+                f"{name} leg shed queries (availability "
+                f"{m['availability']:.4f})"
+            )
+    return report, failures
+
+
+def _bench(args):
+    from repro.serving import SchedulerConfig
+
+    params, new_x, q, gt = _build(
+        args.n, args.dim, args.n_clusters, args.pool, seed=args.seed
+    )
+    base_kw = dict(n_probe=8)
+    ladder = [{"n_probe": 4}, {"n_probe": 2}]
+    s_batch = _calibrate(params, q, args.batch_size, args.k, base_kw)
+    sched_cfg = SchedulerConfig(
+        dynamic_batch=True, min_batch=max(1, args.batch_size // 8),
+        slo_s=8.0 * s_batch,
+    )
+
+    leg_a, fail_a = _leg_failover_roll(
+        params, new_x, q, gt, args=args, base_kw=base_kw, ladder=ladder,
+        sched_cfg=sched_cfg, s_batch=s_batch,
+    )
+    leg_bc, fail_bc = _leg_hedging(
+        params, q, gt, args=args, base_kw=base_kw, ladder=ladder,
+        sched_cfg=sched_cfg, s_batch=s_batch,
+    )
+
+    report = {
+        "shape": {
+            "n": args.n, "dim": args.dim, "n_clusters": args.n_clusters,
+            "pool": args.pool, "arrivals": args.arrivals,
+            "arrivals_hedge": args.arrivals_hedge,
+            "batch_size": args.batch_size, "k": args.k, "seed": args.seed,
+            "ladder": ladder, "kill_at_drain": KILL_AT_DRAIN,
+        },
+        "calibration": {
+            "batch_service_s": s_batch, "slo_s": sched_cfg.slo_s,
+        },
+        "failover_roll": leg_a,
+        "hedging": leg_bc,
+        "failures": fail_a + fail_bc,
+    }
+    report["ok"] = not report["failures"]
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true", help="small shapes (CI)")
+    ap.add_argument("--out", default="BENCH_router.json")
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--n-clusters", type=int, default=32)
+    ap.add_argument("--pool", type=int, default=256,
+                    help="distinct queries behind the Zipf popularity")
+    ap.add_argument("--arrivals", type=int, default=2000)
+    ap.add_argument("--arrivals-hedge", type=int, default=1200,
+                    help="arrivals per hedging leg (run twice: on/off)")
+    ap.add_argument("--batch-size", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-check", dest="check", action="store_false",
+                    help="report only; do not gate")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n = 4000
+        args.dim = 32
+        args.n_clusters = 16
+        args.pool = 64
+        args.arrivals = 600
+        args.arrivals_hedge = 400
+
+    report = _bench(args)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+
+    a = report["failover_roll"]
+    h = report["hedging"]
+    print(
+        f"chaos router @ n={report['shape']['n']} "
+        f"(kill@drain{report['shape']['kill_at_drain']})\n"
+        f"  leg A: availability {a['metrics']['availability']:.4f} | "
+        f"delivered wrong-generation {a['wrong_generation_delivered']} "
+        f"({a['bit_checked']} checked) | "
+        f"roll updated={a['router']['n_roll_replicas_updated']} "
+        f"skipped={a['router']['n_roll_replicas_skipped']} | "
+        f"failovers {a['router']['n_failovers']} | "
+        f"recall {a['metrics']['recall']:.4f} "
+        f"(floor {a['recall_floor']:.4f})\n"
+        f"  leg B/C: hedged p99 {h['hedged']['p99_latency_s'] * 1e3:.1f}ms "
+        f"vs unhedged {h['unhedged']['p99_latency_s'] * 1e3:.1f}ms | "
+        f"hedges {h['hedged_router']['n_hedges']} "
+        f"wins {h['hedged_router']['n_hedge_wins']} "
+        f"(straggle {h['straggle_s'] * 1e3:.0f}ms)\n"
+        f"-> {args.out}"
+    )
+    if report["failures"]:
+        for msg in report["failures"]:
+            print(f"FAIL: {msg}")
+        if args.check:
+            raise SystemExit(1)
+    print("all chaos-router gates passed" if report["ok"] else "")
+
+
+if __name__ == "__main__":
+    main()

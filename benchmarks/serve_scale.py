@@ -30,10 +30,15 @@ Gates (--check, non-zero exit; CI runs --smoke):
 - zero query-path recompiles across the run after warmup
   (``lider.query_path_cache_size`` delta == 0)
 
+With ``--replicas N`` (N > 1) a third leg runs the same trace through an
+N-replica ``QueryRouter`` (the same adaptive scheduler, centralized, over
+N identical engines — serving/router.py): reported alongside, gated on
+bit-identity and recall, to show what pure fan-out buys on one trace.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.serve_scale [--smoke]
         [--out BENCH_scale.json] [--n 20000] [--dim 64] [--pool 256]
-        [--arrivals 4000] [--batch-size 32] [--k 10]
+        [--arrivals 4000] [--batch-size 32] [--k 10] [--replicas N]
 """
 from __future__ import annotations
 
@@ -152,17 +157,18 @@ def _bench(args):
 
     from repro.core import lider
     from repro.serving import (
-        DegradePolicy, RetrievalEngine, SchedulerConfig, make_backend,
+        DegradePolicy, QueryRouter, RetrievalEngine, RouterConfig,
+        SchedulerConfig, clone_params, make_backend,
     )
     from repro.serving.traffic import make_trace
 
     params, q, gt = _build(args.n, args.dim, args.n_clusters, args.pool)
     search = make_backend("lider", None, updatable=True, n_probe=4)
 
-    def engine_for(sched=None):
+    def engine_for(sched=None, p=params):
         return RetrievalEngine(
             search, batch_size=args.batch_size, k=args.k, dim=args.dim,
-            params=params, policy=DegradePolicy(), scheduler=sched,
+            params=p, policy=DegradePolicy(), scheduler=sched,
         )
 
     fixed = engine_for()
@@ -173,15 +179,31 @@ def _bench(args):
     fixed.warmup()
     s_batch = _calibrate(fixed, args.batch_size, args.dim)
     slo_s = args.slo_mult * s_batch
-    adaptive = engine_for(
-        SchedulerConfig(
-            dynamic_batch=True,
-            min_batch=min_batch,
-            cache_size=4 * args.pool,
-            slo_s=slo_s,
-        )
+    sched_cfg = SchedulerConfig(
+        dynamic_batch=True,
+        min_batch=min_batch,
+        cache_size=4 * args.pool,
+        slo_s=slo_s,
     )
+    adaptive = engine_for(sched_cfg)
     adaptive.warmup()
+
+    # Optional N-replica leg: the same adaptive scheduler centralized in a
+    # QueryRouter spreading batches over N identical engines (serving/
+    # router.py). No result cache (caching stays per-engine by design) and
+    # no chaos — this leg isolates what pure fan-out buys on the same
+    # trace. Warmed before the recompile baseline is frozen.
+    replicated = None
+    if args.replicas > 1:
+        replicated = QueryRouter(
+            [
+                engine_for(p=params if i == 0 else clone_params(params))
+                for i in range(args.replicas)
+            ],
+            config=RouterConfig(hedge_quantile=None),
+            scheduler=sched_cfg,
+        )
+        replicated.warmup()
 
     # Direct serial reference over the whole pool (its own shape, so it
     # must run before the recompile baseline is captured).
@@ -200,12 +222,21 @@ def _bench(args):
 
     fixed_res = _run(fixed, trace, q)
     adaptive_res = _run(adaptive, trace, q)
+    replicated_res = (
+        _run(replicated, trace, q) if replicated is not None else None
+    )
     compiled_after = lider.query_path_cache_size()
 
     m_fixed = _metrics(fixed_res, trace, gt, args.k, slo_s)
     m_adapt = _metrics(adaptive_res, trace, gt, args.k, slo_s)
     n_checked, n_bad = _bit_identity(adaptive_res, trace, ref_ids, ref_scores)
     nf_checked, nf_bad = _bit_identity(fixed_res, trace, ref_ids, ref_scores)
+    m_repl = nr_checked = nr_bad = None
+    if replicated_res is not None:
+        m_repl = _metrics(replicated_res, trace, gt, args.k, slo_s)
+        nr_checked, nr_bad = _bit_identity(
+            replicated_res, trace, ref_ids, ref_scores
+        )
 
     s = adaptive.stats
     report = {
@@ -242,6 +273,17 @@ def _bench(args):
             "adaptive_checked": n_checked, "adaptive_mismatches": n_bad,
             "fixed_checked": nf_checked, "fixed_mismatches": nf_bad,
         },
+        "replicated": (
+            None
+            if replicated is None
+            else {
+                "n_replicas": args.replicas,
+                **m_repl,
+                "bit_checked": nr_checked,
+                "bit_mismatches": nr_bad,
+                "router": replicated.stats_dict(),
+            }
+        ),
         "recompiles": {
             "compiled_traces_before": compiled_before,
             "compiled_traces_after": compiled_after,
@@ -270,6 +312,17 @@ def _bench(args):
             f"{n_bad} adaptive + {nf_bad} fixed answers not bit-identical "
             "to direct search"
         )
+    if nr_bad:
+        failures.append(
+            f"{nr_bad} replicated answers not bit-identical to direct search"
+        )
+    if m_repl is not None and m_repl["recall"] < m_fixed["recall"]:
+        failures.append(
+            f"replicated recall {m_repl['recall']:.4f} < fixed "
+            f"{m_fixed['recall']:.4f}"
+        )
+    if replicated is not None:
+        replicated.close()
     if compiled_after != compiled_before:
         failures.append(
             f"query path re-traced: {compiled_before} -> {compiled_after} "
@@ -293,6 +346,8 @@ def main():
     ap.add_argument("--arrivals", type=int, default=4000)
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="also run an N-replica QueryRouter leg (>1)")
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--zipf-a", type=float, default=1.1)
     ap.add_argument("--slo-mult", type=float, default=8.0,
@@ -320,6 +375,14 @@ def main():
         f"fixed p99={fx['p99_latency_s'] * 1e3:.1f}ms "
         f"recall@slo={fx['recall_at_slo']:.3f}"
     )
+    if report.get("replicated"):
+        rp = report["replicated"]
+        print(
+            f"replicated x{rp['n_replicas']}: "
+            f"p99={rp['p99_latency_s'] * 1e3:.1f}ms "
+            f"recall@slo={rp['recall_at_slo']:.3f} "
+            f"bit-mismatches={rp['bit_mismatches']}/{rp['bit_checked']}"
+        )
     print(f"wrote {args.out}")
     if report["failures"]:
         for msg in report["failures"]:

@@ -23,12 +23,26 @@ Sites used by the repo:
                   or ``{"shards": [...]}``).
 ``d2h``           engine result recording — ``delay`` models a slow
                   ``__array__`` device-to-host copy.
+``replica_dispatch``  ``QueryRouter`` batch dispatch onto one replica —
+                  ``error``/``delay`` hit whichever replica the matching
+                  call lands on; ``straggle`` (sleep) and ``fail`` (raise)
+                  target one replica via payload ``{"replica": name}``.
+``replica_heartbeat``  replica health probe — ``error`` is a missed
+                  heartbeat (drives suspect/dead transitions).
+``replica_kill``  fired once per router drain — ``kill_replica`` with
+                  payload ``{"replica": name}`` hard-kills that replica:
+                  in-flight batches fail over, it never rejoins routing.
 ================  ===========================================================
 
 Fault modes ``error`` and ``delay`` are handled generically inside
 :func:`fire` (raise :class:`InjectedFault` / ``time.sleep``).  Any other
 mode is site-specific: ``fire`` returns the matching spec and the call site
 interprets it.
+
+The router dispatches batches from worker threads, so scheduling state
+(per-site counters, per-site RNGs, fired log) is guarded by a lock; the
+generic sleep/raise happen *outside* it, so one replica's injected
+straggle never serializes another replica's dispatch.
 """
 from __future__ import annotations
 
@@ -36,6 +50,7 @@ import contextlib
 import dataclasses
 import json
 import random
+import threading
 import time
 from typing import Any, Optional, Tuple
 
@@ -45,8 +60,20 @@ HOST_WRITE = "host_write"
 CHECKPOINT_WRITE = "checkpoint_write"
 SHARD_SEARCH = "shard_search"
 D2H = "d2h"
+REPLICA_DISPATCH = "replica_dispatch"
+REPLICA_HEARTBEAT = "replica_heartbeat"
+REPLICA_KILL = "replica_kill"
 
-SITES = (HOST_FETCH, HOST_WRITE, CHECKPOINT_WRITE, SHARD_SEARCH, D2H)
+SITES = (
+    HOST_FETCH,
+    HOST_WRITE,
+    CHECKPOINT_WRITE,
+    SHARD_SEARCH,
+    D2H,
+    REPLICA_DISPATCH,
+    REPLICA_HEARTBEAT,
+    REPLICA_KILL,
+)
 
 
 class InjectedFault(RuntimeError):
@@ -122,6 +149,10 @@ class FaultPlan:
         self._rngs: dict = {}
         self._n_fired_by_spec = [0] * len(self.specs)
         self.fired: list = []
+        # The router fires sites from dispatch worker threads; the lock
+        # keeps counter/RNG/log state consistent. Generic sleep/raise run
+        # outside it (see fire) so injected delays never serialize sites.
+        self._lock = threading.Lock()
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -157,35 +188,79 @@ class FaultPlan:
         Returns the first matching spec whose mode is *not* handled
         generically (for the call site to interpret), else ``None``.
         """
-        idx = self._calls.get(site, 0)
-        self._calls[site] = idx + 1
         pending = None
-        for i, spec in enumerate(self.specs):
-            if spec.site != site:
-                continue
-            if spec.count is not None and self._n_fired_by_spec[i] >= spec.count:
-                continue
-            if spec.times is not None:
-                hit = idx in spec.times
-            elif spec.probability > 0.0:
-                hit = self._rng_for(site).random() < spec.probability
-            else:
-                hit = False
-            if not hit:
-                continue
-            self._n_fired_by_spec[i] += 1
-            self.fired.append((site, idx, spec.mode))
-            if spec.mode == "delay":
-                time.sleep(spec.delay_s)
-            elif spec.mode == "error":
-                raise InjectedFault(site, f"injected {site} fault (call {idx})")
-            elif pending is None:
-                pending = spec
+        delay_s = 0.0
+        err = None
+        with self._lock:
+            idx = self._calls.get(site, 0)
+            self._calls[site] = idx + 1
+            for i, spec in enumerate(self.specs):
+                if spec.site != site:
+                    continue
+                if (
+                    spec.count is not None
+                    and self._n_fired_by_spec[i] >= spec.count
+                ):
+                    continue
+                if spec.times is not None:
+                    hit = idx in spec.times
+                elif spec.probability > 0.0:
+                    hit = self._rng_for(site).random() < spec.probability
+                else:
+                    hit = False
+                if not hit:
+                    continue
+                self._n_fired_by_spec[i] += 1
+                self.fired.append((site, idx, spec.mode))
+                if spec.mode == "delay":
+                    delay_s += spec.delay_s
+                elif spec.mode == "error":
+                    if err is None:
+                        err = InjectedFault(
+                            site, f"injected {site} fault (call {idx})"
+                        )
+                elif pending is None:
+                    pending = spec
+        if delay_s > 0.0:
+            time.sleep(delay_s)
+        if err is not None:
+            raise err
         return pending
 
     @property
     def n_fired(self) -> int:
         return len(self.fired)
+
+    def site_counts(self) -> dict:
+        """Firings per site, zero-filled over every *configured* site.
+
+        Covers the union of the canonical :data:`SITES` and any site named
+        by a spec — a site that never fired reports 0 rather than being
+        omitted, so chaos CI stats diffs are stable run-to-run.
+        """
+        with self._lock:
+            counts = {site: 0 for site in SITES}
+            for spec in self.specs:
+                counts.setdefault(spec.site, 0)
+            for site, _idx, _mode in self.fired:
+                counts[site] = counts.get(site, 0) + 1
+        return counts
+
+
+def spec_targets(spec: Optional[FaultSpec], name: str) -> bool:
+    """Does a site-specific spec target replica/shard ``name``?
+
+    A spec with no payload (or no ``replica`` key) targets everything;
+    payload ``{"replica": <name>}`` targets exactly that replica. The
+    router uses this to interpret ``straggle``/``fail``/``kill_replica``
+    specs returned by :func:`fire`.
+    """
+    if spec is None:
+        return False
+    payload = spec.payload
+    if not isinstance(payload, dict) or "replica" not in payload:
+        return True
+    return payload["replica"] == name
 
 
 # ---------------------------------------------------------------------------

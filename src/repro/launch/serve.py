@@ -33,11 +33,15 @@ from ..data import synthetic
 from ..serving import (
     DegradePolicy,
     QueryResult,
+    QueryRouter,
     RetrievalEngine,
+    RouterConfig,
     SchedulerConfig,
+    clone_params,
     make_backend,
 )
 from ..serving import traffic
+from ..serving.engine import EngineStats
 from ..training import checkpoint
 
 
@@ -174,6 +178,25 @@ def main() -> None:
         "(queue depth + SLO headroom) instead of always padding to "
         "--batch-size",
     )
+    # Multi-replica serving fabric (DESIGN.md §Replica fabric).
+    ap.add_argument(
+        "--replicas", type=int, default=1,
+        help="serve through a health-checked QueryRouter over this many "
+        "replica engines (each with its own params/generation) instead of "
+        "one engine",
+    )
+    ap.add_argument(
+        "--hedge-quantile", type=float, default=0.95,
+        help="router hedging deadline as a quantile of recent batch "
+        "latencies; values outside (0, 1) disable hedging",
+    )
+    ap.add_argument(
+        "--rolling-update", action="store_true",
+        help="apply the --update-fraction holdout upsert as a rolling "
+        "update (RouterControl.apply_updates): replicas drain and update "
+        "one at a time behind the health mask — zero downtime, zero "
+        "wrong-generation answers (needs --replicas >= 2)",
+    )
     args = ap.parse_args()
     use_fused = {"auto": None, "on": True, "off": False}[args.use_fused]
     lifecycle = args.save_index or args.load_index or args.update_fraction > 0
@@ -204,6 +227,10 @@ def main() -> None:
         raise SystemExit("--update-fraction must be in [0, 1)")
     if args.tenants < 1:
         raise SystemExit("--tenants must be >= 1")
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.rolling_update and args.replicas < 2:
+        raise SystemExit("--rolling-update needs --replicas >= 2")
 
     if args.embeddings:
         embs = synthetic.load_embeddings(args.embeddings)
@@ -320,20 +347,44 @@ def main() -> None:
         cache_size=args.cache_size,
         slo_s=args.slo_ms / 1e3 if args.slo_ms is not None else None,
     )
-    if args.backend == "lider":
-        search = make_backend("lider", None, updatable=True, **backend_kw)
-        engine = RetrievalEngine(
-            search, batch_size=args.batch_size, k=args.k,
-            dim=embs.shape[1], params=index, policy=policy,
-            fault_plan=fault_plan, scheduler=sched_cfg,
-        )
-    else:
+    def build_one_engine(i: int) -> RetrievalEngine:
+        if args.backend == "lider":
+            search = make_backend("lider", None, updatable=True, **backend_kw)
+            # Replica 0 serves the built params; further replicas get an
+            # independent clone (in-place host-tier updates must not bleed
+            # across replica generations).
+            return RetrievalEngine(
+                search, batch_size=args.batch_size, k=args.k,
+                dim=embs.shape[1],
+                params=index if i == 0 else clone_params(index),
+                policy=policy, fault_plan=fault_plan, scheduler=sched_cfg,
+            )
         search = make_backend(args.backend, index, embs, **backend_kw)
-        engine = RetrievalEngine(
+        return RetrievalEngine(
             search, batch_size=args.batch_size, k=args.k, dim=embs.shape[1],
             policy=policy, fault_plan=fault_plan, scheduler=sched_cfg,
         )
-    engine.warmup()
+
+    engines = [build_one_engine(i) for i in range(args.replicas)]
+    engine = engines[0]
+    router = None
+    if args.replicas > 1:
+        hq = args.hedge_quantile
+        router = QueryRouter(
+            engines,
+            config=RouterConfig(
+                hedge_quantile=hq if 0.0 < hq < 1.0 else None,
+                deadline_s=args.deadline_s,
+            ),
+            scheduler=sched_cfg,
+            fault_plan=fault_plan,
+        )
+        print(
+            f"[serve] router over {args.replicas} replicas "
+            f"(hedge_quantile={hq if 0.0 < hq < 1.0 else None})"
+        )
+    server = router if router is not None else engine
+    server.warmup()
 
     qs = jax.device_get(queries)
     tenant_of = lambda i: f"tenant{i % args.tenants}"
@@ -341,18 +392,32 @@ def main() -> None:
 
     def apply_holdout_upsert() -> None:
         t0 = time.time()
-        try:
-            grew = engine.apply_updates(
-                lambda p: update_lib.upsert(p, held_embs)
+        up_fn = lambda p: update_lib.upsert(p, held_embs)
+        if args.rolling_update:
+            # Zero-downtime roll: RouterControl drains and updates one
+            # replica at a time behind the health mask; traffic keeps
+            # being served by the rest of the fleet meanwhile.
+            router.control.apply_updates(up_fn, block=True)
+            dt = time.time() - t0
+            lo, hi = router.generation_window()
+            print(
+                f"[serve] rolling upsert of {n_held} passages in {dt:.3f}s "
+                f"({router.stats.n_roll_replicas_updated} replicas updated, "
+                f"{router.stats.n_roll_replicas_skipped} skipped, "
+                f"generation_window=[{lo}, {hi}], "
+                f"wrong_generation={router.stats.n_wrong_generation})"
             )
-        except faults.InjectedFault as e:
-            # Transactional apply_updates already rolled the host tier
-            # back; keep serving the pre-update generation, then retry the
-            # upsert once (the fault schedule has moved on).
-            print(f"[serve] update failed ({e}); rolled back, retrying")
-            grew = engine.apply_updates(
-                lambda p: update_lib.upsert(p, held_embs)
-            )
+            return
+        grew = False
+        for eng in engines:
+            try:
+                grew = eng.apply_updates(up_fn)
+            except faults.InjectedFault as e:
+                # Transactional apply_updates already rolled the host tier
+                # back; keep serving the pre-update generation, then retry
+                # the upsert once (the fault schedule has moved on).
+                print(f"[serve] update failed ({e}); rolled back, retrying")
+                grew = eng.apply_updates(up_fn)
         dt = time.time() - t0
         print(
             f"[serve] upserted {n_held} passages in {dt:.3f}s "
@@ -372,12 +437,13 @@ def main() -> None:
         def serve_chunk(chunk, base) -> None:
             for start in range(0, len(chunk), window):
                 rids = [
-                    engine.submit(q, tenant=tenant_of(base + start + j))
+                    server.submit(q, tenant=tenant_of(base + start + j))
                     for j, q in enumerate(chunk[start:start + window])
                 ]
-                engine.drain()
+                while server.pending_requests:
+                    server.drain()
                 for j, r in enumerate(rids):
-                    res = engine.result(r)
+                    res = server.result(r)
                     if isinstance(res, QueryResult):
                         got_rows.append((base + start + j, res.ids))
 
@@ -415,9 +481,9 @@ def main() -> None:
             shifted = [
                 dataclasses.replace(a, t=a.t - t_base) for a in part
             ]
-            rids = traffic.run_open_loop(engine, shifted, qs)
+            rids = traffic.run_open_loop(server, shifted, qs)
             for a, r in zip(shifted, rids):
-                res = engine.result(r)
+                res = server.result(r)
                 if isinstance(res, QueryResult):
                     got_rows.append((a.query_idx, res.ids))
 
@@ -428,29 +494,53 @@ def main() -> None:
             replay(trace[half:])
         else:
             replay(trace)
+    if router is not None:
+        router.close()  # quiesce hedge losers before reading stats
+    if len(engines) == 1:
+        stats = engine.stats
+    else:
+        # Fleet-wide engine accounting: sum counters, merge the bounded
+        # recent-window traces (router-level counters live on router.stats).
+        stats = EngineStats()
+        for eng in engines:
+            for fld in dataclasses.fields(EngineStats):
+                v = getattr(eng.stats, fld.name)
+                cur = getattr(stats, fld.name)
+                if hasattr(cur, "extend"):
+                    cur.extend(v)
+                else:
+                    setattr(stats, fld.name, cur + v)
     pruned_note = ""
-    if engine.stats.n_probes_total:
+    if stats.n_probes_total:
         per_batch = ", ".join(
-            f"{f:.0%}" for f in list(engine.stats.batch_pruned_fraction)[:8]
+            f"{f:.0%}" for f in list(stats.batch_pruned_fraction)[:8]
         )
         pruned_note = (
-            f", pruned probes {engine.stats.pruned_probe_fraction:.1%} "
+            f", pruned probes {stats.pruned_probe_fraction:.1%} "
             f"(per batch: {per_batch}"
-            + (", ..." if engine.stats.n_batches > 8 else "")
+            + (", ..." if stats.n_batches > 8 else "")
             + ")"
         )
     host_note = ""
-    if engine.stats.n_host_fetches:
+    if stats.n_host_fetches:
         host_note = (
-            f", host fetch {engine.stats.host_fetch_us / 1e3:.1f} ms total "
-            f"over {engine.stats.n_host_fetches} batches, overlap "
-            f"{engine.stats.overlap_fraction:.0%}"
+            f", host fetch {stats.host_fetch_us / 1e3:.1f} ms total "
+            f"over {stats.n_host_fetches} batches, overlap "
+            f"{stats.overlap_fraction:.0%}"
         )
     print(
-        f"[serve] {engine.stats.n_queries} queries in "
-        f"{engine.stats.total_time_s:.3f}s -> AQT={engine.stats.aqt*1e3:.3f} ms "
-        f"(padding {engine.stats.padding_fraction:.1%}{pruned_note}{host_note})"
+        f"[serve] {stats.n_queries} queries in "
+        f"{stats.total_time_s:.3f}s -> AQT={stats.aqt*1e3:.3f} ms "
+        f"(padding {stats.padding_fraction:.1%}{pruned_note}{host_note})"
     )
+    if router is not None:
+        rs = router.stats
+        print(
+            f"[serve] router: availability={rs.availability:.4f} "
+            f"hedges={rs.n_hedges} (won {rs.n_hedge_wins}) "
+            f"failovers={rs.n_failovers} kills={rs.n_replica_kills} "
+            f"wrong_generation={rs.n_wrong_generation} shed={rs.n_shed}"
+        )
 
     if args.save_index:
         path = checkpoint.save_index(args.save_index, engine.params)
@@ -468,7 +558,7 @@ def main() -> None:
     if args.stats_json:
         import json
 
-        s = engine.stats
+        s = stats
         # Record what was actually served — a loaded checkpoint's dtype/tier,
         # not the CLI defaults (which the load path ignores).
         served_bank = getattr(engine.params, "bank", None)
@@ -502,10 +592,20 @@ def main() -> None:
             "n_fetch_retries": s.n_fetch_retries,
             "n_fetch_failures": s.n_fetch_failures,
             "n_degraded": s.n_degraded,
-            "n_shed": s.n_shed,
+            "n_shed": s.n_shed + (
+                router.stats.n_shed if router is not None else 0
+            ),
             "n_deadline_misses": s.n_deadline_misses,
             "n_faults_fired": (
                 fault_plan.n_fired if fault_plan is not None else 0
+            ),
+            # Per-site firing counts, zero-filled over every configured
+            # site (canonical + plan-specific) — a site that never fired
+            # reports 0, so chaos CI stats diffs are stable run-to-run.
+            "fault_sites": (
+                fault_plan.site_counts()
+                if fault_plan is not None
+                else {site: 0 for site in faults.SITES}
             ),
             # Front-end scheduler counters (DESIGN.md §Serving front end).
             "arrival": args.arrival,
@@ -520,6 +620,11 @@ def main() -> None:
             "batch_size_trace_tail": list(s.batch_size_trace)[-16:],
             "p50_latency_s": s.latency_quantile(0.5),
             "p99_latency_s": s.latency_quantile(0.99),
+            # Replica fabric (DESIGN.md §Replica fabric).
+            "replicas": args.replicas,
+            "hedge_quantile": args.hedge_quantile,
+            "rolling_update": args.rolling_update,
+            "router": router.stats_dict() if router is not None else None,
         }
         with open(args.stats_json, "w") as f:
             json.dump(record, f, indent=1)

@@ -132,13 +132,19 @@ class QueryResult:
     rescore), ``rung`` is the degradation-ladder rung it was served at
     (0 = nominal), ``latency_s`` is submit-to-answer wall time, ``cached``
     marks answers served from the scheduler's result cache (bit-identical
-    to a fresh search at the same generation and rung)."""
+    to a fresh search at the same generation and rung). ``generation`` is
+    the engine generation the answer was computed at — the replica
+    router's wrong-generation guard (DESIGN.md §Replica fabric) — and
+    ``replica`` names the serving replica when a router dispatched it."""
 
-    __slots__ = ("ids", "scores", "degraded", "rung", "latency_s", "cached")
+    __slots__ = (
+        "ids", "scores", "degraded", "rung", "latency_s", "cached",
+        "generation", "replica",
+    )
 
     def __init__(
         self, ids, scores, *, degraded=False, rung=0, latency_s=0.0,
-        cached=False,
+        cached=False, generation=None, replica=None,
     ):
         self.ids = ids
         self.scores = scores
@@ -146,6 +152,8 @@ class QueryResult:
         self.rung = rung
         self.latency_s = latency_s
         self.cached = cached
+        self.generation = generation
+        self.replica = replica
 
     def __iter__(self):
         return iter((self.ids, self.scores))
@@ -704,6 +712,9 @@ class RetrievalEngine:
                 rung=self.rung,
                 latency_s=latency,
                 cached=True,
+                # The generation is in the cache key, so a hit is always
+                # at the engine's current generation.
+                generation=self.generation,
             ),
         )
 
@@ -779,6 +790,7 @@ class RetrievalEngine:
                     degraded=degraded,
                     rung=rung,
                     latency_s=latency,
+                    generation=self.generation,
                 ),
             )
             # Only full-fidelity answers are cacheable: a degraded
@@ -862,6 +874,41 @@ class RetrievalEngine:
                     continue
                 n_disp += 1
                 self._execute_batch(chunk)
+
+    def execute_chunk(self, chunk: list[Request]) -> list:
+        """Synchronously execute one already-admitted batch and return its
+        answers in request order.
+
+        The replica router's dispatch primitive (DESIGN.md §Replica
+        fabric): the router owns admission/fairness/batching in its own
+        scheduler and hands fully-formed chunks to whichever replica
+        engine its health mask selects; the engine runs its normal
+        execution core — serial or staged host-tier, including the
+        fetch-retry/degrade ladder — and the answers are popped (never
+        left in the results map, so router-assigned rids can overlap
+        across replicas). The engine's fault plan stays active for the
+        duration, exactly as in :meth:`drain`.
+        """
+        with faults.activate(self.fault_plan):
+            if self._staged_host_serving():
+                t0 = time.perf_counter()
+                e = self._dispatch_stage1(chunk)
+                d2h_s = 0.0
+                while True:
+                    if e.retry_at is not None:
+                        wait = e.retry_at - time.perf_counter()
+                        if wait > 0:
+                            time.sleep(wait)
+                    d2h = self._finish_host_batch(e)
+                    if d2h is not None:
+                        d2h_s = d2h
+                        break
+                self.stats.total_time_s += max(
+                    time.perf_counter() - t0 - d2h_s, 0.0
+                )
+            else:
+                self._execute_batch(chunk)
+        return [self.results.pop(r.rid) for r in chunk]
 
     def _execute_batch(self, chunk: list[Request]) -> None:
         """The serial execution core: pad to the smallest pre-warmed batch

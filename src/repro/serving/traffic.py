@@ -113,7 +113,20 @@ def run_open_loop(
     (open loop), and the scheduler sees the queue depth each arrival
     pattern actually produces. Sleeps only when idle before the next
     arrival.
+
+    Host-tier engines overlap batch i's exact-row fetch with batch i+1's
+    compressed first pass — which needs at least two batches dispatched in
+    one drain call, so ``drain_chunk`` is raised to the engine's pipeline
+    depth when the served params are host-tier (``drain_chunk=1`` used to
+    collapse the overlap to zero under open-loop replay).
     """
+    staged = getattr(engine, "_staged_host_serving", None)
+    if (
+        drain_chunk is not None
+        and staged is not None
+        and staged()
+    ):
+        drain_chunk = max(drain_chunk, getattr(engine, "_pipeline_depth", 2))
     t0 = time.perf_counter()
     rids: list[int] = []
     i = 0

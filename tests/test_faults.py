@@ -455,3 +455,41 @@ def test_run_with_restarts_backoff_is_deterministic(tmp_path, monkeypatch):
     sleeps.clear()
     run("b")
     assert sleeps == first  # seeded jitter: same schedule every replay
+
+
+def _corrupt_step(directory, step):
+    """Flip one byte of one leaf so the step's CRC verification fails."""
+    sd = os.path.join(directory, f"step_{step:08d}")
+    leaf = next(n for n in sorted(os.listdir(sd)) if n.endswith(".npy"))
+    with open(os.path.join(sd, leaf), "r+b") as f:
+        b = f.read(1)
+        f.seek(0)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_run_with_restarts_falls_back_past_corrupt_newest(tmp_path):
+    """run_with_restarts x restore_latest newest-verified fallback: when
+    the newest checkpoint is corrupt at restart time, the harness must
+    restore the previous verified step and converge within the restart
+    bound — not re-restore the corrupt step forever."""
+    d = str(tmp_path)
+    mgr = checkpoint.CheckpointManager(d)
+    calls = []
+
+    def step_fn(state, i):
+        calls.append(i)
+        if i == 5 and calls.count(5) == 1:
+            _corrupt_step(d, 4)  # newest checkpoint (step_4) goes bad
+            raise Preemption()
+        return {"x": state["x"] + 1}
+
+    state, restarts = run_with_restarts(
+        lambda: {"x": np.zeros(1, np.float32)}, step_fn,
+        n_steps=8, manager=mgr, checkpoint_every=2, max_restarts=3,
+    )
+    assert restarts == 1  # bounded: one restart, no restore loop
+    assert float(state["x"][0]) == 8.0  # exact convergence
+    # Fallback restored step 2 (not the corrupt step 4): steps 2..5 were
+    # re-executed once each, and total work is exactly 6 + 6 steps.
+    assert calls.count(2) == 2 and calls.count(4) == 2
+    assert len(calls) == 12

@@ -1,0 +1,395 @@
+"""Multi-replica serving fabric (DESIGN.md §Replica fabric): health state
+machine, router dispatch and bit-identity, hedging, failover, replica
+kill, the wrong-generation guard, and zero-downtime rolling updates."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import faults
+from repro.core import lider, update
+from repro.core.utils import l2_normalize
+from repro.serving import (
+    DEAD,
+    HEALTHY,
+    RECOVERING,
+    SUSPECT,
+    HealthPolicy,
+    QueryResult,
+    QueryRouter,
+    ReplicaSet,
+    RetrievalEngine,
+    RouterConfig,
+    Shed,
+    make_backend,
+)
+
+N, DIM, K, BATCH = 400, 16, 5, 8
+CFG = lider.LiderConfig(
+    n_clusters=8, n_probe=4, n_arrays=4, n_leaves=4, kmeans_iters=5,
+    storage_dtype="int8", rescore_tier="host",
+)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x = l2_normalize(jax.random.normal(jax.random.PRNGKey(0), (N + 32, DIM)))
+    base, held = np.asarray(x[:N]), np.asarray(x[N:])
+    q = np.asarray(l2_normalize(x[:N][:32] + 0.02), np.float32)
+    return base, held, q
+
+
+def build_engine(data, fault_plan=None):
+    base, _, _ = data
+    # Each replica gets its OWN params build (deterministic, so replicas
+    # are bit-identical) — host-tier stores mutate in place on update and
+    # must never be shared across replicas.
+    eng = RetrievalEngine(
+        make_backend("lider", None, updatable=True, n_probe=4),
+        batch_size=BATCH, k=K, dim=DIM,
+        params=lider.build_lider(
+            jax.random.PRNGKey(1), jnp.asarray(base), CFG
+        ),
+        fault_plan=fault_plan,
+    )
+    eng.warmup()
+    return eng
+
+
+def run(router, queries, *, max_dispatches=None):
+    rids = [router.submit(v) for v in queries]
+    while router.pending_requests:
+        router.drain(max_dispatches=max_dispatches)
+    return [router.result(r) for r in rids]
+
+
+def serve_single(engine, queries):
+    out = []
+    for v in queries:
+        rid = engine.submit(v)
+        engine.drain()
+        out.append(engine.result(rid))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Health state machine (no engines needed)
+# ---------------------------------------------------------------------------
+class _FakeEngine:
+    generation = 0
+
+
+def test_health_state_machine_transitions():
+    pol = HealthPolicy(
+        dead_after=2, recover_successes=2, reprobe_backoff_s=0.01
+    )
+    rs = ReplicaSet([_FakeEngine(), _FakeEngine()], policy=pol)
+    r = rs.get("r0")
+    assert r.state == HEALTHY
+
+    rs.record_failure(r, now=0.0)
+    assert r.state == SUSPECT
+    rs.record_success(r, 0.01)
+    assert r.state == HEALTHY  # one success clears suspicion
+
+    rs.record_failure(r, now=0.0)
+    rs.record_failure(r, now=0.0)
+    assert r.state == DEAD and not r.serveable()
+    # Seeded jitter in [1, 2) over the base backoff window.
+    assert 0.01 <= r.reprobe_at < 0.02
+
+    rs.tick(now=r.reprobe_at - 1e-4)
+    assert r.state == DEAD  # backoff window not over yet
+    rs.tick(now=r.reprobe_at + 1e-4)
+    assert r.state == RECOVERING  # reprobe heartbeat succeeded (no plan)
+    rs.record_success(r, 0.01)
+    assert r.state == HEALTHY  # recover_successes reached
+    assert r.backoff_s is None  # backoff reset on full recovery
+
+
+def test_failed_reprobe_doubles_backoff_deterministically():
+    pol = HealthPolicy(dead_after=1, reprobe_backoff_s=0.01)
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("replica_heartbeat", mode="error", times=(0,))],
+        seed=0,
+    )
+
+    def windows(seed):
+        rs = ReplicaSet(
+            [_FakeEngine()],
+            policy=HealthPolicy(
+                dead_after=1, reprobe_backoff_s=0.01, seed=seed
+            ),
+            fault_plan=faults.FaultPlan(plan.to_json()["faults"], seed=0),
+        )
+        r = rs.get("r0")
+        rs.record_failure(r, now=0.0)
+        first = r.reprobe_at
+        rs.tick(now=first + 1e-4)  # reprobe heartbeat: injected miss
+        assert r.state == DEAD
+        return first, r.reprobe_at - (first + 1e-4), r.backoff_s
+
+    f1, w1, b1 = windows(seed=3)
+    assert b1 == pytest.approx(0.02)  # doubled after the failed reprobe
+    assert 0.02 <= w1 < 0.04
+    f2, w2, b2 = windows(seed=3)
+    assert (f1, w1) == (f2, w2)  # per-replica seeded jitter replays
+    f3, _, _ = windows(seed=4)
+    assert f3 != f1
+
+
+def test_rollskip_stale_replica_never_serves():
+    rs = ReplicaSet([_FakeEngine(), _FakeEngine()])
+    r = rs.get("r1")
+    r.stale = True
+    assert not r.serveable()
+    assert rs.pick(exclude=["r0"]) is None
+
+
+# ---------------------------------------------------------------------------
+# Fault-plan plumbing for the replica sites
+# ---------------------------------------------------------------------------
+def test_spec_targets_and_site_counts():
+    spec = faults.FaultSpec(
+        "replica_dispatch", mode="straggle", payload={"replica": "r1"}
+    )
+    assert faults.spec_targets(spec, "r1")
+    assert not faults.spec_targets(spec, "r0")
+    assert faults.spec_targets(
+        faults.FaultSpec("replica_dispatch", mode="straggle"), "r0"
+    )
+    assert not faults.spec_targets(None, "r0")
+
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("replica_kill", mode="kill_replica", times=(0,))]
+    )
+    counts = plan.site_counts()
+    assert set(faults.SITES) <= set(counts)
+    assert all(v == 0 for v in counts.values())  # zero-filled pre-fire
+    plan.fire(faults.REPLICA_KILL)
+    assert plan.site_counts()[faults.REPLICA_KILL] == 1
+    assert plan.site_counts()[faults.REPLICA_DISPATCH] == 0
+
+
+# ---------------------------------------------------------------------------
+# Router over real replicas
+# ---------------------------------------------------------------------------
+def test_router_matches_single_engine_bit_for_bit(data):
+    _, _, q = data
+    router = QueryRouter([build_engine(data), build_engine(data)])
+    res = run(router, q)
+    router.close()
+    single = build_engine(data)
+    want = serve_single(single, q)
+    assert all(isinstance(r, QueryResult) for r in res)
+    for a, b in zip(res, want):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(
+            np.asarray(a.scores), np.asarray(b.scores)
+        )
+    # Both replicas took traffic, every answer is stamped with its server.
+    assert {a.replica for a in res} == {"r0", "r1"}
+    assert all(a.generation == 0 for a in res)
+    assert router.stats.availability == 1.0
+
+
+def test_targeted_dispatch_failure_fails_over(data):
+    _, _, q = data
+    plan = faults.FaultPlan(
+        [
+            faults.FaultSpec(
+                "replica_dispatch", mode="fail", probability=1.0,
+                count=3, payload={"replica": "r0"},
+            )
+        ],
+        seed=1,
+    )
+    router = QueryRouter(
+        [build_engine(data, plan), build_engine(data, plan)],
+        fault_plan=plan,
+    )
+    res = run(router, q)
+    router.close()
+    assert all(isinstance(r, QueryResult) for r in res)  # nothing lost
+    assert router.stats.n_failovers > 0
+    assert router.stats.n_dispatch_failures >= 1
+    r0 = router.replicas.get("r0")
+    assert r0.n_failures >= 1
+    assert r0.state in (SUSPECT, HEALTHY)  # recovered once faults ran out
+
+
+def test_replica_kill_mid_trace_fails_over_and_stays_dead(data):
+    _, _, q = data
+    plan = faults.FaultPlan(
+        [
+            faults.FaultSpec(
+                "replica_kill", mode="kill_replica", times=(2,),
+                payload={"replica": "r1"},
+            )
+        ],
+        seed=2,
+    )
+    router = QueryRouter(
+        [build_engine(data, plan), build_engine(data, plan)],
+        fault_plan=plan,
+    )
+    qs = np.concatenate([q, q * 0.99])
+    res = run(router, qs, max_dispatches=1)  # many drain calls -> kill fires
+    router.close()
+    assert router.stats.n_replica_kills == 1
+    r1 = router.replicas.get("r1")
+    assert r1.killed and r1.state == DEAD and r1.reprobe_at is None
+    assert all(isinstance(r, QueryResult) for r in res)  # zero lost queries
+    # After the kill every answer came from the survivor.
+    assert router.stats.availability == 1.0
+
+
+def test_wrong_generation_guard_discards_and_fails_over(data):
+    _, held, q = data
+    router = QueryRouter([build_engine(data), build_engine(data)])
+    r0 = router.replicas.get("r0")
+    new_rows = jnp.asarray(held[:8])
+    orig = r0.engine.execute_chunk
+    raced = {"done": False}
+
+    def racy_execute(chunk):
+        # An update applied directly to the engine (outside RouterControl)
+        # races this in-flight batch: the answer comes back stamped with
+        # the new generation while the router dispatched against the old.
+        if not raced["done"]:
+            raced["done"] = True
+            r0.engine.apply_updates(
+                lambda p: update.upsert(p, new_rows)
+            )
+        return orig(chunk)
+
+    r0.engine.execute_chunk = racy_execute
+    res = run(router, q)
+    router.close()
+    assert router.stats.n_wrong_generation > 0  # guard tripped...
+    assert all(isinstance(r, QueryResult) for r in res)  # ...yet all served
+    # No delivered answer carries a generation other than its replica's.
+    for a in res:
+        assert a.generation == router.replicas.get(a.replica).generation
+
+
+def test_hedging_rescues_straggler(data):
+    _, _, q = data
+    plan = faults.FaultPlan(
+        [
+            faults.FaultSpec(
+                "replica_dispatch", mode="straggle", probability=1.0,
+                delay_s=0.25, payload={"replica": "r0"},
+            )
+        ],
+        seed=5,
+    )
+    cfg = RouterConfig(hedge_quantile=0.5, hedge_min_samples=4)
+    router = QueryRouter(
+        [build_engine(data, plan), build_engine(data, plan)],
+        config=cfg, fault_plan=plan,
+    )
+    qs = np.concatenate([q, q * 0.99, q * 1.01])
+    res = run(router, qs)
+    router.close()
+    assert all(isinstance(r, QueryResult) for r in res)
+    assert router.stats.n_hedges >= 1
+    assert router.stats.n_hedge_wins >= 1  # the hedge beat a 0.25s straggle
+    # Hedge-rescued answers did not pay the full straggle delay: with the
+    # injected 0.25s sleep on r0 every hedged batch still answered fast.
+    assert router.stats.n_wrong_generation == 0
+
+
+def test_rolling_update_zero_downtime_and_bit_identity(data):
+    _, held, q = data
+    router = QueryRouter(
+        [build_engine(data), build_engine(data), build_engine(data)]
+    )
+    _ = run(router, q)  # pre-roll traffic
+    new_rows = np.asarray(held[:16], np.float32)
+
+    def up(params):
+        return update.upsert(params, jnp.asarray(new_rows))
+
+    # Non-blocking roll: traffic keeps flowing while replicas update one
+    # at a time behind the mask.
+    router.control.apply_updates(up, block=False)
+    mixed = run(router, np.concatenate([q, q * 0.99]))
+    router.control.wait(timeout=60.0)
+    assert router.stats.n_rolls_completed == 1
+    assert router.stats.n_roll_replicas_updated == 3
+    assert router.generation_window() == (1, 1)  # window closed
+    # Zero downtime, zero losses, zero wrong-generation answers — every
+    # mixed-window answer matches its serving replica's generation stamp.
+    assert all(isinstance(r, QueryResult) for r in mixed)
+    assert router.stats.n_wrong_generation == 0
+
+    res = run(router, q)
+    router.close()
+    single = build_engine(data)
+    single.apply_updates(up)
+    want = serve_single(single, q)
+    for a, b in zip(res, want):
+        assert a.generation == 1
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+        np.testing.assert_array_equal(
+            np.asarray(a.scores), np.asarray(b.scores)
+        )
+
+
+def test_rolling_update_skips_killed_replica_as_stale(data):
+    _, held, q = data
+    router = QueryRouter(
+        [build_engine(data), build_engine(data), build_engine(data)]
+    )
+    _ = run(router, q)
+    router.replicas.kill("r1")
+    new_rows = jnp.asarray(held[:8])
+    router.control.apply_updates(lambda p: update.upsert(p, new_rows))
+    assert router.stats.n_roll_replicas_updated == 2
+    assert router.stats.n_roll_replicas_skipped == 1
+    r1 = router.replicas.get("r1")
+    assert r1.stale and not r1.serveable()  # never rejoins at the old gen
+    assert router.generation_window() == (1, 1)
+    res = run(router, q)
+    router.close()
+    assert all(a.generation == 1 for a in res)
+    assert {a.replica for a in res} <= {"r0", "r2"}
+
+
+def test_rolling_update_retries_failed_attempt_once(data):
+    # A transiently failing update_fn must be retried — not skipped as
+    # stale. Regression: the roll's own `updating` mask used to read as
+    # ill-health on the retry pass, silently skipping the replica.
+    _, held, q = data
+    router = QueryRouter([build_engine(data), build_engine(data)])
+    _ = run(router, q)
+    new_rows = jnp.asarray(held[:8])
+    calls = {"n": 0}
+
+    def flaky_up(params):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient update failure")
+        return update.upsert(params, new_rows)
+
+    router.control.apply_updates(flaky_up)
+    assert router.stats.n_roll_update_failures == 1
+    assert router.stats.n_roll_replicas_updated == 2
+    assert router.stats.n_roll_replicas_skipped == 0
+    assert router.generation_window() == (1, 1)
+    assert all(not r.stale and r.serveable() for r in router.replicas)
+    res = run(router, q)
+    router.close()
+    assert all(a.generation == 1 for a in res)
+
+
+def test_no_serveable_replicas_sheds_structurally(data):
+    _, _, q = data
+    router = QueryRouter([build_engine(data)])
+    router.replicas.kill("r0")
+    res = run(router, q[:BATCH])
+    router.close()
+    assert all(isinstance(r, Shed) for r in res)
+    assert {r.reason for r in res} == {"no_replica"}
+    assert router.stats.availability < 1.0

@@ -13,6 +13,7 @@ from repro.core import lider, update
 from repro.core.bank import EmbStore, set_rescore_tier
 from repro.core.utils import recall_at_k
 from repro.serving import RetrievalEngine, make_backend
+from repro.serving.traffic import make_trace, run_open_loop
 from repro.training import checkpoint
 
 CFG = lider.LiderConfig(
@@ -264,6 +265,26 @@ def test_engine_serves_host_tier_with_overlap(tier_pair):
     assert float(recall_at_k(jnp.asarray(got), gt[:48])) > 0.85
     # no pruning configured -> no probe stats (same contract as serial)
     assert s.n_probes_total == 0
+
+
+def test_open_loop_drain_chunk_one_keeps_overlap(tier_pair):
+    """Satellite regression (ROADMAP): open-loop replay with
+    ``drain_chunk=1`` used to dispatch one batch per drain call, which
+    collapsed the host-tier fetch overlap to zero; the driver now raises
+    the chunk to the engine's pipeline depth for host-tier params."""
+    x, q, _, _, ph = tier_pair
+    eng = _host_engine(ph, x.shape[1])
+    eng.warmup()
+    pool = np.asarray(q)[:32]
+    trace = make_trace(
+        seed=0, n_arrivals=64, pool_size=len(pool), mean_rate=1e5,
+    )
+    rids = run_open_loop(eng, trace, pool, drain_chunk=1)
+    assert len(rids) == 64
+    assert all(eng.result(r) is not None for r in rids)
+    s = eng.stats
+    assert s.n_host_fetches >= 2
+    assert s.overlap_fraction > 0
 
 
 def test_engine_host_tier_reports_pruned_probes(tier_pair):
