@@ -34,11 +34,19 @@ recorded per commit (CI runs ``--smoke``). Three measurements:
    (CI gates ratio > 1.5 and the modeled int4 first-pass total ≥ 1.7x
    below int8 at the paper shape).
 
+5. **Binary-sketch tier** (modeled + measured) — the traffic model re-run
+   with the 1-bit Hamming pre-filter in front of the quantized pass
+   (CI gates the modeled sketch+int4 total ≥ 3x below plain int4 at the
+   paper shape), exact (ids, scores) parity of ``sketch_prefilter``
+   against the natural-order oracle, and the sketch->int4->rescore
+   recall floor vs plain int4+rescore (same eps).
+
 Usage:
     PYTHONPATH=src python -m benchmarks.kernel_verify [--smoke]
         [--out BENCH_verify.json] [--b 32] [--p 20] [--h-arrays 10]
         [--r 400] [--d 768] [--k 100] [--rescore-factor 4]
         [--storage-dtypes float32 bfloat16 int8 int4] [--block-q 8]
+        [--sketch-factor 4]
 """
 from __future__ import annotations
 
@@ -57,6 +65,9 @@ INT4_VS_INT8_TOTAL_MIN = 1.7
 # Measured cluster-tile DMA-sharing ratio of the cluster-major schedule vs
 # the per-query schedule under Zipf-skewed probe traffic.
 SHARED_DMA_RATIO_MIN = 1.5
+# Modeled sketch+int4 first-pass total traffic must be at least this far
+# below plain int4 at the paper shape (the 1-bit tier's acceptance gate).
+SKETCH_VS_INT4_TOTAL_MIN = 3.0
 # int8+host device-resident embedding-store bytes must stay at or below
 # this fraction of the f32 store (the tier dimension's CI gate; actual
 # ratio at d=768 is (d+4)/(4d) ~ 0.25 — DESIGN.md §Tiered embedding store).
@@ -89,7 +100,13 @@ def storage_tier_model(
 
 
 def traffic_model(
-    b: int, c: int, d: int, k: int, storage_dtype: str, rescore_factor: int = 4
+    b: int,
+    c: int,
+    d: int,
+    k: int,
+    storage_dtype: str,
+    rescore_factor: int = 4,
+    sketch_factor: int | None = None,
 ) -> dict[str, dict[str, float]]:
     """HBM bytes per batch for both verification paths (DESIGN.md model).
 
@@ -103,41 +120,78 @@ def traffic_model(
     traffic. int4 halves only the candidate-row term (codes are packed two
     per byte; scales, ids, and the f32 rescore gather are width-independent),
     which is exactly why its total-traffic win over int8 lands below 2x.
+
+    Queries are never stored, so the query read is width-INDEPENDENT of the
+    storage dtype on the quantized paths: the kernel reads int8 query codes
+    at both int8 and int4 table widths (only the table side unpacks
+    nibbles) plus one f32 scale per query.
+
+    ``sketch_factor`` (quantized dtypes only; DESIGN.md §Binary sketch
+    tier) models the 1-bit pre-filter pass: the packed sketch rows stream
+    at ceil(d/32) uint32 words per candidate, the survivor (row, score)
+    set round-trips once, and every downstream per-candidate term — the
+    code-row gather, the scale array, the score/dedup scratch — shrinks
+    from C to ``m = min(sketch_factor*k', C)`` survivors.
     """
     DEDUP_PASSES = 10  # argsort r/w + 3x take_along_axis r/w + top_k read
     s = STORAGE_BYTES[storage_dtype]
+    quantized = storage_dtype in QUANTIZED_DTYPES
     bc = b * c
-    bcd = b * c * d
 
-    gather_read = bcd * s  # candidate rows HBM->chip (both paths)
     ids_read = bc * 4
-    query_read = b * d * s
+    if quantized:
+        # int8 query codes at both quantized widths + one f32 scale per row.
+        query_read = b * (d + 4)
+    else:
+        query_read = b * d * s
     topk_write = b * k * 8
+
+    # The candidate count the code pass actually touches: all C, or the
+    # sketch pass's m survivors.
+    m = c
+    sketch_shared = 0.0
+    sketch_emitted = 0.0
+    if quantized and sketch_factor is not None:
+        kp = min(rescore_factor * k, c)
+        m = min(sketch_factor * kp, c)
+        w_bytes = -(-d // 32) * 4  # packed words per row
+        # 1-bit candidate rows + the query sketches (compulsory reads of
+        # the pre-filter pass; it shares the bc id read issued above)
+        sketch_shared += bc * w_bytes + b * w_bytes
+        # survivor (row, negated-Hamming) round-trip between the passes
+        sketch_emitted += 2 * b * m * 8
+
+    bm = b * m
+    bmd = b * m * d
+    gather_read = bmd * s  # candidate code rows HBM->chip (both paths)
 
     quant_extra_emitted = 0.0
     quant_extra_shared = 0.0
-    if storage_dtype in QUANTIZED_DTYPES:
+    if quantized:
         kp = min(rescore_factor * k, c)
-        # gathered (B, C) f32 combined-scale array: scale-table read + write
+        # gathered (B, m) f32 combined-scale array: scale-table read + write
         # + kernel read
-        quant_extra_emitted += 3 * bc * 4
+        quant_extra_emitted += 3 * bm * 4
         # provisional (B, k') top-k write + read between the passes
         quant_extra_emitted += 2 * b * kp * 8
         # exact-rescore gather: k' full-precision rows + their ids
         quant_extra_shared += b * kp * (d * 4 + 4)
 
-    cand_write = bcd * s  # (B, C, d) materialization ...
-    cand_read = bcd * s  # ... re-read by the einsum
-    score_write = bc * 4  # (B, C) score matrix ...
-    score_read = bc * 4  # ... re-read by dedup/top-k
-    dedup_bytes = DEDUP_PASSES * bc * 4
+    cand_write = bmd * s  # (B, m, d) materialization ...
+    cand_read = bmd * s  # ... re-read by the einsum
+    score_write = bm * 4  # (B, m) score matrix ...
+    score_read = bm * 4  # ... re-read by dedup/top-k
+    dedup_bytes = DEDUP_PASSES * bm * 4
 
     unfused_emitted = (
         cand_write + cand_read + score_write + score_read + dedup_bytes
-        + topk_write + quant_extra_emitted
+        + topk_write + quant_extra_emitted + sketch_emitted
     )
-    fused_emitted = topk_write + quant_extra_emitted
-    shared = gather_read + ids_read + query_read + quant_extra_shared
+    fused_emitted = topk_write + quant_extra_emitted + sketch_emitted
+    shared = (
+        gather_read + ids_read + query_read + quant_extra_shared
+        + sketch_shared
+    )
     return {
         "unfused": {
             "emitted_bytes": unfused_emitted,
@@ -298,6 +352,72 @@ def _measure_host_tier(
     return out
 
 
+def _measure_sketch(b, c, n, d, k, block_c, iters=3):
+    """1-bit Hamming pre-filter kernel vs the natural-order oracle: exact
+    (ids, scores) parity plus walls (DESIGN.md §Binary sketch tier)."""
+    import jax
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.fused_verify import sketch_prefilter
+    from repro.kernels.quant import sketch_rows
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    embs_f = jax.random.normal(k1, (n, d))
+    ids = jax.random.randint(k2, (b, c), -1, n)
+    q = jax.random.normal(k3, (b, d))
+    table = sketch_rows(embs_f)
+
+    def run_kernel():
+        return sketch_prefilter(table, ids, q, k=k, block_c=block_c)
+
+    def run_ref():
+        return ref.sketch_topk_ref(table, ids, q, k=k)
+
+    gi, gs = run_kernel()
+    wi, ws = run_ref()
+    return {
+        "ids_match": bool((np.asarray(gi) == np.asarray(wi)).all()),
+        "scores_match": bool((np.asarray(gs) == np.asarray(ws)).all()),
+        "wall_s_kernel": _time(run_kernel, iters),
+        "wall_s_ref": _time(run_ref, iters),
+        "shape": {"B": b, "C": c, "N": n, "d": d, "k": k},
+    }
+
+
+def _measure_sketch_e2e(n, d, b, k, n_clusters):
+    """Covering-sketch end-to-end parity: with ``sketch_factor`` large
+    enough that every routed candidate survives the pre-filter, the full
+    search must return (ids, scores) bit-identical to the unfiltered int4
+    path (the tier's correctness contract, DESIGN.md §Binary sketch tier)."""
+    import jax
+    import numpy as np
+
+    from repro.core import lider as lider_lib
+    from repro.data import synthetic
+
+    corpus = synthetic.retrieval_corpus(3, n, d)
+    queries, _ = synthetic.retrieval_queries(4, corpus, b)
+    cfg = lider_lib.LiderConfig(
+        n_clusters=n_clusters, n_arrays=4, n_leaves=4, kmeans_iters=5,
+        storage_dtype="int4",
+    )
+    params = lider_lib.build_lider(jax.random.PRNGKey(0), corpus, cfg)
+    plain = lider_lib.search_lider(params, queries, k=k, n_probe=4)
+    filt = lider_lib.search_lider(
+        params, queries, k=k, n_probe=4, sketch_factor=10**6
+    )
+    return {
+        "ids_match": bool(
+            (np.asarray(plain.ids) == np.asarray(filt.ids)).all()
+        ),
+        "scores_match": bool(
+            (np.asarray(plain.scores) == np.asarray(filt.scores)).all()
+        ),
+        "shape": {"N": n, "d": d, "B": b, "k": k, "clusters": n_clusters},
+    }
+
+
 def _recall_floor(n, d, b, k, rescore_factor):
     """Recall@k vs exact f32 of one-shot verification over the same
     candidate set, per storage dtype (the quality side of the sweep)."""
@@ -336,6 +456,59 @@ def _recall_floor(n, d, b, k, rescore_factor):
             )
         out[dtype_name] = float(np.asarray(recall_at_k(ids, gt_ids)))
     return out
+
+
+def _recall_floor_sketch(n, d, b, k, rescore_factor, sketch_factor):
+    """sketch->int4->rescore recall@k vs plain int4->rescore, same data.
+
+    The corpus plants ``n // b`` genuinely similar rows (cos ~0.8) around
+    each query — the neighbor regime dense-retrieval corpora put the true
+    top-k in. A pure random-Gaussian corpus would put the "true" top-k at
+    cos ~ sqrt(2 ln n / d), which no 1-bit sign sketch can separate from
+    the bulk — the failure mode DESIGN.md §Binary sketch tier documents
+    under "when the pre-filter loses", not a serving regression — so the
+    quality gate is measured where the tier is actually operable.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.utils import l2_normalize, recall_at_k
+    from repro.kernels.ops import sketch_topk_op, verify_topk_op
+    from repro.kernels.quant import quantize_rows_int4, sketch_rows
+
+    g = n // b
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    base = l2_normalize(jax.random.normal(k1, (b, d)))
+    sigma = 0.45 / d**0.5  # noise VECTOR norm ~0.45 vs the unit base
+    x = l2_normalize(
+        jnp.repeat(base, g, axis=0) + sigma * jax.random.normal(k2, (n, d))
+    )
+    q = l2_normalize(base + sigma * jax.random.normal(k3, (b, d)))
+    cand = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (b, n))
+    gt_ids, _ = verify_topk_op(x, cand, q, k=k, use_pallas=False)
+
+    codes, scales = quantize_rows_int4(x)
+    kp = min(rescore_factor * k, n)
+
+    def two_stage(first_rows):
+        prov, _ = verify_topk_op(
+            codes, jnp.maximum(first_rows, 0), q, k=kp, out_ids=first_rows,
+            scales=scales, use_pallas=False, code_dtype="int4",
+        )
+        ids, _ = verify_topk_op(
+            x, jnp.maximum(prov, 0), q, k=k, out_ids=prov, use_pallas=False
+        )
+        return float(np.asarray(recall_at_k(ids, gt_ids)))
+
+    m = min(sketch_factor * kp, n)
+    surv, _ = sketch_topk_op(sketch_rows(x), cand, q, k=m, use_pallas=False)
+    return {
+        "int4": two_stage(cand),
+        "sketch_int4": two_stage(surv),
+        "shape": {"N": n, "d": d, "B": b, "k": k, "group": g,
+                  "sketch_factor": sketch_factor},
+    }
 
 
 def _measure_shared_dma(
@@ -463,12 +636,22 @@ def main() -> None:
     ap.add_argument("--zipf-a", type=float, default=1.3,
                     help="Zipf exponent of the probe-popularity skew the "
                     "shared-DMA measurement samples")
+    ap.add_argument("--sketch-factor", type=int, default=4,
+                    help="survivor multiple m = sketch_factor*k' of the "
+                    "1-bit pre-filter pass (DESIGN.md §Binary sketch tier)")
     args = ap.parse_args()
 
     c = args.p * args.h_arrays * args.r
     model = {
         sd: traffic_model(args.b, c, args.d, args.k, sd, args.rescore_factor)
         for sd in args.dtypes
+    }
+    # Same model with the 1-bit pre-filter in front (quantized dtypes only).
+    model_sketch = {
+        sd: traffic_model(args.b, c, args.d, args.k, sd, args.rescore_factor,
+                          sketch_factor=args.sketch_factor)
+        for sd in args.dtypes
+        if sd in QUANTIZED_DTYPES
     }
     # Storage-tier dimension (DESIGN.md §Tiered embedding store): where the
     # embedding-store bytes live per (dtype, tier) config at paper scale.
@@ -529,8 +712,23 @@ def main() -> None:
                 b=4, c=608, n=4096, d=64, k=10, block_c=128,
                 rescore_factor=args.rescore_factor, code_dtype=sd,
             )
+    if full_measure:
+        measured["sketch"] = _measure_sketch(
+            b=args.b, c=c, n=200_000, d=args.d, k=args.k, block_c=256
+        )
+    else:
+        measured["sketch"] = _measure_sketch(
+            b=4, c=608, n=4096, d=64, k=10, block_c=128
+        )
+    measured["sketch_e2e"] = _measure_sketch_e2e(
+        n=4096, d=64, b=16, k=10, n_clusters=16
+    )
     recall = _recall_floor(
         n=4096, d=64, b=32, k=10, rescore_factor=args.rescore_factor
+    )
+    recall_sketch = _recall_floor_sketch(
+        n=4096, d=64, b=32, k=10, rescore_factor=args.rescore_factor,
+        sketch_factor=args.sketch_factor,
     )
     # Cluster-major schedule: parity + shared-DMA ratio under Zipf probes
     # (shape-independent of the dtype sweep; int8 codes, small bank).
@@ -580,6 +778,22 @@ def main() -> None:
     checks["shared_dma_ratio_above_1p5_zipf"] = (
         shared["shared_dma_ratio"] > SHARED_DMA_RATIO_MIN
     )
+    checks["parity_sketch"] = (
+        measured["sketch"]["ids_match"] and measured["sketch"]["scores_match"]
+    )
+    checks["sketch_covering_end_to_end_parity"] = (
+        measured["sketch_e2e"]["ids_match"]
+        and measured["sketch_e2e"]["scores_match"]
+    )
+    if "int4" in args.dtypes:
+        checks["sketch_int4_recall_floor_vs_int4"] = (
+            recall_sketch["sketch_int4"] >= recall_sketch["int4"] - RECALL_EPS
+        )
+        checks["sketch_int4_total_traffic_at_least_3x_below_int4"] = (
+            model["int4"]["fused"]["total_bytes"]
+            >= SKETCH_VS_INT4_TOTAL_MIN
+            * model_sketch["int4"]["fused"]["total_bytes"]
+        )
 
     report = {
         "paper_shape": {
@@ -608,6 +822,18 @@ def main() -> None:
             if "int8" in model and "int4" in model
             else None
         ),
+        "sketch": {
+            "sketch_factor": args.sketch_factor,
+            "traffic_model": model_sketch,
+            "recall_planted_neighbors": recall_sketch,
+            "min_total_ratio_vs_int4": SKETCH_VS_INT4_TOTAL_MIN,
+            "sketch_int4_vs_int4_total_ratio": (
+                model["int4"]["fused"]["total_bytes"]
+                / model_sketch["int4"]["fused"]["total_bytes"]
+                if "int4" in model_sketch
+                else None
+            ),
+        },
         "checks": checks,
     }
     with open(args.out, "w") as f:
@@ -650,6 +876,19 @@ def main() -> None:
             f"fetch={mh['host_fetch_us']:.0f}us "
             f"rescore={mh['wall_s_host_rescore']*1e3:.2f}ms "
             f"(device-resident rescore {mh['wall_s_device_rescore']*1e3:.2f}ms)"
+        )
+    if "int4" in model_sketch:
+        ms = measured["sketch"]
+        print(
+            f"[verify] sketch+int4 (factor={args.sketch_factor}): fused total "
+            f"{model_sketch['int4']['fused']['total_bytes']/2**30:7.2f} GiB "
+            f"({model['int4']['fused']['total_bytes'] / model_sketch['int4']['fused']['total_bytes']:.2f}x"
+            f" below plain int4), recall={recall_sketch['sketch_int4']:.4f} "
+            f"(int4 {recall_sketch['int4']:.4f}, planted neighbors); kernel "
+            f"{ms['wall_s_kernel']*1e3:.2f} ms, ids_match={ms['ids_match']} "
+            f"scores_match={ms['scores_match']}, covering e2e "
+            f"ids_match={measured['sketch_e2e']['ids_match']} "
+            f"scores_match={measured['sketch_e2e']['scores_match']}"
         )
     print(
         f"[verify] cluster-major (zipf a={shared['shape']['zipf_a']}, "

@@ -47,6 +47,7 @@ from ..kernels.quant import (
     dequantize_rows,
     quantize_rows,
     quantize_rows_int4,
+    sketch_rows,
 )
 from .types import pytree_dataclass
 
@@ -313,6 +314,13 @@ class ClusterBank:
     # top-k' rows from (DESIGN.md §Quantized bank).
     emb_scales: jnp.ndarray | None = _f(0, default=None)  # (c, Lp) f32
     rescore_embs: jnp.ndarray | None = _f(0, default=None)  # (c, Lp, d)
+    # 1-bit sign-sketch table (quantized storage only; DESIGN.md §Binary
+    # sketch tier): per-row sign bits packed 32-per-word. The optional
+    # pre-filter pass (LiderConfig.sketch_factor) Hamming-scores these at
+    # 1/8 the int8 code bytes before the int4/int8 MXU pass. Built,
+    # upserted, and compacted in lockstep with ``embs`` — the sketch is
+    # row-local (sign of the raw row), like the quantizers.
+    sketches: jnp.ndarray | None = _f(0, default=None)  # (c, Lp, ceil(d/32)) u32
     # Host-tier handle (DESIGN.md §Tiered embedding store). None = device
     # tier. Registered as *static* pytree aux data: the host table never
     # enters traced programs — the staged search fetches from it between its
@@ -450,26 +458,30 @@ def gather_cluster_rows(embs: jnp.ndarray, gids: jnp.ndarray) -> jnp.ndarray:
 
 def store_rows(
     raw_rows: jnp.ndarray, storage_dtype: str
-) -> tuple[jnp.ndarray, jnp.ndarray | None, jnp.ndarray | None]:
-    """Raw packed float rows -> ``(embs, emb_scales, rescore_embs)``.
+) -> tuple[
+    jnp.ndarray, jnp.ndarray | None, jnp.ndarray | None, jnp.ndarray | None
+]:
+    """Raw packed float rows -> ``(embs, emb_scales, rescore_embs, sketches)``.
 
     The single conversion point from float rows to bank storage, shared by
     the offline build and the upsert append (so both quantize identically —
     the scheme is row-local, which is what keeps upsert slot-identical to a
     rebuild). For the quantized dtypes the raw rows are also kept as the
-    full-precision rescore side table; zero (padded) rows quantize to exact
-    zeros (int4 rows additionally pack to exact zero bytes).
+    full-precision rescore side table and additionally sign-sketched into the
+    packed 1-bit pre-filter table (DESIGN.md §Binary sketch tier); zero
+    (padded) rows quantize to exact zeros (int4 rows pack to exact zero
+    bytes, sketches to exact zero words).
     """
     if storage_dtype == "int8":
         codes, scales = quantize_rows(raw_rows)
-        return codes, scales, raw_rows
+        return codes, scales, raw_rows, sketch_rows(raw_rows)
     if storage_dtype == "int4":
         codes, scales = quantize_rows_int4(raw_rows)
-        return codes, scales, raw_rows
+        return codes, scales, raw_rows, sketch_rows(raw_rows)
     if storage_dtype == "bfloat16":
-        return raw_rows.astype(jnp.bfloat16), None, None
+        return raw_rows.astype(jnp.bfloat16), None, None, None
     if storage_dtype == "float32":
-        return raw_rows.astype(jnp.float32), None, None
+        return raw_rows.astype(jnp.float32), None, None, None
     raise ValueError(
         f"storage_dtype must be one of {STORAGE_DTYPES}, got {storage_dtype!r}"
     )
@@ -575,7 +587,9 @@ def build_bank(
         raise CapacityOverflowError(n_dropped, capacity)
     gids, sizes = clustering.group_by_cluster(assignment, n_clusters, capacity)
     raw_rows = gather_cluster_rows(embs, gids)
-    stored, emb_scales, rescore_embs = store_rows(raw_rows, storage_dtype)
+    stored, emb_scales, rescore_embs, sketches = store_rows(
+        raw_rows, storage_dtype
+    )
     lsh = lsh_lib.make_lsh(rng, embs.shape[-1], n_arrays, key_len)
     fit_rows = (
         dequantize_codes(stored, emb_scales, storage_dtype)
@@ -606,6 +620,7 @@ def build_bank(
         next_gid=jnp.int32(embs.shape[0]),
         emb_scales=emb_scales,
         rescore_embs=rescore_embs,
+        sketches=sketches,
         store=store,
         code_dtype=storage_dtype if storage_dtype in QUANTIZED_DTYPES else "int8",
     )
@@ -656,5 +671,12 @@ def grow_bank(bank: ClusterBank, new_capacity: int) -> ClusterBank:
             None
             if bank.rescore_embs is None
             else jnp.pad(bank.rescore_embs, ((0, 0), (0, extra), (0, 0)))
+        ),
+        # Zero words: exactly what sketch_rows packs for an all-zero row,
+        # so grown slots match a fresh pack's padding byte-for-byte.
+        sketches=(
+            None
+            if bank.sketches is None
+            else jnp.pad(bank.sketches, ((0, 0), (0, extra), (0, 0)))
         ),
     )

@@ -38,6 +38,7 @@ from .clustering import update_centroids
 from .core_model import TopK, search_core_model
 from .lider import (
     LiderParams,
+    _cluster_major_first_pass,
     incluster_search,
     provisional_rows,
     prune_probes,
@@ -114,6 +115,8 @@ def make_sharded_search(
     prune_margin: float | None = None,
     rescore_factor: int = 4,
     block_c: int | None = None,
+    block_q: int | None = None,
+    sketch_factor: int | None = None,
 ):
     """Build the jitted multi-device search fn: (params, queries) -> (TopK, drops).
 
@@ -150,6 +153,19 @@ def make_sharded_search(
     (dedup/tie-break by gid, the float-path convention). The returned
     ``search`` is therefore a two-phase callable; its jit'd device phase is
     exposed as ``search.stage1`` (what the dry-run lowers).
+
+    ``block_q`` (quantized banks only) runs the shard-local compressed
+    first pass on the cluster-major schedule (``fused_verify_grouped``):
+    pairs dispatched to a shard that probe the same cluster share one DMA
+    of its code rows. The routing + capacity dispatch is replicated on the
+    host in NumPy (bit-identical to the device rule — same stable argsort)
+    so the per-shard schedules can be built in the host pre-pass; schedule
+    arrays ride into the one shard_map as sharded inputs, and the merge
+    collective is unchanged — NO new collectives appear. Results are
+    bit-identical to the per-query sharded path (tests/test_distributed.py
+    gates this in a subprocess). ``sketch_factor`` similarly threads the
+    binary-sketch pre-filter into the shard-local first pass, both
+    spellings.
 
     **Degraded mode** (DESIGN.md §Failure model): both tiers accept an
     optional ``shard_health`` bool mask of length ``n_cluster_shards``
@@ -250,6 +266,7 @@ def make_sharded_search(
             use_fused=use_fused,
             rescore_factor=rescore_factor,
             block_c=block_c,
+            sketch_factor=sketch_factor,
         )  # (cap, k)
 
         # Scatter per-pair results back to their (query, probe-slot) rows.
@@ -312,6 +329,7 @@ def make_sharded_search(
             use_fused=use_fused,
             rescore_factor=rescore_factor,
             block_c=block_c,
+            sketch_factor=sketch_factor,
         )  # (cap, k') local flat rows + compressed scores
         kp = pair_prov.ids.shape[-1]
         g_rows_pair = jnp.where(
@@ -364,6 +382,39 @@ def make_sharded_search(
             "shards_live": int(health.sum()),
             "shards_total": n_cluster_shards,
         }
+
+    if block_q is not None:
+        if not params_like.bank.quantized:
+            raise ValueError(
+                "block_q (cluster-major schedule) on the sharded path "
+                "requires a quantized (int8/int4) bank — use the per-query "
+                "spelling (block_q=None) for float banks"
+            )
+        return _make_grouped_search(
+            mesh=mesh,
+            param_specs=param_specs,
+            qspec=qspec,
+            host_tier=host_tier,
+            caxes=caxes,
+            qaxes=qaxes,
+            n_cluster_shards=n_cluster_shards,
+            n_query_shards=n_query_shards,
+            c_total=c_total,
+            k=k,
+            n_probe=n_probe,
+            r0=r0,
+            r0_centroid=r0_centroid,
+            capacity_factor=capacity_factor,
+            refine=refine,
+            use_fused=use_fused,
+            prune_margin=prune_margin,
+            rescore_factor=rescore_factor,
+            block_c=block_c,
+            block_q=block_q,
+            sketch_factor=sketch_factor,
+            resolve_health=_resolve_health,
+            note_health=_note_health,
+        )
 
     if not host_tier:
 
@@ -423,6 +474,275 @@ def _rescore_fetched(
         fetched, out_gids, queries, k=k, use_fused=use_fused, block_c=block_c
     )
     return TopK(ids=ids, scores=sc)
+
+
+def _make_grouped_search(
+    *,
+    mesh,
+    param_specs,
+    qspec,
+    host_tier,
+    caxes,
+    qaxes,
+    n_cluster_shards,
+    n_query_shards,
+    c_total,
+    k,
+    n_probe,
+    r0,
+    r0_centroid,
+    capacity_factor,
+    refine,
+    use_fused,
+    prune_margin,
+    rescore_factor,
+    block_c,
+    block_q,
+    sketch_factor,
+    resolve_health,
+    note_health,
+):
+    """Cluster-major spelling of the sharded search (``block_q`` set).
+
+    Same dataflow as the per-query bodies with one structural change: the
+    route + capacity dispatch moves OUT of the shard_map into a host
+    pre-pass, because the cluster-major schedule is data-dependent host
+    bookkeeping (exactly like the single-device staged search). Routing
+    runs once in a small top-level jit over the replicated centroids; the
+    per-shard capacity selection is replicated in NumPy with the identical
+    rule the device body uses (stable argsort, my-pairs-first, same cap
+    formula), so the dispatched pair list the schedules describe is
+    bit-identical to what the device would have selected. Every
+    (cluster shard, query shard) cell's schedule is padded to the common
+    worst case ``_pad_pow2(cap)`` so all shards run one kernel shape, and
+    the schedule arrays enter the single shard_map as sharded inputs —
+    the merge all-gather stays the only hot-path collective.
+    """
+    from ..kernels.ops import verify_topk_op
+    from ..kernels.schedule import _pad_pow2, build_cluster_schedule
+
+    c_local = c_total // n_cluster_shards
+
+    def _route(params, queries):
+        routed = search_core_model(
+            params.centroid_cm,
+            params.centroids,
+            queries,
+            k=n_probe,
+            r0=r0_centroid,
+            use_fused=use_fused,
+            block_c=block_c,
+        )
+        return prune_probes(routed.ids, routed.scores, prune_margin)
+
+    route_jit = jax.jit(_route)
+
+    _CELL_KEYS = (
+        "sel", "sel_valid", "sel_b", "sel_cid_local", "dropped",
+        "sched_cids", "sched_qids", "pair_step", "pair_slot",
+    )
+
+    def _host_cells(cids_np: np.ndarray) -> dict:
+        """Replicated dispatch + per-cell schedules for one routed batch."""
+        b, p = cids_np.shape
+        if b % n_query_shards:
+            raise ValueError(
+                f"batch {b} must divide query shards={n_query_shards}"
+            )
+        b_loc = b // n_query_shards
+        n_pairs = b_loc * p
+        cap = min(
+            n_pairs,
+            int(math.ceil(n_pairs / n_cluster_shards * capacity_factor)),
+        )
+        pad_steps = _pad_pow2(cap)  # n_steps <= cap pairs: always fits
+        cs_n, qs_n = n_cluster_shards, n_query_shards
+        out = {
+            "sel": np.zeros((cs_n, qs_n, cap), np.int32),
+            "sel_valid": np.zeros((cs_n, qs_n, cap), bool),
+            "sel_b": np.zeros((cs_n, qs_n, cap), np.int32),
+            "sel_cid_local": np.zeros((cs_n, qs_n, cap), np.int32),
+            "dropped": np.zeros((cs_n, qs_n), np.int32),
+            "sched_cids": np.zeros((cs_n, qs_n, pad_steps), np.int32),
+            "sched_qids": np.full(
+                (cs_n, qs_n, pad_steps, block_q), -1, np.int32
+            ),
+            "pair_step": np.full((cs_n, qs_n, cap, 1), -1, np.int32),
+            "pair_slot": np.full((cs_n, qs_n, cap, 1), -1, np.int32),
+        }
+        for qs in range(qs_n):
+            flat = cids_np[qs * b_loc:(qs + 1) * b_loc].reshape(-1)
+            valid = flat >= 0
+            owner = np.where(valid, flat // c_local, -1)
+            for cs in range(cs_n):
+                mine = owner == cs
+                # np stable argsort on ~mine == the device dispatch's
+                # jnp.argsort(~mine, stable=True): my pairs first, original
+                # (query asc, probe asc) order preserved — the replication
+                # that keeps schedule and dispatched pair list in lockstep.
+                order = np.argsort(~mine, kind="stable")
+                sel = order[:cap].astype(np.int32)
+                sv = mine[sel]
+                scl = np.where(sv, flat[sel] - cs * c_local, -1).astype(
+                    np.int32
+                )
+                out["sel"][cs, qs] = sel
+                out["sel_valid"][cs, qs] = sv
+                out["sel_b"][cs, qs] = (sel // p).astype(np.int32)
+                out["sel_cid_local"][cs, qs] = scl
+                out["dropped"][cs, qs] = int(mine.sum()) - int(sv.sum())
+                sched = build_cluster_schedule(
+                    scl[:, None], block_q=block_q, pad_to=pad_steps
+                )
+                out["sched_cids"][cs, qs] = sched.sched_cids
+                out["sched_qids"][cs, qs] = sched.sched_qids
+                out["pair_step"][cs, qs] = sched.pair_step
+                out["pair_slot"][cs, qs] = sched.pair_slot
+        return out
+
+    def gbody(local_params, q_loc, shard_health, *cells):
+        cell = {key: arr[0, 0] for key, arr in zip(_CELL_KEYS, cells)}
+        my = _flat_axis_index(caxes)
+        b_loc = q_loc.shape[0]
+        n_pairs = b_loc * n_probe
+        c_loc, lp = local_params.bank.gids.shape
+        q_pairs = q_loc[cell["sel_b"]]
+        prov = _cluster_major_first_pass(
+            local_params,
+            q_pairs,
+            cell["sel_cid_local"][:, None],
+            cell["sched_cids"],
+            cell["sched_qids"],
+            cell["pair_step"],
+            cell["pair_slot"],
+            k=k,
+            r0=r0,
+            refine=refine,
+            use_fused=use_fused,
+            rescore_factor=rescore_factor,
+            block_c=block_c,
+            block_q=block_q,
+            sketch_factor=sketch_factor,
+        )  # (cap, k') local flat rows + compressed scores
+        scatter_idx = jnp.where(cell["sel_valid"], cell["sel"], n_pairs)
+        alive = shard_health[my]
+
+        def _merge(l_ids, l_sc, kk):
+            g_ids = jax.lax.all_gather(l_ids, caxes)
+            g_sc = jax.lax.all_gather(l_sc, caxes)
+            return dedup_topk(
+                jnp.moveaxis(g_ids, 0, 1).reshape(b_loc, -1),
+                jnp.moveaxis(g_sc, 0, 1).reshape(b_loc, -1),
+                kk,
+            )
+
+        if host_tier:
+            # Stop at provisional global rows, exactly as body_provisional.
+            kp = prov.ids.shape[-1]
+            g_rows_pair = jnp.where(
+                prov.ids >= 0, prov.ids + my * c_loc * lp, -1
+            )
+            rows_buf = (
+                jnp.full((n_pairs + 1, kp), -1, dtype=jnp.int32)
+                .at[scatter_idx]
+                .set(g_rows_pair)
+            )
+            sc_buf = (
+                jnp.full((n_pairs + 1, kp), -jnp.inf, dtype=jnp.float32)
+                .at[scatter_idx]
+                .set(prov.scores)
+            )
+            l_rows, l_sc = dedup_topk(
+                rows_buf[:-1].reshape(b_loc, -1),
+                sc_buf[:-1].reshape(b_loc, -1),
+                kp,
+            )
+            l_rows = jnp.where(alive, l_rows, -1)
+            l_sc = jnp.where(alive, l_sc, -jnp.inf)
+            out_ids, out_sc = _merge(l_rows, l_sc, kp)
+        else:
+            # Device tier: exact rescore of each pair's provisional rows —
+            # the same stage-2 math as _verify_bank_rows — then the per-query
+            # scatter + merge of body.
+            rescore_table = local_params.bank.rescore_embs.reshape(
+                c_loc * lp, -1
+            )
+            rows, sc = verify_topk_op(
+                rescore_table,
+                jnp.maximum(prov.ids, 0),
+                q_pairs,
+                k=k,
+                out_ids=prov.ids,
+                block_c=block_c,
+                use_pallas=use_fused,
+            )
+            gid_tab = local_params.bank.gids.reshape(-1)
+            pair_ids = jnp.where(rows >= 0, gid_tab[jnp.maximum(rows, 0)], -1)
+            ids_buf = (
+                jnp.full((n_pairs + 1, k), -1, dtype=jnp.int32)
+                .at[scatter_idx]
+                .set(pair_ids)
+            )
+            sc_buf = (
+                jnp.full((n_pairs + 1, k), -jnp.inf, dtype=jnp.float32)
+                .at[scatter_idx]
+                .set(sc)
+            )
+            l_ids, l_sc = dedup_topk(
+                ids_buf[:-1].reshape(b_loc, -1),
+                sc_buf[:-1].reshape(b_loc, -1),
+                k,
+            )
+            l_ids = jnp.where(alive, l_ids, -1)
+            l_sc = jnp.where(alive, l_sc, -jnp.inf)
+            out_ids, out_sc = _merge(l_ids, l_sc, k)
+
+        dropped = jnp.where(alive, cell["dropped"], 0)
+        dropped = jax.lax.psum(dropped, caxes + qaxes if qaxes else caxes)
+        return out_ids, out_sc, dropped
+
+    cqs = qaxes if qaxes else None
+    spec2 = P(caxes, cqs)
+    spec3 = P(caxes, cqs, None)
+    spec4 = P(caxes, cqs, None, None)
+    cell_specs = (
+        spec3, spec3, spec3, spec3, spec2, spec3, spec4, spec4, spec4
+    )
+    run = jax.jit(
+        compat.shard_map(
+            gbody,
+            mesh=mesh,
+            in_specs=(param_specs, qspec, P(), *cell_specs),
+            out_specs=(qspec, qspec, P()),
+        )
+    )
+
+    def search(params: LiderParams, queries: jnp.ndarray, shard_health=None):
+        health = resolve_health(shard_health)
+        note_health(search, health)
+        cids_np = np.asarray(jax.device_get(route_jit(params, queries)))
+        cells = _host_cells(cids_np)
+        cell_args = tuple(jnp.asarray(cells[key]) for key in _CELL_KEYS)
+        rows_or_ids, sc, dropped = run(
+            params, queries, jnp.asarray(health), *cell_args
+        )
+        if not host_tier:
+            return TopK(ids=rows_or_ids, scores=sc), dropped
+        rows_np = np.asarray(rows_or_ids)
+        store = params.bank.store
+        fetched = store.fetch(rows_np)
+        out_gids = store.take_gids(rows_np)
+        out = _rescore_fetched(
+            jnp.asarray(fetched),
+            jnp.asarray(out_gids),
+            queries,
+            k=k,
+            use_fused=use_fused,
+            block_c=block_c,
+        )
+        return out, dropped
+
+    return search
 
 
 # ---------------------------------------------------------------------------

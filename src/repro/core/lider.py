@@ -28,7 +28,7 @@ import numpy as np
 
 from . import bank as bank_lib
 from . import clustering, lsh as lsh_lib, rescale as rescale_lib, rmi as rmi_lib
-from ..kernels.ops import verify_topk_grouped_op, verify_topk_op
+from ..kernels.ops import sketch_topk_op, verify_topk_grouped_op, verify_topk_op
 from .bank import ClusterBank
 from .core_model import CoreModelParams, TopK, build_core_model, search_core_model
 from .types import pytree_dataclass
@@ -82,6 +82,14 @@ class LiderConfig:
     # under Zipf-skewed traffic. None keeps the per-query schedule.
     # Bit-identical results either way; swept by the Pareto autotuner.
     block_q: int | None = None
+    # Binary-sketch pre-filter tier (DESIGN.md §Binary sketch tier;
+    # quantized banks only): a 1-bit Hamming first pass over the packed
+    # sign-sketch table (1/8 the int8 row bytes) keeps the top
+    # ``sketch_factor * k'`` survivor rows per query, so the int4/int8 code
+    # DMA + MXU pass touches only survivors. None disables the tier; a
+    # factor large enough to cover every candidate is bit-identical to the
+    # unfiltered pass (tests gate this). Swept by the Pareto autotuner.
+    sketch_factor: int | None = None
     # Adaptive probe pruning (DESIGN.md §Adaptive speed-quality control
     # plane): probes whose layer-1 centroid score falls more than this
     # margin below the per-query best are masked to -1 before layer 2.
@@ -342,6 +350,7 @@ def _verify_bank_rows(
     rescore_factor: int,
     block_c: int | None,
     use_pallas: bool | None,
+    sketch_factor: int | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Verify ``(Bq, C)`` flat bank rows -> gid-space top-k ids + scores
     (device-tier rescore table).
@@ -381,6 +390,27 @@ def _verify_bank_rows(
         )
     out_rows = jnp.where(out_gids >= 0, flat_rows, -1)
     kp = min(max(rescore_factor, 1) * k, out_rows.shape[-1])
+    if sketch_factor is not None and bank.sketches is not None:
+        # Binary-sketch pre-filter (DESIGN.md §Binary sketch tier): 1-bit
+        # Hamming pass over the packed sign sketches keeps the top
+        # ``sketch_factor * k'`` survivor rows (deduped by flat row, same
+        # tie-break as the int pass), so the code-table DMA below streams
+        # only survivors. A factor covering every distinct candidate is
+        # bit-identical to the unfiltered pass: survivors then hold all
+        # valid rows, per-row int scores are unchanged, and dedup collapses
+        # the duplicates the sketch pass already collapsed.
+        m = min(max(sketch_factor, 1) * kp, out_rows.shape[-1])
+        surv, _ = sketch_topk_op(
+            bank.sketches.reshape(c * lp, -1),
+            flat_rows,
+            queries,
+            k=m,
+            out_ids=out_rows,
+            block_c=block_c,
+            use_pallas=use_pallas,
+        )
+        flat_rows = jnp.maximum(surv, 0)
+        out_rows = surv
     prov_rows, _ = verify_topk_op(
         flat_table,
         flat_rows,
@@ -420,6 +450,7 @@ def incluster_search(
     prune_margin: float | None = None,
     rescore_factor: int = 4,
     block_c: int | None = None,
+    sketch_factor: int | None = None,
 ) -> TopK:
     """Layer-2: search the probed clusters for each query.
 
@@ -473,6 +504,7 @@ def incluster_search(
             rescore_factor=rescore_factor,
             block_c=block_c,
             use_pallas=use_fused,
+            sketch_factor=sketch_factor,
         )
         return TopK(ids=ids, scores=sc)
     # Per-pair top-k: flatten (query, probe) pairs into the batch axis so the
@@ -487,6 +519,7 @@ def incluster_search(
         rescore_factor=rescore_factor,
         block_c=block_c,
         use_pallas=use_fused,
+        sketch_factor=sketch_factor,
     )
     return TopK(ids=ids.reshape(b, p, k), scores=sc.reshape(b, p, k))
 
@@ -495,7 +528,7 @@ def incluster_search(
     jax.jit,
     static_argnames=(
         "k", "n_probe", "r0", "r0_centroid", "refine", "use_fused",
-        "with_stats", "rescore_factor", "block_c",
+        "with_stats", "rescore_factor", "block_c", "sketch_factor",
     ),
 )
 def _search_lider_device(
@@ -512,6 +545,7 @@ def _search_lider_device(
     with_stats: bool = False,
     rescore_factor: int = 4,
     block_c: int | None = None,
+    sketch_factor: int | None = None,
 ) -> TopK | tuple[TopK, jnp.ndarray]:
     """Single-jit search for device-tier banks (float, or int8 with the
     rescore table resident next to the codes)."""
@@ -523,6 +557,7 @@ def _search_lider_device(
     out = incluster_search(
         params, queries, cids, k=k, r0=r0, refine=refine,
         use_fused=use_fused, rescore_factor=rescore_factor, block_c=block_c,
+        sketch_factor=sketch_factor,
     )
     if with_stats:
         pruned = (routed.ids >= 0) & (cids < 0)
@@ -548,6 +583,7 @@ def provisional_rows(
     use_fused: bool | None = None,
     rescore_factor: int = 4,
     block_c: int | None = None,
+    sketch_factor: int | None = None,
 ) -> TopK:
     """Stage 1 of the tiered search: compressed-domain first pass only.
 
@@ -581,6 +617,17 @@ def provisional_rows(
         q = pair_q.reshape(b * p, -1)
     out_rows = jnp.where(og >= 0, fr, -1)
     kp = min(max(rescore_factor, 1) * k, fr.shape[-1])
+    if sketch_factor is not None and bank.sketches is not None:
+        # Sketch pre-filter, same contract as the device-tier funnel
+        # (_verify_bank_rows): survivors replace the candidate list so the
+        # code pass below streams sketch_factor*k' rows instead of all C.
+        m = min(max(sketch_factor, 1) * kp, fr.shape[-1])
+        surv, _ = sketch_topk_op(
+            bank.sketches.reshape(c * lp, -1), fr, q, k=m, out_ids=out_rows,
+            block_c=block_c, use_pallas=use_fused,
+        )
+        fr = jnp.maximum(surv, 0)
+        out_rows = surv
     rows, sc = verify_topk_op(
         flat_table, fr, q, k=kp, out_ids=out_rows, scales=scales,
         block_c=block_c, code_dtype=bank.code_dtype, use_pallas=use_fused,
@@ -621,7 +668,7 @@ def rescore_fetched_rows(
     jax.jit,
     static_argnames=(
         "k", "n_probe", "r0", "r0_centroid", "refine", "use_fused",
-        "rescore_factor", "block_c",
+        "rescore_factor", "block_c", "sketch_factor",
     ),
 )
 def host_first_pass(
@@ -637,6 +684,7 @@ def host_first_pass(
     prune_margin: float | None = None,
     rescore_factor: int = 4,
     block_c: int | None = None,
+    sketch_factor: int | None = None,
 ) -> tuple[TopK, jnp.ndarray]:
     """Jit'd stage 1+2a of the tiered search: route + prune + compressed
     first pass. Returns ``(prov, pruned_mask (B, n_probe))`` where ``prov``
@@ -654,6 +702,7 @@ def host_first_pass(
     prov = provisional_rows(
         params, queries, cids, k=k, r0=r0, refine=refine, use_fused=use_fused,
         rescore_factor=rescore_factor, block_c=block_c,
+        sketch_factor=sketch_factor,
     )
     pruned = (routed.ids >= 0) & (cids < 0)
     return prov, pruned
@@ -743,7 +792,7 @@ def _route_pruned(
     jax.jit,
     static_argnames=(
         "k", "r0", "refine", "use_fused", "rescore_factor", "block_c",
-        "block_q",
+        "block_q", "sketch_factor",
     ),
 )
 def _cluster_major_first_pass(
@@ -762,6 +811,7 @@ def _cluster_major_first_pass(
     rescore_factor: int = 4,
     block_c: int | None = None,
     block_q: int = 8,
+    sketch_factor: int | None = None,
 ) -> TopK:
     """Jit'd compressed first pass on the cluster-major schedule.
 
@@ -784,28 +834,64 @@ def _cluster_major_first_pass(
     )
     out_rows = jnp.where(gids >= 0, flat_emb, -1)  # (B, P, H, R)
     s_steps = sched_cids.shape[0]
+    n_cand = p * flat_emb.shape[2] * flat_emb.shape[3]
+    kp = min(max(rescore_factor, 1) * k, n_cand)
 
-    # Dense per-(step, slot) candidate mask over the step cluster's Lp rows:
-    # the union of each pair's H·R window candidates (duplicates collapse).
-    # Invalid candidates / unscheduled (pruned) pairs scatter out of range.
-    local = flat_emb % lp
-    st = pair_step[:, :, None, None]
-    sl = pair_slot[:, :, None, None]
-    valid = (out_rows >= 0) & (st >= 0)
-    tgt = jnp.where(
-        valid, (st * block_q + sl) * lp + local, s_steps * block_q * lp
-    )
+    if sketch_factor is not None and bank.sketches is not None:
+        # Sketch pre-filter on the cluster-major path: the per-query Hamming
+        # pass sees the SAME merged candidate list as the per-query funnel
+        # (_verify_bank_rows), so it selects the same survivors — then the
+        # per-(step, slot) candidate mask is rebuilt from survivors only.
+        # Each survivor maps back to its (query, probe) pair through its
+        # cluster id (flat row // Lp; probe lists hold distinct clusters),
+        # and from there to the pair's (step, slot) — so the grouped kernel
+        # streams the same survivor set the per-query filtered pass scores.
+        m = min(max(sketch_factor, 1) * kp, n_cand)
+        surv, _ = sketch_topk_op(
+            bank.sketches.reshape(c * lp, -1),
+            flat_emb.reshape(b, -1),
+            queries,
+            k=m,
+            out_ids=out_rows.reshape(b, -1),
+            block_c=block_c,
+            use_pallas=use_fused,
+        )
+        surv_cid = surv // lp  # (B, m); -1 survivors masked below
+        match = (cids[:, None, :] == surv_cid[:, :, None]) & (
+            surv[:, :, None] >= 0
+        )  # (B, m, P)
+        has = jnp.any(match, axis=-1)
+        pidx = jnp.argmax(match, axis=-1)  # (B, m)
+        brow = jnp.arange(b, dtype=jnp.int32)[:, None]
+        st_s = jnp.where(has, pair_step[brow, pidx], -1)
+        sl_s = jnp.maximum(pair_slot[brow, pidx], 0)
+        valid_s = has & (st_s >= 0)
+        tgt = jnp.where(
+            valid_s,
+            (st_s * block_q + sl_s) * lp + surv % lp,
+            s_steps * block_q * lp,
+        )
+        scat_src = surv
+    else:
+        # Dense per-(step, slot) candidate mask over the step cluster's Lp
+        # rows: the union of each pair's H·R window candidates (duplicates
+        # collapse). Invalid candidates / unscheduled (pruned) pairs scatter
+        # out of range.
+        local = flat_emb % lp
+        st = pair_step[:, :, None, None]
+        sl = pair_slot[:, :, None, None]
+        valid = (out_rows >= 0) & (st >= 0)
+        tgt = jnp.where(
+            valid, (st * block_q + sl) * lp + local, s_steps * block_q * lp
+        )
+        scat_src = out_rows
     step_slot_ids = (
         jnp.full((s_steps * block_q * lp,), -1, jnp.int32)
         .at[tgt.reshape(-1)]
-        .set(out_rows.reshape(-1), mode="drop")
+        .set(scat_src.reshape(-1), mode="drop")
         .reshape(s_steps, block_q, lp)
     )
 
-    kp = min(
-        max(rescore_factor, 1) * k,
-        p * flat_emb.shape[2] * flat_emb.shape[3],
-    )
     kp_pair = min(kp, lp)  # a pair has at most Lp distinct rows
     ids_g, sc_g = verify_topk_grouped_op(
         bank.embs,
@@ -880,6 +966,8 @@ def host_first_pass_cluster_major(
     rescore_factor: int = 4,
     block_c: int | None = None,
     block_q: int = 8,
+    sketch_factor: int | None = None,
+    stats_out: dict | None = None,
 ) -> tuple[TopK, jnp.ndarray]:
     """Cluster-major spelling of :func:`host_first_pass` — same
     ``(prov, pruned)`` contract, so the serving engine's double-buffered
@@ -888,16 +976,33 @@ def host_first_pass_cluster_major(
     Not one jit (the schedule pre-pass is host-side and data-dependent), but
     both device stages inside it are jits, so stage-1 dispatch still returns
     before the device finishes and the pipeline's overlap is preserved.
+
+    ``stats_out`` (the online block_q autotuner's hook) does two things:
+    the dict is filled with the drained schedule's measured sharing
+    (``n_pairs``/``n_steps``) plus the batch's per-cluster pair counts, AND
+    the schedule is padded to the fixed worst case ``_pad_pow2(B·n_probe)``
+    instead of the data-dependent power of two — so every batch of the same
+    (B, block_q) hits ONE compiled kernel shape and the autotuner can swap
+    ``block_q`` between drains with zero query-path retraces (padding steps
+    are dead; results unchanged).
     """
-    from ..kernels.schedule import build_cluster_schedule
+    from ..kernels.schedule import _pad_pow2, build_cluster_schedule
 
     cids, pruned = _route_pruned(
         params, queries, n_probe=n_probe, r0_centroid=r0_centroid,
         use_fused=use_fused, prune_margin=prune_margin, block_c=block_c,
     )
-    sched = build_cluster_schedule(
-        np.asarray(jax.device_get(cids)), block_q=block_q
-    )
+    pad_to = None
+    if stats_out is not None:
+        pad_to = _pad_pow2(queries.shape[0] * n_probe)
+    cids_np = np.asarray(jax.device_get(cids))
+    sched = build_cluster_schedule(cids_np, block_q=block_q, pad_to=pad_to)
+    if stats_out is not None:
+        stats_out["n_pairs"] = sched.n_pairs
+        stats_out["n_steps"] = sched.n_steps
+        stats_out["cluster_counts"] = np.unique(
+            cids_np[cids_np >= 0], return_counts=True
+        )[1]
     prov = _cluster_major_first_pass(
         params,
         queries,
@@ -913,6 +1018,7 @@ def host_first_pass_cluster_major(
         rescore_factor=rescore_factor,
         block_c=block_c,
         block_q=block_q,
+        sketch_factor=sketch_factor,
     )
     return prov, pruned
 
@@ -932,6 +1038,7 @@ def _search_lider_cluster_major(
     rescore_factor: int,
     block_c: int | None,
     block_q: int,
+    sketch_factor: int | None = None,
 ) -> TopK | tuple[TopK, jnp.ndarray]:
     """Staged cluster-major search: route (jit) -> host schedule pre-pass ->
     grouped first pass (jit) -> exact rescore (tier-appropriate).
@@ -952,7 +1059,7 @@ def _search_lider_cluster_major(
         params, queries, k=k, n_probe=n_probe, r0=r0,
         r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
         prune_margin=prune_margin, rescore_factor=rescore_factor,
-        block_c=block_c, block_q=block_q,
+        block_c=block_c, block_q=block_q, sketch_factor=sketch_factor,
     )
     if bank.rescore_tier == "host":
         fetched = host_fetch(params, prov.ids)
@@ -983,6 +1090,7 @@ def search_lider(
     rescore_factor: int = 4,
     block_c: int | None = None,
     block_q: int | None = None,
+    sketch_factor: int | None = None,
 ) -> TopK | tuple[TopK, jnp.ndarray]:
     """End-to-end LIDER ANN search (paper Sec. 3.3.2), single device.
 
@@ -1010,6 +1118,12 @@ def search_lider(
     probing the same cluster share one DMA of its rows. Results are
     bit-identical to the per-query schedule; only the loop order — and the
     HBM traffic under skewed probe distributions — changes.
+
+    ``sketch_factor`` (quantized banks only) turns on the binary-sketch
+    pre-filter (§Binary sketch tier): a 1-bit Hamming pass keeps the top
+    ``sketch_factor * k'`` rows, so the code pass streams only survivors. A
+    covering factor is bit-identical to the unfiltered search; small
+    factors trade recall for ~16x less first-pass traffic than int4.
     """
     if block_q is not None:
         return _search_lider_cluster_major(
@@ -1017,13 +1131,14 @@ def search_lider(
             r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
             prune_margin=prune_margin, with_stats=with_stats,
             rescore_factor=rescore_factor, block_c=block_c, block_q=block_q,
+            sketch_factor=sketch_factor,
         )
     if params.bank.rescore_tier == "host":
         prov, pruned = host_first_pass(
             params, queries, k=k, n_probe=n_probe, r0=r0,
             r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
             prune_margin=prune_margin, rescore_factor=rescore_factor,
-            block_c=block_c,
+            block_c=block_c, sketch_factor=sketch_factor,
         )
         fetched = host_fetch(params, prov.ids)
         out = host_rescore(
@@ -1036,6 +1151,7 @@ def search_lider(
         r0_centroid=r0_centroid, refine=refine, use_fused=use_fused,
         prune_margin=prune_margin, with_stats=with_stats,
         rescore_factor=rescore_factor, block_c=block_c,
+        sketch_factor=sketch_factor,
     )
 
 

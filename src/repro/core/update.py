@@ -151,7 +151,7 @@ def _append_rows(
     # (same call the offline pack makes), so an upserted slot is
     # bit-identical to the slot a full rebuild over the combined corpus
     # would produce.
-    stored, scl, res = bank_lib.store_rows(ordered, bank.storage_dtype)
+    stored, scl, res, sk = bank_lib.store_rows(ordered, bank.storage_dtype)
     extra = {}
     if bank.quantized:
         extra = dict(
@@ -165,6 +165,16 @@ def _append_rows(
                 bank.rescore_embs.reshape(c * lp, -1)
                 .at[flat_slot]
                 .set(res.astype(bank.rescore_embs.dtype), mode="drop")
+                .reshape(c, lp, -1)
+            )
+        if bank.sketches is not None:
+            # Sketches are row-local (sign of the raw row — same rows
+            # store_rows just packed), so the append scatter keeps them
+            # byte-identical to a layer-1-frozen rebuild's sketch table.
+            extra["sketches"] = (
+                bank.sketches.reshape(c * lp, -1)
+                .at[flat_slot]
+                .set(sk, mode="drop")
                 .reshape(c, lp, -1)
             )
     bank = dataclasses.replace(
@@ -319,9 +329,20 @@ def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
                 ),
                 0,
             ).astype(bank.rescore_embs.dtype)
+        # Sketches permute like the codes (row-local — moving a row never
+        # re-packs it); dead slots revert to zero words, the fresh-pack pad.
+        sk_p = None
+        if bank.sketches is not None:
+            sk_p = jnp.where(
+                live_p[..., None],
+                jnp.take_along_axis(
+                    bank.sketches[safe], order[..., None], axis=1
+                ),
+                jnp.uint32(0),
+            ).astype(bank.sketches.dtype)
         fit_rows = dequantize_codes(emb_p, scl_p, bank.code_dtype)
     else:
-        scl_p = res_p = None
+        scl_p = res_p = sk_p = None
         fit_rows = emb_p
     sk, sp, resc, rmi = jax.vmap(
         partial(bank_lib.refit_cluster, bank.lsh, n_leaves=bank.rmi.n_leaves)
@@ -333,6 +354,8 @@ def _compact_clusters(bank: ClusterBank, cids: jnp.ndarray) -> ClusterBank:
         extra = dict(emb_scales=put(bank.emb_scales, scl_p))
         if res_p is not None:
             extra["rescore_embs"] = put(bank.rescore_embs, res_p)
+        if sk_p is not None:
+            extra["sketches"] = put(bank.sketches, sk_p)
     return dataclasses.replace(
         bank,
         embs=put(bank.embs, emb_p),

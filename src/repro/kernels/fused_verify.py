@@ -339,6 +339,201 @@ def fused_verify(
 
 
 # ---------------------------------------------------------------------------
+# Binary-sketch pre-filter (DESIGN.md §Binary sketch tier)
+# ---------------------------------------------------------------------------
+
+
+def _sketch_filter_kernel(
+    # scalar prefetch
+    row_ids_s,
+    blk_live_s,
+    # inputs
+    q_ref,  # (1, w) uint32 — the query's packed sign sketch
+    oid_ref,  # (1, block_c) candidate ids (-1 = padding/pruned)
+    sk_hbm,  # (N, w) uint32 sketch table, stays in HBM
+    # outputs
+    ids_out,
+    sc_out,
+    # scratch
+    cand,
+    acc_ids,
+    acc_sc,
+    sem,
+    *,
+    block_c: int,
+    k: int,
+    n_blocks: int,
+):
+    """1-bit Hamming first pass: same grid, DMA steering, block-skip, and
+    streaming top-k merge as ``_fused_verify_kernel``, but the score is the
+    negated XOR+popcount Hamming distance against the query sketch — 1/8 of
+    the int8 row bytes per candidate, no MXU pass at all (the VPU popcount
+    replaces the dot product)."""
+    bi = pl.program_id(0)
+    cj = pl.program_id(1)
+    slot = jax.lax.rem(cj, 2)
+    nslot = jax.lax.rem(cj + 1, 2)
+    live = blk_live_s[bi, cj] > 0
+
+    def row_dma(blk, s, i):
+        row = row_ids_s[bi, blk * block_c + i]
+        return pltpu.make_async_copy(sk_hbm.at[row], cand.at[s, i], sem.at[s])
+
+    def start_block(blk, s):
+        def body(i, _):
+            row_dma(blk, s, i).start()
+            return 0
+
+        jax.lax.fori_loop(0, block_c, body, 0)
+
+    @pl.when(cj == 0)
+    def _():
+        acc_sc[...] = jnp.full_like(acc_sc, NEG_INF)
+        acc_ids[...] = jnp.full_like(acc_ids, -1)
+
+    @pl.when((cj == 0) & live)
+    def _():
+        start_block(0, slot)
+
+    nxt = jnp.minimum(cj + 1, n_blocks - 1)
+    @pl.when((cj + 1 < n_blocks) & (blk_live_s[bi, nxt] > 0))
+    def _():
+        start_block(cj + 1, nslot)
+
+    @pl.when(live)
+    def _():
+        def wait_body(i, _):
+            row_dma(cj, slot, i).wait()
+            return 0
+
+        jax.lax.fori_loop(0, block_c, wait_body, 0)
+
+        rows = cand[slot]  # (block_c, w) uint32
+        x = jnp.bitwise_xor(rows, q_ref[...])  # broadcast (block_c, w)
+        ham = jnp.sum(
+            jax.lax.population_count(x).astype(jnp.int32),
+            axis=-1,
+            keepdims=True,
+        )  # (block_c, 1)
+        # Negated Hamming as f32 is exact (<= d < 2^24), so the identical
+        # sel_body merge — and its smallest-id tie-break — applies unchanged.
+        scores = -ham.astype(jnp.float32).T  # (1, block_c)
+        oid = oid_ref[...]
+        scores = jnp.where(oid >= 0, scores, NEG_INF)
+
+        csc0 = jnp.concatenate([acc_sc[...], scores], axis=1)
+        cid = jnp.concatenate([acc_ids[...], oid], axis=1)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+        def sel_body(i, carry):
+            csc, asc, aid = carry
+            m = jnp.max(csc)
+            tie = csc == m
+            sid = jnp.min(jnp.where(tie, cid, jnp.int32(2**31 - 1)))
+            sid = jnp.where(
+                jnp.isneginf(m), jnp.int32(-1), sid
+            ).astype(jnp.int32)
+            kill = (cid == sid) & (sid >= 0)
+            csc = jnp.where(kill, NEG_INF, csc)
+            asc = jnp.where(iota_k == i, m, asc)
+            aid = jnp.where(iota_k == i, sid, aid)
+            return csc, asc, aid
+
+        init = (
+            csc0,
+            jnp.full((1, k), NEG_INF, jnp.float32),
+            jnp.full((1, k), -1, jnp.int32),
+        )
+        _, asc, aid = jax.lax.fori_loop(0, k, sel_body, init)
+        acc_sc[...] = asc
+        acc_ids[...] = aid
+
+    @pl.when(cj == n_blocks - 1)
+    def _():
+        ids_out[...] = acc_ids[...]
+        sc_out[...] = acc_sc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_c", "interpret"))
+def sketch_prefilter(
+    sketches: jnp.ndarray,
+    row_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    out_ids: jnp.ndarray | None = None,
+    block_c: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(N, w) packed sketch table, (B, C) rows, (B, d) queries ->
+    ((B, k) ids, (B, k) negated-Hamming f32 scores).
+
+    The 1-bit first pass of the sketch→code→rescore ladder (DESIGN.md
+    §Binary sketch tier): queries are sign-sketched outside the kernel
+    (``quant.sketch_rows`` — the same packer that built the table), candidate
+    sketch rows stream HBM->VMEM at 1/8 the int8 code bytes, and scoring is
+    XOR + popcount on the VPU. Dedup/top-k semantics — including padding
+    (``out_ids < 0`` -> (-1, -inf)), dead-block skipping, and the
+    smallest-id tie-break — are identical to ``fused_verify``, so the
+    surviving top-``k`` rows feed the int4/int8 pass as an ordinary
+    ``row_ids``/``out_ids`` pair.
+    """
+    from .quant import sketch_rows
+
+    interpret = resolve_interpret(interpret)
+    if out_ids is None:
+        out_ids = row_ids
+    b, c = row_ids.shape
+    n, w = sketches.shape
+    q_sk = sketch_rows(queries)  # (B, w) uint32
+    bc = _clamp_block_c(block_c, c)
+    pad = (-c) % bc
+    if pad:
+        row_ids = jnp.pad(row_ids, ((0, 0), (0, pad)))
+        out_ids = jnp.pad(out_ids, ((0, 0), (0, pad)), constant_values=-1)
+    n_blocks = (c + pad) // bc
+    safe_rows = jnp.clip(row_ids, 0, n - 1).astype(jnp.int32)
+    out_ids = out_ids.astype(jnp.int32)
+    blk_live = jnp.sum(
+        (out_ids >= 0).reshape(b, n_blocks, bc), axis=-1, dtype=jnp.int32
+    )
+
+    idx_q = lambda bi, cj, ids, live: (bi, 0)
+    idx_blk = lambda bi, cj, ids, live: (bi, cj)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, w), idx_q),
+            pl.BlockSpec((1, bc), idx_blk),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # sketches stay in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), idx_q),
+            pl.BlockSpec((1, k), idx_q),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bc, w), jnp.uint32),  # double-buffered sketches
+            pltpu.VMEM((1, k), jnp.int32),
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    ids, scores = pl.pallas_call(
+        functools.partial(
+            _sketch_filter_kernel, block_c=bc, k=k, n_blocks=n_blocks
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(safe_rows, blk_live, q_sk, out_ids, sketches)
+    return ids, scores
+
+
+# ---------------------------------------------------------------------------
 # Cluster-major multi-query schedule (DESIGN.md §Cluster-major schedule)
 # ---------------------------------------------------------------------------
 

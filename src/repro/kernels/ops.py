@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .common import on_tpu as _on_tpu
-from .fused_verify import fused_verify, fused_verify_grouped
+from .fused_verify import fused_verify, fused_verify_grouped, sketch_prefilter
 from .kmeans_assign import kmeans_assign
 from .lsh_hash import lsh_hash
 
@@ -93,6 +93,43 @@ def verify_topk_op(
         out_ids=out_ids,
         scales=scales,
         code_dtype=code_dtype,
+    )
+
+
+def sketch_topk_op(
+    sketches: jnp.ndarray,
+    row_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    out_ids: jnp.ndarray | None = None,
+    block_c: int | None = None,
+    use_pallas: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Binary-sketch pre-filter -> deduplicated top-k survivor rows.
+
+    Pallas: ``sketch_prefilter`` — the 1-bit Hamming pass (XOR + popcount in
+    VMEM, 1/8 the int8 row bytes, dead blocks skipped). Reference:
+    ``ref.sketch_topk_ref`` (natural-order Hamming). Scores are the negated
+    Hamming distance as f32 (exact — Hamming <= d < 2^24), so dedup/top-k
+    semantics, padding, and the smallest-id tie-break match ``verify_topk_op``
+    and the survivors slot straight into the int4/int8 pass as its
+    ``row_ids``/``out_ids`` (DESIGN.md §Binary sketch tier).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return sketch_prefilter(
+            sketches,
+            row_ids,
+            queries,
+            k=k,
+            out_ids=out_ids,
+            block_c=block_c if block_c is not None else 256,
+            interpret=not _on_tpu(),
+        )
+    return ref.sketch_topk_ref(
+        sketches, row_ids, queries, k=k, out_ids=out_ids
     )
 
 

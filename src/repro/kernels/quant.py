@@ -135,6 +135,56 @@ def dequantize_codes(
     return dequantize_rows(codes, scales)
 
 
+# ---------------------------------------------------------------------------
+# 1-bit binary sketches: the pre-filter tier below int4
+# (DESIGN.md §Binary sketch tier)
+# ---------------------------------------------------------------------------
+
+SKETCH_WORD_BITS = 32
+
+
+def sketch_width(d: int) -> int:
+    """Packed words per row: ``ceil(d / 32)``."""
+    return -(-d // SKETCH_WORD_BITS)
+
+
+def sketch_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """``(..., d)`` float -> ``(..., ceil(d/32))`` uint32 sign sketches.
+
+    Bit ``j`` of word ``w`` is ``x[..., w*32 + j] > 0`` (little-endian within
+    the word). The strict ``> 0`` predicate makes all-zero rows — padded bank
+    slots, tombstone-cleared rows, grow_bank zero-fill — pack to exact zero
+    words, and rows past ``d`` (when ``d`` is not a multiple of 32) carry
+    zero bits on both the table and the query side, so they contribute
+    nothing to any XOR. Like the quantizers above, the sketch is *stateless
+    per row*, which keeps incremental upsert byte-identical to a rebuild.
+    """
+    x = jnp.asarray(x)
+    d = x.shape[-1]
+    w = sketch_width(d)
+    bits = (x > 0).astype(jnp.uint32)
+    pad = w * SKETCH_WORD_BITS - d
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    bits = bits.reshape(*x.shape[:-1], w, SKETCH_WORD_BITS)
+    weights = jnp.left_shift(
+        jnp.uint32(1), jnp.arange(SKETCH_WORD_BITS, dtype=jnp.uint32)
+    )
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_sketch(words: jnp.ndarray, d: int) -> jnp.ndarray:
+    """``(..., ceil(d/32))`` uint32 -> ``(..., d)`` bool. Exact inverse of
+    the bit extraction in :func:`sketch_rows` (round-trip tested over all
+    bit patterns in tests/test_sketch.py)."""
+    words = jnp.asarray(words, jnp.uint32)
+    shifts = jnp.arange(SKETCH_WORD_BITS, dtype=jnp.uint32)
+    bits = jnp.bitwise_and(
+        jnp.right_shift(words[..., None], shifts), jnp.uint32(1)
+    )
+    return bits.reshape(*words.shape[:-1], -1)[..., :d].astype(bool)
+
+
 def deinterleave_query_codes(q_codes: jnp.ndarray) -> jnp.ndarray:
     """Reorder query codes to match in-VMEM int4 unpacking.
 

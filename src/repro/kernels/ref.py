@@ -98,6 +98,42 @@ def verify_topk_ref(
     return dedup_topk(out_ids, scores, k)
 
 
+def sketch_topk_ref(
+    sketches: jnp.ndarray,
+    row_ids: jnp.ndarray,
+    queries: jnp.ndarray,
+    *,
+    k: int,
+    out_ids: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Natural-order Hamming oracle for the binary-sketch pre-filter
+    (``sketch_prefilter``; DESIGN.md §Binary sketch tier).
+
+    ``sketches`` is the packed ``(N, ceil(d/32))`` uint32 sign-sketch table;
+    queries are sketched here with the same ``quant.sketch_rows`` packer the
+    kernel wrapper uses. The score is the *negated* Hamming distance between
+    the row and query sketches — XOR + popcount summed over the words, cast
+    to f32 (exact: Hamming <= d < 2^24) so the shared dedup/top-k merge and
+    its smallest-id tie-break apply unchanged. Popcount over uint32 words is
+    order-independent, so this natural-order sum matches the kernel's
+    in-VMEM reduction bit-for-bit.
+    """
+    from ..core.utils import NEG_INF, dedup_topk
+    from .quant import sketch_rows
+
+    if out_ids is None:
+        out_ids = row_ids
+    safe = jnp.maximum(row_ids, 0)
+    cand = sketches[safe]  # (B, C, w)
+    q_sk = sketch_rows(queries)  # (B, w)
+    x = jnp.bitwise_xor(cand, q_sk[:, None, :])
+    ham = jnp.sum(
+        jax.lax.population_count(x).astype(jnp.int32), axis=-1
+    )  # (B, C)
+    scores = jnp.where(out_ids < 0, NEG_INF, -ham.astype(jnp.float32))
+    return dedup_topk(out_ids, scores, k)
+
+
 def verify_topk_grouped_ref(
     embs: jnp.ndarray,
     row_scales: jnp.ndarray,

@@ -79,6 +79,7 @@ def build_cluster_schedule(
     *,
     block_q: int,
     pruned: np.ndarray | None = None,
+    pad_to: int | None = None,
 ) -> ClusterSchedule:
     """Group a batch's routed (query, probe) pairs by cluster into steps.
 
@@ -91,6 +92,15 @@ def build_cluster_schedule(
     Pairs probing the same cluster fill a step's ``block_q`` query slots in
     (query asc, probe asc) order; a cluster with more pairs than ``block_q``
     spans consecutive steps. Steps are ordered by cluster id ascending.
+
+    ``pad_to`` overrides the power-of-two step padding with a FIXED padded
+    step count — the online block_q autotuner passes the worst case
+    ``_pad_pow2(B * P)`` (n_steps <= n_pairs <= B·P always) so every batch
+    of the same (B, block_q) compiles exactly one downstream kernel shape
+    regardless of the observed probe distribution (zero query-path
+    retraces). Padding steps are dead (empty tiles, ``blk_live = 0``), so
+    results are unchanged. Values below the real step count fall back to
+    the power-of-two policy.
     """
     cids = np.asarray(cids, np.int32)
     b, p = cids.shape
@@ -123,6 +133,8 @@ def build_cluster_schedule(
         n_steps = 0
 
     s_padded = _pad_pow2(n_steps)
+    if pad_to is not None and pad_to >= n_steps:
+        s_padded = max(int(pad_to), 1)
     sched_cids = np.zeros((s_padded,), np.int32)
     sched_qids = np.full((s_padded, block_q), -1, np.int32)
     if n_pairs:

@@ -106,6 +106,12 @@ def main() -> None:
         "DESIGN.md §Cluster-major schedule). Default: per-query schedule",
     )
     ap.add_argument(
+        "--sketch-factor", type=int, default=None,
+        help="1-bit Hamming pre-filter ahead of the quantized first pass, "
+        "keeping sketch_factor * k' survivor rows per query (quantized "
+        "banks only; DESIGN.md §Binary sketch tier). Default: no pre-filter",
+    )
+    ap.add_argument(
         "--use-fused",
         choices=["auto", "on", "off"],
         default="auto",
@@ -223,6 +229,14 @@ def main() -> None:
         and not args.load_index
     ):
         raise SystemExit("--block-q needs --storage-dtype int8/int4")
+    if args.sketch_factor is not None and args.backend != "lider":
+        raise SystemExit("--sketch-factor needs --backend lider")
+    if (
+        args.sketch_factor is not None
+        and args.storage_dtype not in ("int8", "int4")
+        and not args.load_index
+    ):
+        raise SystemExit("--sketch-factor needs --storage-dtype int8/int4")
     if not 0.0 <= args.update_fraction < 1.0:
         raise SystemExit("--update-fraction must be in [0, 1)")
     if args.tenants < 1:
@@ -309,6 +323,7 @@ def main() -> None:
             rescore_factors=(args.rescore_factor,),
             block_cs=(args.block_c,),
             block_qs=(args.block_q,),
+            sketch_factors=(args.sketch_factor,),
         )
         t0 = time.time()
         results = pareto_lib.sweep(
@@ -329,6 +344,7 @@ def main() -> None:
             n_probe=n_probe, refine=args.refine, use_fused=use_fused,
             prune_margin=prune_margin, rescore_factor=args.rescore_factor,
             block_c=args.block_c, block_q=args.block_q,
+            sketch_factor=args.sketch_factor,
         ),
         "ivfpq": dict(n_probe=args.n_probe),
         "mplsh": dict(n_probe=args.n_probe),
@@ -586,6 +602,7 @@ def main() -> None:
             "recall_at_k": float(rec),
             "k": args.k,
             "block_q": args.block_q,
+            "sketch_factor": args.sketch_factor,
             "tier_bytes": tier_bytes,
             # Fault-tolerance accounting (DESIGN.md §Failure model).
             "n_update_rollbacks": s.n_update_rollbacks,

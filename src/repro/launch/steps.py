@@ -23,6 +23,7 @@ from ..core import bank as bank_lib
 from ..core import distributed as dist
 from ..core import lider as lider_lib
 from ..core import lsh as lsh_lib
+from ..kernels import quant as quant_lib
 from ..core import rescale as rescale_lib
 from ..core import rmi as rmi_lib
 from ..core.core_model import CoreModelParams
@@ -530,7 +531,10 @@ def lider_param_structs(
     abstract ``emb_scales``/``rescore_embs`` leaves so the quantized sharded
     search lowers and compiles in the dry-run (DESIGN.md §Quantized bank) —
     int4 codes are packed two per byte, so the abstract ``embs`` leaf is
-    (c, Lp, d//2) int8.
+    (c, Lp, d//2) int8. Quantized banks also carry the abstract packed
+    1-bit ``sketches`` leaf — (c, Lp, ceil(d/32)) uint32 — so searches with
+    ``sketch_factor`` set lower in the dry-run and the memory model counts
+    the sketch table (DESIGN.md §Binary sketch tier).
 
     ``rescore_tier="host"`` (quantized only) attaches an *abstract*
     host-tier ``EmbStore`` instead of the ``rescore_embs`` leaf — the pytree
@@ -610,6 +614,11 @@ def lider_param_structs(
                 if quantized and rescore_tier == "host"
                 else None
             ),
+            sketches=(
+                SDS((c, lp, quant_lib.sketch_width(d)), jnp.uint32)
+                if quantized
+                else None
+            ),
             code_dtype=storage_dtype if quantized else "int8",
         ),
     )
@@ -653,6 +662,18 @@ def lider_tier_memory(rcfg) -> dict:
         ),
     }
     out = {name: p.bank.nbytes_by_tier() for name, p in variants.items()}
+    # The 1-bit sketch table rides along on every quantized variant; record
+    # its bytes explicitly so the memory story can show what the pre-filter
+    # tier costs (1/8 of the int8 code table — §Binary sketch tier).
+    c, lp = rcfg.lider.n_clusters, rcfg.capacity
+    sketch_bytes = c * lp * quant_lib.sketch_width(rcfg.dim) * 4
+    out["sketch_table"] = {"device": int(sketch_bytes), "host": 0}
+    assert (
+        out["int8_host"]["device"]
+        - variants["int8_host"].bank.embs.size  # codes
+        - variants["int8_host"].bank.emb_scales.size * 4  # scales
+        >= sketch_bytes
+    ), "quantized device bytes must include the sketch table"
     assert out["int8_host"]["device"] < out["int8_device"]["device"], (
         "host tier must shrink the device-resident index"
     )

@@ -352,7 +352,7 @@ def _load_index_dir(d: str, *, rescore_tier: str | None = None) -> Any:
             "rescore_tier='host' requires a quantized (int8/int4) index "
             "(float banks have no rescore table)"
         )
-    rescore = store = None
+    rescore = store = sketches = None
     if quantized:
         gids_arr = _checked_load(d, "bank__gids", crcs.get("bank__gids"))
         rescore_arr = _checked_load(
@@ -362,6 +362,16 @@ def _load_index_dir(d: str, *, rescore_tier: str | None = None) -> Any:
             store = EmbStore("host", rescore=rescore_arr, gids=gids_arr)
         else:
             rescore = jnp.asarray(rescore_arr)
+        if os.path.exists(os.path.join(d, "bank__sketches.npy")):
+            sketches = leaf("bank", "sketches")
+        else:
+            # Pre-sketch checkpoint: the sign sketches are a pure function
+            # of the raw rows, and the rescore table *is* the raw rows — so
+            # recomputing here is byte-exact with what save-time packing
+            # would have produced (DESIGN.md §Binary sketch tier).
+            from ..kernels.quant import sketch_rows
+
+            sketches = sketch_rows(jnp.asarray(rescore_arr))
     bank = ClusterBank(
         lsh=lsh_of(("bank", "lsh"), meta["in_lsh"]),
         rescale=rescale_of(("bank", "rescale")),
@@ -375,6 +385,7 @@ def _load_index_dir(d: str, *, rescore_tier: str | None = None) -> Any:
         next_gid=leaf("bank", "next_gid"),
         emb_scales=leaf("bank", "emb_scales") if quantized else None,
         rescore_embs=rescore,
+        sketches=sketches,
         store=store,
         code_dtype=storage_dtype if quantized else "int8",
     )

@@ -7,7 +7,8 @@ control plane (DESIGN.md §Adaptive speed-quality control plane) adds a
 routing confidence into wall-clock savings. This module closes the loop:
 
 1. **sweep** ``(n_probe, r0, prune_margin, refine, rescore_factor,
-   block_c)`` on held-out queries over a built index, measuring AQT,
+   block_c, block_q, sketch_factor)`` on held-out queries over a built
+   index, measuring AQT,
    recall@k, MRR@10, and the pruned-probe fraction per operating point; the
    CLI additionally sweeps ``--storage-dtypes`` (one built index per dtype,
    DESIGN.md §Quantized bank) and tags every point with the bank storage it
@@ -60,8 +61,11 @@ class OperatingPoint:
     is the verification kernel's candidate block size (None -> kernel
     default); ``block_q`` switches the first pass to the cluster-major
     multi-query schedule with that many query slots per cluster tile
-    (None -> per-query schedule; quantized banks only). All are static
-    search knobs, so each distinct combo is one compile.
+    (None -> per-query schedule; quantized banks only); ``sketch_factor``
+    turns on the 1-bit Hamming pre-filter keeping ``sketch_factor * k'``
+    survivors ahead of the code pass (None -> no pre-filter; quantized
+    banks only — DESIGN.md §Binary sketch tier). All are static search
+    knobs, so each distinct combo is one compile.
     """
 
     n_probe: int
@@ -71,6 +75,7 @@ class OperatingPoint:
     rescore_factor: int = 4
     block_c: int | None = None
     block_q: int | None = None
+    sketch_factor: int | None = None
 
     @property
     def adaptive(self) -> bool:
@@ -85,6 +90,7 @@ class OperatingPoint:
             rescore_factor=self.rescore_factor,
             block_c=self.block_c,
             block_q=self.block_q,
+            sketch_factor=self.sketch_factor,
         )
 
     def label(self) -> str:
@@ -99,6 +105,8 @@ class OperatingPoint:
             tag += f"/blk{self.block_c}"
         if self.block_q is not None:
             tag += f"/bq{self.block_q}"
+        if self.sketch_factor is not None:
+            tag += f"/sk{self.sketch_factor}"
         return tag
 
 
@@ -134,29 +142,33 @@ def default_grid(
     rescore_factors: Sequence[int] = (4,),
     block_cs: Sequence[int | None] = (None,),
     block_qs: Sequence[int | None] = (None,),
+    sketch_factors: Sequence[int | None] = (None,),
 ) -> list[OperatingPoint]:
     """Fixed baselines (margin=None) plus adaptive variants per n_probe.
 
-    ``rescore_factors``/``block_cs``/``block_qs`` extend the sweep over the
-    quantized bank's rescore depth, the kernel block size, and the
-    cluster-major query-tile width (defaults keep the grid size unchanged);
-    every (n_probe, margin) combo is crossed with them.
+    ``rescore_factors``/``block_cs``/``block_qs``/``sketch_factors`` extend
+    the sweep over the quantized bank's rescore depth, the kernel block
+    size, the cluster-major query-tile width, and the 1-bit pre-filter's
+    survivor multiple (defaults keep the grid size unchanged); every
+    (n_probe, margin) combo is crossed with them.
     """
     fixed = [
-        OperatingPoint(p, r0, None, refine, rf, bc, bq)
+        OperatingPoint(p, r0, None, refine, rf, bc, bq, sf)
         for p in n_probes
         for rf in rescore_factors
         for bc in block_cs
         for bq in block_qs
+        for sf in sketch_factors
     ]
     adaptive = [
-        OperatingPoint(p, r0, m, refine, rf, bc, bq)
+        OperatingPoint(p, r0, m, refine, rf, bc, bq, sf)
         for p in n_probes
         if p > 1  # pruning a single probe can only be a no-op
         for m in margins
         for rf in rescore_factors
         for bc in block_cs
         for bq in block_qs
+        for sf in sketch_factors
     ]
     return fixed + adaptive
 
@@ -206,6 +218,7 @@ def sweep(
         base_key = (
             point.n_probe, point.r0, point.refine,
             point.rescore_factor, point.block_c, point.block_q,
+            point.sketch_factor,
         )
         if base_key not in base_walls:
             route = jax.jit(
@@ -218,6 +231,7 @@ def sweep(
                 params, q, k=k, n_probe=p.n_probe, r0=p.r0, refine=p.refine,
                 use_fused=use_fused, rescore_factor=p.rescore_factor,
                 block_c=p.block_c, block_q=p.block_q,
+                sketch_factor=p.sketch_factor,
             )
             base_walls[base_key] = (
                 _time_fn(route, queries, repeats),
@@ -251,7 +265,7 @@ def sweep(
             # across margin variants — pruning doesn't change k').
             fetch_key = (
                 point.n_probe, point.rescore_factor, point.block_c,
-                point.block_q,
+                point.block_q, point.sketch_factor,
             )
             if fetch_key not in host_fetch_walls:
                 stage1_kwargs = dict(
@@ -259,6 +273,7 @@ def sweep(
                     refine=point.refine, use_fused=use_fused,
                     rescore_factor=point.rescore_factor,
                     block_c=point.block_c,
+                    sketch_factor=point.sketch_factor,
                 )
                 if point.block_q is None:
                     prov, _ = lider_lib.host_first_pass(
@@ -541,6 +556,13 @@ def main() -> None:
         "per-query — DESIGN.md §Cluster-major schedule), so a cluster-major "
         "point must beat its per-query twin to reach the frontier",
     )
+    ap.add_argument(
+        "--sketch-factors", type=int, nargs="+", default=None,
+        help="1-bit pre-filter survivor multiples (m = factor*k') to sweep "
+        "IN ADDITION to the unfiltered pass (quantized banks only; float "
+        "banks carry no sketches — DESIGN.md §Binary sketch tier), so a "
+        "sketch point must beat its unfiltered twin to reach the frontier",
+    )
     ap.add_argument("--no-check", action="store_true",
                     help="report only; do not exit non-zero when a check "
                     "fails (dominated frontier, or no adaptive point beating "
@@ -569,6 +591,9 @@ def main() -> None:
     )
     block_cs = tuple(args.block_cs) if args.block_cs else (None,)
     block_qs = (None, *args.block_qs) if args.block_qs else (None,)
+    sketch_factors = (
+        (None, *args.sketch_factors) if args.sketch_factors else (None,)
+    )
 
     # One built index per storage dtype; the frontier spans all of them
     # (and, for int8, every requested rescore tier — the tier move is a
@@ -597,6 +622,7 @@ def main() -> None:
             n_probes=n_probes, margins=margins,
             rescore_factors=rescore_factors, block_cs=block_cs,
             block_qs=block_qs if quantized else (None,),
+            sketch_factors=sketch_factors if quantized else (None,),
         )
         for tier in args.rescore_tiers:
             if tier == "host" and not quantized:
@@ -635,6 +661,7 @@ def main() -> None:
             f"probe={p['n_probe']:3d} "
             f"margin={p['prune_margin'] if p['prune_margin'] is not None else '-':>5} "
             f"rescore={p['rescore_factor']} "
+            f"sketch={p['sketch_factor'] if p.get('sketch_factor') is not None else '-':>2} "
             f"aqt={p['aqt_s'] * 1e6:9.1f}us recall@{args.k}={p['recall']:.4f} "
             f"mrr10={p['mrr10']:.4f} pruned={p['pruned_fraction']:.2%}{fetch}"
         )
@@ -643,6 +670,7 @@ def main() -> None:
         sel_point = OperatingPoint(
             sel["n_probe"], sel["r0"], sel["prune_margin"], sel["refine"],
             sel["rescore_factor"], sel["block_c"], sel.get("block_q"),
+            sel.get("sketch_factor"),
         )
         print(
             f"[pareto] operating point for recall>={args.recall_target}: "

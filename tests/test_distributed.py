@@ -139,6 +139,75 @@ def test_sharded_search_host_tier_matches_single_device():
     assert "HOST_TIER_EQUIV_OK" in out
 
 
+def test_sharded_search_grouped_matches_per_query_sharded():
+    """Cluster-major grouped spelling on the distributed path (``block_q``):
+    the host-replicated dispatch + per-cell schedules feed the grouped
+    kernel inside the same shard_map, and results — ids AND scores — are
+    bit-identical to the per-query sharded path on both tiers, with and
+    without the binary-sketch pre-filter (covering factor)."""
+    out = _run(
+        """
+        from repro.core import lider, distributed
+        from repro.core.utils import l2_normalize
+        rng = jax.random.PRNGKey(0)
+        kc, kx, kq, kb = jax.random.split(rng, 4)
+        centers = jax.random.normal(kc, (32, 64))
+        assign = jax.random.randint(kx, (4000,), 0, 32)
+        x = l2_normalize(centers[assign] + 0.3*jax.random.normal(kq, (4000, 64)))
+        q = l2_normalize(x[:64] + 0.05*jax.random.normal(kb, (64, 64)))
+        cfg = lider.LiderConfig(n_clusters=64, n_probe=8, n_arrays=4,
+                                n_leaves=4, kmeans_iters=10,
+                                storage_dtype="int8")
+        params = lider.build_lider(jax.random.PRNGKey(2), x, cfg)
+        sp = distributed.shard_lider_params(mesh, params, ("data",))
+        base = distributed.make_sharded_search(
+            mesh, params, k=10, n_probe=8, r0=8, capacity_factor=3.0)
+        ref, d0 = base(sp, q)
+        grouped = distributed.make_sharded_search(
+            mesh, params, k=10, n_probe=8, r0=8, capacity_factor=3.0,
+            block_q=8)
+        out, d1 = grouped(sp, q)
+        assert int(d0) == int(d1) == 0, (int(d0), int(d1))
+        assert np.array_equal(np.asarray(ref.ids), np.asarray(out.ids))
+        assert np.array_equal(np.asarray(ref.scores), np.asarray(out.scores))
+        sk = distributed.make_sharded_search(
+            mesh, params, k=10, n_probe=8, r0=8, capacity_factor=3.0,
+            block_q=8, sketch_factor=64)
+        outs, _ = sk(sp, q)
+        assert np.array_equal(np.asarray(ref.ids), np.asarray(outs.ids))
+
+        # Host tier: grouped first pass + the same fetch->rescore pipeline.
+        cfg_h = lider.LiderConfig(n_clusters=64, n_probe=8, n_arrays=4,
+                                  n_leaves=4, kmeans_iters=10,
+                                  storage_dtype="int8", rescore_tier="host")
+        ph = lider.build_lider(jax.random.PRNGKey(2), x, cfg_h)
+        sph = distributed.shard_lider_params(mesh, ph, ("data",))
+        base_h = distributed.make_sharded_search(
+            mesh, ph, k=10, n_probe=8, r0=8, capacity_factor=3.0)
+        ref_h, _ = base_h(sph, q)
+        grp_h = distributed.make_sharded_search(
+            mesh, ph, k=10, n_probe=8, r0=8, capacity_factor=3.0,
+            block_q=8, sketch_factor=64)
+        out_h, _ = grp_h(sph, q)
+        assert np.array_equal(np.asarray(ref_h.ids), np.asarray(out_h.ids))
+        assert np.array_equal(np.asarray(ref_h.scores), np.asarray(out_h.scores))
+
+        # Float banks cannot take the grouped path.
+        cfg_f = lider.LiderConfig(n_clusters=64, n_probe=8, n_arrays=4,
+                                  n_leaves=4, kmeans_iters=10)
+        pf = lider.build_lider(jax.random.PRNGKey(2), x, cfg_f)
+        try:
+            distributed.make_sharded_search(
+                mesh, pf, k=10, n_probe=8, r0=8, block_q=8)
+            raise AssertionError("float bank should reject block_q")
+        except ValueError:
+            pass
+        print("GROUPED_SHARDED_OK")
+        """
+    )
+    assert "GROUPED_SHARDED_OK" in out
+
+
 def test_capacity_drops_reduce_recall_gracefully():
     out = _run(
         """
